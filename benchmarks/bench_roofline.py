@@ -1,0 +1,45 @@
+"""§Roofline report: aggregates artifacts/dryrun/*.json into the
+EXPERIMENTS.md roofline table (also emitted as CSV lines)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import ART, emit
+
+DRYRUN = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "16x16", quant: str = "bf16") -> list[dict]:
+    cells = []
+    if not DRYRUN.exists():
+        return cells
+    for p in sorted(DRYRUN.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("mesh") == mesh and d.get("quant", "bf16") == quant:
+            cells.append(d)
+    return cells
+
+
+def run() -> dict:
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skip = [c for c in cells if c.get("status") == "skip"]
+    fail = [c for c in cells if c.get("status") == "fail"]
+    for c in ok:
+        r = c["roofline"]
+        emit(
+            f"roofline/{c['arch']}/{c['shape']}",
+            r["bound_time" if "bound_time" in r else "t_memory_s"] * 1e6
+            if isinstance(r.get("t_memory_s"), float) else 0.0,
+            f"dom={r['dominant']};tc={r['t_compute_s']:.4f}s;"
+            f"tm={r['t_memory_s']:.4f}s;tl={r['t_collective_s']:.4f}s;"
+            f"frac={r['roofline_fraction'] if r['roofline_fraction'] else 0:.3f}",
+        )
+    emit("roofline/summary", 0.0, f"ok={len(ok)};skip={len(skip)};fail={len(fail)}")
+    return {"ok": len(ok), "skip": len(skip), "fail": len(fail)}
+
+
+if __name__ == "__main__":
+    run()

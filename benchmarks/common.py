@@ -1,0 +1,101 @@
+"""Shared benchmark substrate: a small dense LM trained on the repo corpus
+(cached under artifacts/), PPL evaluation, and quantization-variant helpers.
+
+The accuracy benchmarks reproduce the paper's TABLE STRUCTURE at CPU scale:
+absolute numbers differ from the paper's 3B-32B models (stated plainly in
+EXPERIMENTS.md); the reproduced CLAIMS are the orderings and trends.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ModelConfig, QuantSpec
+from repro.core.calibration import CalibConfig
+from repro.core.twinquant import simulate_quantize_params
+from repro.data.pipeline import TokenDataset, calibration_batch, load_corpus
+from repro.launch.train import TrainLoop, init_train_state, make_train_step
+from repro.models import dense
+from repro.optim import AdamW
+
+ART = Path(__file__).resolve().parent.parent / "artifacts"
+
+BENCH_CFG = ModelConfig(
+    name="bench-20m",
+    family="dense",
+    n_layers=4,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=512,
+    vocab=260,
+    rope_theta=10000.0,
+    remat=False,
+)
+
+
+def get_trained_model(steps: int = 400, force: bool = False):
+    """Train (or load cached) the benchmark LM. Returns (cfg, params, corpus)."""
+    cfg = BENCH_CFG
+    ckpt_dir = ART / "bench_model"
+    mgr = CheckpointManager(ckpt_dir, keep_n=1, async_save=False)
+    corpus = load_corpus()
+    opt = AdamW(lr=3e-3, weight_decay=0.01)
+    params, opt_state = init_train_state(cfg, opt, jax.random.PRNGKey(7))
+    have = mgr.list_steps()
+    if have and not force and have[-1] >= steps:
+        _, st = mgr.restore_latest(like={"params": params, "opt": opt_state})
+        return cfg, st["params"], corpus
+    ds = TokenDataset(corpus, batch=16, seq=128, seed=11)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    loop = TrainLoop(cfg, step_fn, mgr, lambda s: ds.iterate(s), ckpt_every=200)
+    params, opt_state, losses, _ = loop.run(params, opt_state, 0, steps)
+    print(f"# trained bench model: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    return cfg, params, corpus
+
+
+def eval_ppl(cfg: ModelConfig, params, corpus, n_batches: int = 8, seq: int = 128) -> float:
+    """Held-out PPL (batches far from the training stream offset)."""
+    ds = TokenDataset(corpus, batch=8, seq=seq, seed=999)
+    loss_fn = jax.jit(lambda p, b: dense.loss_fn(p, cfg, b))
+    tot = 0.0
+    for i in range(n_batches):
+        b = ds.batch_at(10_000 + i)
+        tot += float(loss_fn(params, b))
+    return float(np.exp(tot / n_batches))
+
+
+def calib_taps(cfg: ModelConfig, params, corpus, n_tokens: int = 2048):
+    """Per-layer calibration activations via the tapped forward."""
+    tokens = calibration_batch(corpus, n_samples=max(1, n_tokens // 128), seq=128, seed=5)
+    _, taps = jax.jit(lambda p, t: dense.forward_with_taps(p, cfg, t))(
+        params, jnp.asarray(tokens)
+    )
+    return {
+        "attn": np.asarray(taps["attn"], np.float32),
+        "mlp": np.asarray(taps["mlp"], np.float32),
+    }
+
+
+def quantize_variant(cfg, params, method: str, spec: QuantSpec, taps=None,
+                     calib_cfg: CalibConfig | None = None):
+    """Returns params with eligible linears replaced by exact-numerics sim
+    dicts for the given variant (naive | lowrank | hadamard | twinquant)."""
+    calib = None
+    if taps is not None:
+        calib = {"attn": jnp.asarray(taps["attn"]), "mlp": jnp.asarray(taps["mlp"])}
+    return simulate_quantize_params(params, cfg, spec, method, calib_taps=calib,
+                                    calib_cfg=calib_cfg)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The run.py CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,104 @@
+"""Render the EXPERIMENTS.md roofline + accuracy tables from artifacts."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DRY = ROOT / "artifacts" / "dryrun"
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def roofline_table() -> str:
+    rows = [
+        "| arch | shape | dominant | compute s | memory s | collective s | "
+        "useful-FLOPs | MFU-bound | fits/device |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for p in sorted(DRY.glob("*__single__bf16.json")):
+        d = json.loads(p.read_text())
+        if d["status"] == "skip":
+            rows.append(
+                f"| {d['arch']} | {d['shape']} | — | — | — | — | — | — | "
+                f"skip: sub-quadratic-only shape |"
+            )
+            continue
+        if d["status"] != "ok":
+            rows.append(f"| {d['arch']} | {d['shape']} | FAIL | | | | | | |")
+            continue
+        r = d["roofline"]
+        uf = r.get("useful_flops_ratio")
+        rf = r.get("roofline_fraction")
+        mem = d.get("memory_analysis", {})
+        arg_gb = (mem.get("argument_size_in_bytes") or 0) / 1e9
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {r['dominant']} | "
+            f"{r['t_compute_s']:.3f} | {r['t_memory_s']:.3f} | "
+            f"{r['t_collective_s']:.3f} | "
+            f"{uf:.2f} | {rf:.4f} | args {arg_gb:.2f} GB |"
+            if uf is not None and rf is not None
+            else f"| {d['arch']} | {d['shape']} | {r['dominant']} | "
+            f"{r['t_compute_s']:.3f} | {r['t_memory_s']:.3f} | "
+            f"{r['t_collective_s']:.3f} | — | — | args {arg_gb:.2f} GB |"
+        )
+    # quantized cells appendix
+    qrows = []
+    for p in sorted(DRY.glob("*__single__w4a*.json")):
+        d = json.loads(p.read_text())
+        if d["status"] != "ok":
+            continue
+        r = d["roofline"]
+        qrows.append(
+            f"| {d['arch']} | {d['shape']} ({d['quant']}) | {r['dominant']} | "
+            f"{r['t_compute_s']:.3f} | {r['t_memory_s']:.3f} | "
+            f"{r['t_collective_s']:.3f} | — | — | packed params "
+            f"{d['param_bytes_global']/1e9:.1f} GB global |"
+        )
+    return "\n".join(rows + qrows)
+
+
+def accuracy_table() -> str:
+    out = []
+    acc = ROOT / "artifacts" / "bench_accuracy.json"
+    if acc.exists():
+        d = json.loads(acc.read_text())
+        out.append("Held-out PPL (4L/256d LM trained on the in-repo byte corpus), "
+                   "rank 32, group 128 — Table 3 analogue:\n")
+        out.append("| variant | ppl |")
+        out.append("|---|---|")
+        for k, v in d.items():
+            out.append(f"| {k} | {v:.3f} |")
+    rank = ROOT / "artifacts" / "bench_rank.json"
+    if rank.exists():
+        d = json.loads(rank.read_text())
+        out.append("\nRank sensitivity (Table 2 / Fig 6 analogue):\n")
+        out.append("| rank | ppl | low-rank mem overhead |")
+        out.append("|---|---|---|")
+        for k, v in d.items():
+            out.append(f"| {k} | {v['ppl']:.3f} | {v['mem_overhead']*100:.1f}% |")
+    err = ROOT / "artifacts" / "bench_error_analysis.json"
+    if err.exists():
+        d = json.loads(err.read_text())
+        f7 = d.get("fig7", {})
+        out.append(
+            f"\nLayer-level (Fig 7 / Thm 4.1): learned-vs-SVD error reduction "
+            f"{f7.get('reduction', 0):.2f}x; zeta={f7.get('zeta_gain', 0):.2f}, "
+            f"eta={f7.get('eta_gain', 0):.2f}; sv decay s32/s0="
+            f"{d.get('sv_decay', {}).get('s32_over_s0', 0):.3f}."
+        )
+    return "\n".join(out) if out else "(run `python -m benchmarks.run accuracy rank error_analysis`)"
+
+
+def main() -> None:
+    exp = ROOT / "EXPERIMENTS.md"
+    t = exp.read_text()
+    t = t.replace("<!-- ROOFLINE_TABLE -->", roofline_table())
+    t = t.replace("<!-- ACCURACY_TABLE -->", accuracy_table())
+    exp.write_text(t)
+    print("tables rendered into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

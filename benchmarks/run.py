@@ -1,0 +1,53 @@
+"""Benchmark harness entrypoint: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (run.py contract). JSON
+artifacts land in artifacts/ for EXPERIMENTS.md.
+
+  bench_accuracy   — Tables 1/3: PPL under fp16/naive/+lowrank/+hadamard/TwinQuant
+  bench_rank       — Table 2 / Fig 6: rank sensitivity + overhead
+  bench_kernels    — Tables 6/7: fused dual-component kernel (derived + exactness)
+  bench_throughput — Figure 5: end-to-end W4A4 vs FP16 speedup (derived)
+  bench_error_analysis — Figs 1/2/7 + Thm 4.1 gains
+  bench_roofline   — §Roofline table from dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_accuracy,
+        bench_error_analysis,
+        bench_kernels,
+        bench_rank,
+        bench_roofline,
+        bench_throughput,
+    )
+
+    mods = {
+        "kernels": bench_kernels,
+        "throughput": bench_throughput,
+        "error_analysis": bench_error_analysis,
+        "accuracy": bench_accuracy,
+        "rank": bench_rank,
+        "roofline": bench_roofline,
+    }
+    selected = sys.argv[1:] or list(mods)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in selected:
+        try:
+            mods[name].run()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""Model/arch configuration system.
+
+One ``<arch>.py`` per assigned architecture registers a :class:`ModelConfig`
+via :func:`register`. ``get_config(name)`` returns the full-scale config;
+``get_config(name, reduced=True)`` returns the family-preserving smoke-test
+reduction (small width/depth/experts, same code paths).
+
+Quantization is a first-class config: ``quant`` selects the serving
+precision (the paper's W4A4/W4A8 TwinQuant modes, W4A16, or bf16) and its
+rank/group hyper-parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+__all__ = ["ModelConfig", "QuantSpec", "register", "get_config", "list_configs", "ARCH_IDS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Serving-precision selection (paper §5 settings)."""
+
+    mode: str = "bf16"  # bf16 | w4a16 | w4a8 | w4a4
+    rank: int = 128  # low-rank branch rank r (paper default)
+    group_size: int = 128  # quantization group (paper default)
+
+    @property
+    def a_bits(self) -> int:
+        return {"bf16": 16, "w4a16": 16, "w4a8": 8, "w4a4": 4}[self.mode]
+
+    @property
+    def w_bits(self) -> int:
+        return 16 if self.mode == "bf16" else 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str = ""
+    family: str = "dense"  # dense | moe | mla_moe | encdec | xlstm | mamba_hybrid | vlm
+    # transformer core
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab: int = 1024
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0  # fraction of head_dim that is rotated
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    first_k_dense: int = 0  # leading dense layers (DeepSeek-V3 style)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+    # MLA (DeepSeek-V3)
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    mtp: bool = False  # multi-token-prediction aux layer+head
+    # encoder-decoder (whisper)
+    n_enc_layers: int = 0
+    n_frames: int = 0  # encoder frontend stub: precomputed frame embeddings
+    # VLM (internvl2): frontend stub provides patch embeddings
+    n_patches: int = 0
+    # xLSTM
+    slstm_every: int = 0  # every k-th block is sLSTM (0 = pure mLSTM)
+    xlstm_proj_factor: float = 2.0
+    # Mamba2 / hybrid (zamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64
+    shared_attn_every: int = 0  # zamba2: shared attention block cadence
+    # quantization / serving
+    quant: QuantSpec = QuantSpec()
+    # training
+    dtype: str = "bfloat16"
+    remat: bool = True
+
+    # ---------------- derived ----------------
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 (TP- and kernel-friendly)."""
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def d_inner_ssm(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner_ssm // self.ssm_head_dim if self.ssm_head_dim else 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve a 500k context? (assignment's long_500k rule)"""
+        return self.family in ("xlstm", "mamba_hybrid")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # no encoder-only archs in the assignment
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def active_params(self) -> int:
+        """Dense-equivalent active parameter count (for MODEL_FLOPS=6·N_active·D)."""
+        from repro.models.registry import count_active_params
+
+        return count_active_params(self)
+
+    def total_params(self) -> int:
+        from repro.models.registry import count_total_params
+
+        return count_total_params(self)
+
+
+_REGISTRY: dict[str, ModelConfig] = {}
+_REDUCED: dict[str, ModelConfig] = {}
+
+ARCH_IDS = [
+    "olmoe-1b-7b",
+    "deepseek-v3-671b",
+    "qwen2-1.5b",
+    "stablelm-12b",
+    "phi4-mini-3.8b",
+    "internlm2-1.8b",
+    "internvl2-2b",
+    "whisper-base",
+    "xlstm-1.3b",
+    "zamba2-1.2b",
+    # the paper's own evaluation models
+    "llama3-8b",
+    "qwen3-8b",
+]
+
+_MODULES = {
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "stablelm-12b": "stablelm_12b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "internvl2-2b": "internvl2_2b",
+    "whisper-base": "whisper_base",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "llama3-8b": "llama3_8b",
+    "qwen3-8b": "qwen3_8b",
+}
+
+
+def register(full: ModelConfig, reduced: ModelConfig) -> None:
+    _REGISTRY[full.name] = full
+    _REDUCED[full.name] = reduced
+
+
+def get_config(name: str, reduced: bool = False, **overrides) -> ModelConfig:
+    if name not in _REGISTRY:
+        if name not in _MODULES:
+            raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+        importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg = (_REDUCED if reduced else _REGISTRY)[name]
+    return cfg.replace(**overrides) if overrides else cfg
+
+
+def list_configs() -> list[str]:
+    return list(ARCH_IDS)

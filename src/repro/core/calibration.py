@@ -1,0 +1,196 @@
+"""Per-layer TwinQuant calibration: the three-stage joint optimization of
+(Q, G) over Stiefel x GL (paper §4.2).
+
+The layer objective is Eq. 6:
+
+    || X W_hat  -  fq(X Q) [ fq(Q^T U G) fq(G^-1 V) + fq(Q^T R) ] ||_F^2
+      + reg * conditioning_penalty(G)
+
+with `fq` the STE fake-quantizer. Stages:
+
+    (i)   Global Alignment     — only Q trains
+    (ii)  Invertible Adaptation— only G = (P, L, gamma) trains
+    (iii) Joint Refinement     — everything trains
+
+Stage selection is a per-leaf learning-rate mask, so one jitted update step
+serves all three stages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decomposition import Decomposition, decompose, search_alpha
+from repro.core.manifold import HybridOpt, HybridState
+from repro.core.quantization import QuantConfig, fake_quant
+from repro.core.transforms import (
+    GLParams,
+    gl_conditioning_penalty,
+    gl_init,
+    gl_inverse,
+    gl_materialize,
+    orthogonal_init,
+)
+
+__all__ = ["CalibConfig", "CalibResult", "calibrate_layer", "layer_quant_configs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibConfig:
+    rank: int = 128
+    w_bits: int = 4
+    a_bits: int = 4
+    group_size: int = 128
+    # paper defaults are 400/400/200; CPU-scale callers shrink these
+    steps_global: int = 400
+    steps_invert: int = 400
+    steps_joint: int = 200
+    lr: float = 5e-3
+    momentum: float = 0.9
+    reg_lambda: float = 1e-3
+    # SpinQuant-style practice: start from a Hadamard rotation so the learned
+    # Q can only improve on the fixed-rotation baseline (best-iterate kept)
+    q_init: str = "hadamard"  # identity | hadamard | random
+    smooth_alpha: Optional[float] = None  # None => grid search
+    # learn Q at all? (False => fixed rotation ablation, e.g. +Hadamard)
+    learn_q: bool = True
+    learn_g: bool = True
+
+
+@dataclasses.dataclass
+class CalibResult:
+    Q: jax.Array
+    G: jax.Array  # materialized
+    G_inv: jax.Array
+    decomp: Decomposition  # the *untransformed* smoothed decomposition
+    loss_history: list
+    final_loss: float
+    init_loss: float
+
+
+def layer_quant_configs(m: int, r: int, cfg: CalibConfig):
+    """Quantizers for (activations, U, V, R). Groups run along the matmul
+    contraction dims; V's contraction dim is the rank, which may be < 128."""
+    aq = QuantConfig(bits=cfg.a_bits, group_size=min(cfg.group_size, m), axis=-1)
+    uq = QuantConfig(bits=cfg.w_bits, group_size=min(cfg.group_size, m), axis=0)
+    vq = QuantConfig(bits=cfg.w_bits, group_size=min(cfg.group_size, r), axis=0)
+    rq = QuantConfig(bits=cfg.w_bits, group_size=min(cfg.group_size, m), axis=0)
+    return aq, uq, vq, rq
+
+
+def _transformed_components(params, U, V, R):
+    Q = params["Q"]
+    Gm = gl_materialize(params["G"])
+    Gi = gl_inverse(params["G"])
+    U2 = Q.T @ U @ Gm
+    V2 = Gi @ V
+    R2 = Q.T @ R
+    return Q, U2, V2, R2
+
+
+def _layer_loss(params, x, y_ref, U, V, R, aq, uq, vq, rq, reg_lambda, a_bits):
+    Q, U2, V2, R2 = _transformed_components(params, U, V, R)
+    xq = x @ Q
+    xfq = fake_quant(xq, aq) if a_bits < 16 else xq
+    w_eff = fake_quant(U2, uq) @ fake_quant(V2, vq) + fake_quant(R2, rq)
+    y = xfq @ w_eff
+    recon = jnp.mean((y - y_ref) ** 2)
+    return recon + reg_lambda * gl_conditioning_penalty(params["G"]), recon
+
+
+def calibrate_layer(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: CalibConfig,
+    key: Optional[jax.Array] = None,
+) -> CalibResult:
+    """Run the full three-stage calibration for one linear layer.
+
+    x: (samples, m) calibration activations; w: (m, n) weight.
+    """
+    m, n = w.shape
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    # 1) smoothing (alpha grid-search) + SVD decomposition
+    aq_s, uq, vq, rq = layer_quant_configs(m, cfg.rank, cfg)
+    if cfg.smooth_alpha is None:
+        alpha, lam = search_alpha(x, w, cfg.rank, rq, aq_s)
+    else:
+        alpha = cfg.smooth_alpha
+        lam = None
+    decomp = decompose(w, cfg.rank, act_absmax=jnp.max(jnp.abs(x), axis=0), alpha=alpha)
+    x_hat = x / decomp.lam[None, :]
+    U, V, R = decomp.U, decomp.V, decomp.R
+    r = decomp.rank
+    y_ref = x_hat @ (U @ V + R)
+
+    # 2) parameters
+    params = {
+        "Q": orthogonal_init(m, cfg.q_init, key=key),
+        "G": gl_init(r),
+    }
+    stiefel_mask = {"Q": True, "G": GLParams(P=True, L=False, gamma=False)}
+
+    opt = HybridOpt(lr=cfg.lr, momentum=cfg.momentum)
+    state = opt.init(params)
+    aq, uq, vq, rq = layer_quant_configs(m, r, cfg)
+
+    loss_fn = partial(
+        _layer_loss,
+        x=x_hat, y_ref=y_ref, U=U, V=V, R=R,
+        aq=aq, uq=uq, vq=vq, rq=rq,
+        reg_lambda=cfg.reg_lambda, a_bits=cfg.a_bits,
+    )
+    grad_fn = jax.value_and_grad(lambda p: loss_fn(p), has_aux=True)
+
+    @jax.jit
+    def step(params, state, lr_scale):
+        (loss, recon), grads = grad_fn(params)
+        new_params, new_state = opt.update(grads, state, params, stiefel_mask, lr_scale)
+        return new_params, new_state, recon
+
+    q_on = 1.0 if cfg.learn_q else 0.0
+    g_on = 1.0 if cfg.learn_g else 0.0
+    stage_scales = [
+        {"Q": q_on, "G": GLParams(P=0.0, L=0.0, gamma=0.0)},
+        {"Q": 0.0, "G": GLParams(P=g_on, L=g_on, gamma=g_on)},
+        {"Q": q_on, "G": GLParams(P=g_on, L=g_on, gamma=g_on)},
+    ]
+    stage_steps = [cfg.steps_global, cfg.steps_invert, cfg.steps_joint]
+
+    init_loss = float(loss_fn(params)[1])
+    history = [init_loss]
+    # best-params tracking: the hard-quantized objective is noisy under SGD,
+    # so we return the best iterate rather than the last one
+    best_loss, best_params = init_loss, params
+    for scales, steps in zip(stage_scales, stage_steps):
+        recon = history[-1]
+        for _ in range(steps):
+            prev = params
+            params, state, recon = step(params, state, scales)
+            r = float(recon)  # loss evaluated at `prev`
+            if r < best_loss:
+                best_loss, best_params = r, prev
+        history.append(float(recon))
+    final_eval = float(loss_fn(params)[1])
+    if final_eval < best_loss:
+        best_loss, best_params = final_eval, params
+    params = best_params
+
+    Gm = gl_materialize(params["G"])
+    Gi = gl_inverse(params["G"])
+    return CalibResult(
+        Q=params["Q"],
+        G=Gm,
+        G_inv=Gi,
+        decomp=decomp,
+        loss_history=history,
+        final_loss=best_loss,
+        init_loss=init_loss,
+    )

@@ -1,0 +1,117 @@
+"""Hybrid manifold optimizer (paper §4.2).
+
+Updates each parameter according to its geometry:
+
+* Stiefel-manifold parameters (global rotations Q1/Q2 and the P factor of G)
+  use **Cayley SGD with momentum** (Li et al., 2020):
+
+      W_hat = M @ Q^T            (momentum-averaged Euclidean grad lifted)
+      Y     = W_hat - W_hat^T    (skew-symmetric tangent)
+      Q'    = (I - a/2 Y)^(-1) (I + a/2 Y) Q
+
+  The Cayley map keeps Q exactly orthogonal (up to linear-solve precision);
+  we re-orthonormalize via QR every `reortho_every` steps to stop fp32 drift
+  over long calibrations.
+
+* Euclidean parameters (L, gamma) use classical momentum SGD with the
+  conditioning regularizer applied by the caller (it is part of the loss).
+
+The optimizer is a pure-pytree transformation in the optax style: ``init``
+returns a state pytree, ``update`` maps (grads, state, params) -> (new_params,
+new_state). Stage masking (paper's three-stage schedule) is expressed by
+zeroing the learning rate per parameter group — see
+:class:`repro.core.calibration.StageSchedule`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["HybridOpt", "HybridState", "cayley_step", "is_stiefel_path"]
+
+
+def cayley_step(q: jax.Array, skew: jax.Array, lr: float | jax.Array) -> jax.Array:
+    """One Cayley-transform retraction: (I - a/2 Y)^-1 (I + a/2 Y) Q."""
+    n = q.shape[0]
+    eye = jnp.eye(n, dtype=q.dtype)
+    a = lr / 2.0
+    return jnp.linalg.solve(eye - a * skew, (eye + a * skew) @ q)
+
+
+def _lift_skew(grad: jax.Array, q: jax.Array) -> jax.Array:
+    w_hat = grad @ q.T
+    return w_hat - w_hat.T
+
+
+class HybridState(NamedTuple):
+    momentum: Any  # pytree matching params
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridOpt:
+    """Hybrid Stiefel/Euclidean optimizer over a params pytree.
+
+    ``stiefel_mask`` is a pytree of booleans (same structure as params)
+    marking which leaves live on the Stiefel manifold.
+    """
+
+    lr: float = 5e-3
+    momentum: float = 0.9
+    reortho_every: int = 64
+    # global-norm gradient clipping — the G-branch (L, gamma) gradients are
+    # scaled by ||U||·||V|| and explode on outlier-heavy layers without it
+    clip_norm: float = 1.0
+
+    def init(self, params: Any) -> HybridState:
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        return HybridState(momentum=zeros, count=jnp.zeros((), jnp.int32))
+
+    def update(
+        self,
+        grads: Any,
+        state: HybridState,
+        params: Any,
+        stiefel_mask: Any,
+        lr_scale: Any | None = None,
+    ) -> tuple[Any, HybridState]:
+        """lr_scale: optional pytree of per-leaf multipliers (stage masking)."""
+        if lr_scale is None:
+            lr_scale = jax.tree.map(lambda _: 1.0, params)
+
+        if self.clip_norm is not None:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+            )
+            factor = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * factor, grads)
+
+        new_m = jax.tree.map(lambda m, g: self.momentum * m + g, state.momentum, grads)
+        count = state.count + 1
+        do_reortho = (count % self.reortho_every) == 0
+
+        def leaf_update(p, m, is_stiefel, scale):
+            eff_lr = self.lr * scale
+            if is_stiefel:
+                y = _lift_skew(m, p)
+                q = cayley_step(p, y, -eff_lr)  # descend: negative step
+                # periodic QR re-orthonormalization (sign-fixed)
+                def reortho(q):
+                    qq, rr = jnp.linalg.qr(q)
+                    return qq * jnp.sign(jnp.diagonal(rr))[None, :]
+
+                return jax.lax.cond(do_reortho, reortho, lambda q: q, q)
+            return p - eff_lr * m
+
+        new_params = jax.tree.map(leaf_update, params, new_m, stiefel_mask, lr_scale)
+        return new_params, HybridState(momentum=new_m, count=count)
+
+
+def is_stiefel_path(path: tuple) -> bool:
+    """Default mask rule: leaves named 'Q', 'Q1', 'Q2', or 'P' are Stiefel."""
+    names = {getattr(p, "name", getattr(p, "key", None)) for p in path}
+    return bool(names & {"Q", "Q1", "Q2", "P"})

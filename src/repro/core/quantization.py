@@ -1,0 +1,173 @@
+"""Symmetric group-wise quantization primitives (paper Eq. 1).
+
+Conventions used throughout the repo:
+
+* Quantization is symmetric: ``q = clip(round(x / s), -qmax, qmax)`` with
+  ``s = max|group| / qmax`` and ``qmax = 2**(bits-1) - 1`` (so int4 uses the
+  symmetric range [-7, 7] — the same convention as QuaRot/SVDQuant).
+* Grouping is along ONE axis (the contraction axis of the consuming matmul),
+  ``group_size`` contiguous elements per scale (paper default 128).
+* Integer values are *stored* as int8 regardless of ``bits`` (int4 values
+  live in [-7, 7] inside an int8); HBM-resident 4-bit tensors are packed two
+  nibbles per byte via :func:`pack_int4` / :func:`unpack_int4`.
+* ``jnp.round`` (round-half-to-even) is the single rounding used everywhere —
+  the Pallas kernels and the pure-jnp oracles share it, so kernel-vs-ref
+  comparisons are exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantConfig",
+    "QTensor",
+    "qmax_for_bits",
+    "compute_scales",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "pack_int4",
+    "unpack_int4",
+]
+
+
+def qmax_for_bits(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static description of one quantizer (weights OR activations)."""
+
+    bits: int = 4
+    group_size: int = 128
+    # axis the groups run along; -1 == last axis (the matmul contraction dim)
+    axis: int = -1
+
+    @property
+    def qmax(self) -> int:
+        return qmax_for_bits(self.bits)
+
+    def replace(self, **kw) -> "QuantConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """A quantized tensor: int values + per-group scales + static metadata."""
+
+    q: jax.Array  # int8 storage (values within the `bits` range)
+    scale: jax.Array  # f32, shape == q.shape with `axis` reduced by group_size
+    bits: int
+    group_size: int
+    axis: int
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.bits, self.group_size, self.axis)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        bits, group_size, axis = aux
+        return cls(q=q, scale=scale, bits=bits, group_size=group_size, axis=axis)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+
+def _grouped(x: jax.Array, axis: int, group_size: int) -> tuple[jax.Array, int]:
+    """Reshape ``axis`` into (n_groups, group_size); returns (y, norm_axis)."""
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    if n % group_size != 0:
+        raise ValueError(f"axis size {n} not divisible by group_size {group_size}")
+    new_shape = x.shape[:axis] + (n // group_size, group_size) + x.shape[axis + 1 :]
+    return x.reshape(new_shape), axis + 1
+
+
+def compute_scales(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Per-group symmetric scales ``max|group| / qmax`` (zero-safe)."""
+    g, gaxis = _grouped(x, cfg.axis, cfg.group_size)
+    amax = jnp.max(jnp.abs(g), axis=gaxis)
+    # zero-safe: an all-zero group quantizes to zeros with scale 1
+    scale = jnp.where(amax > 0, amax / cfg.qmax, jnp.ones_like(amax))
+    return scale.astype(jnp.float32)
+
+
+def quantize(x: jax.Array, cfg: QuantConfig, scale: Optional[jax.Array] = None) -> QTensor:
+    """Quantize ``x`` group-wise along ``cfg.axis``."""
+    if scale is None:
+        scale = compute_scales(x, cfg)
+    g, gaxis = _grouped(x.astype(jnp.float32), cfg.axis, cfg.group_size)
+    s = jnp.expand_dims(scale, gaxis)
+    q = jnp.clip(jnp.round(g / s), -cfg.qmax, cfg.qmax)
+    q = q.reshape(x.shape).astype(jnp.int8)
+    return QTensor(q=q, scale=scale, bits=cfg.bits, group_size=cfg.group_size, axis=cfg.axis % x.ndim)
+
+
+def dequantize(t: QTensor, dtype=jnp.float32) -> jax.Array:
+    g, gaxis = _grouped(t.q.astype(jnp.float32), t.axis, t.group_size)
+    s = jnp.expand_dims(t.scale, gaxis)
+    return (g * s).reshape(t.q.shape).astype(dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Quantize-dequantize with a straight-through estimator.
+
+    Used by the calibration trainer (paper §4.2) — gradients flow through the
+    rounding as identity (within the clip range).
+    """
+    return dequantize(quantize(x, cfg), dtype=x.dtype)
+
+
+def _fq_fwd(x, cfg):
+    scale = compute_scales(x, cfg)
+    y = dequantize(quantize(x, cfg, scale), dtype=x.dtype)
+    # residual: clip mask (gradient is zero where the value saturated)
+    g, gaxis = _grouped(x, cfg.axis, cfg.group_size)
+    s = jnp.expand_dims(scale, gaxis)
+    inside = (jnp.abs(g / s) <= cfg.qmax).reshape(x.shape)
+    return y, inside
+
+
+def _fq_bwd(cfg, inside, ct):
+    return (ct * inside.astype(ct.dtype),)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing: two int4 values per int8 byte along the LAST axis.
+# The packed layout is the HBM-resident form consumed by the Pallas kernels —
+# it halves weight bytes relative to int8 storage (the roofline-relevant win).
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack int4-valued int8 pairs along the last axis: out[..., i] holds
+    (q[..., 2i] & 0xF) | (q[..., 2i+1] << 4). Last axis must be even."""
+    if q.shape[-1] % 2 != 0:
+        raise ValueError("last axis must be even to pack int4 pairs")
+    lo = q[..., 0::2]
+    hi = q[..., 1::2]
+    return ((lo & 0x0F) | ((hi & 0x0F) << 4)).astype(jnp.int8)
+
+
+def unpack_int4(p: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4` (sign-extends each nibble)."""
+    p16 = p.astype(jnp.int8)
+    # sign-extend low nibble: shift left then arithmetic shift right
+    lo = jnp.right_shift(jnp.left_shift(p16.astype(jnp.int32), 28), 28)
+    hi = jnp.right_shift(jnp.left_shift(p16.astype(jnp.int32), 24), 28)
+    out = jnp.stack([lo, hi], axis=-1).reshape(p.shape[:-1] + (p.shape[-1] * 2,))
+    return out.astype(jnp.int8)

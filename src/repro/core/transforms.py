@@ -1,0 +1,148 @@
+"""Learnable transforms: global orthogonal Q (Stiefel) and layer-specific
+invertible G in GL(r) via polar parameterization (paper §4.1–4.2).
+
+* ``Q`` is stored directly as an orthogonal matrix and updated with Cayley
+  SGD (see :mod:`repro.core.manifold`), so it stays on the Stiefel manifold
+  to machine precision throughout calibration.
+* ``G = P @ S`` with ``P`` orthogonal (same Cayley updates) and
+  ``S = exp(gamma) * (L @ L.T)`` symmetric positive definite (L lower-
+  triangular with softplus-positive diagonal), so G is always invertible and
+  ``G^-1 = exp(-gamma) * cho_solve(L, P.T)`` is cheap and stable.
+* Hadamard / random-orthogonal constructions are provided for the fixed-
+  rotation baselines (QuaRot-style ablation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "GLParams",
+    "gl_init",
+    "gl_materialize",
+    "gl_inverse",
+    "hadamard_matrix",
+    "random_orthogonal",
+    "orthogonal_init",
+    "orthogonality_error",
+]
+
+
+# ---------------------------------------------------------------------------
+# G in GL(r): polar parameterization
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GLParams:
+    """Parameters of G = P * exp(gamma) * (L L^T)."""
+
+    P: jax.Array  # (r, r) orthogonal — manifold-updated
+    L: jax.Array  # (r, r) unconstrained; only the lower triangle is used
+    gamma: jax.Array  # scalar log-scale
+
+    def tree_flatten(self):
+        return (self.P, self.L, self.gamma), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _chol_factor(L: jax.Array) -> jax.Array:
+    """Lower-triangular factor with strictly positive diagonal."""
+    tril = jnp.tril(L, k=-1)
+    diag = jax.nn.softplus(jnp.diagonal(L)) + 1e-4
+    return tril + jnp.diag(diag)
+
+
+def gl_init(r: int, dtype=jnp.float32) -> GLParams:
+    """G == I at init (paper keeps G near identity via the regularizer)."""
+    # softplus(x) + 1e-4 = 1  =>  x = log(expm1(1 - 1e-4))
+    d = float(np.log(np.expm1(1.0 - 1e-4)))
+    return GLParams(
+        P=jnp.eye(r, dtype=dtype),
+        L=jnp.diag(jnp.full((r,), d, dtype=dtype)),
+        gamma=jnp.zeros((), dtype=dtype),
+    )
+
+
+def gl_materialize(p: GLParams) -> jax.Array:
+    Lf = _chol_factor(p.L)
+    S = jnp.exp(p.gamma) * (Lf @ Lf.T)
+    return p.P @ S
+
+
+def gl_inverse(p: GLParams) -> jax.Array:
+    """exp(-gamma) * (L L^T)^-1 @ P^T via two triangular solves."""
+    Lf = _chol_factor(p.L)
+    rhs = p.P.T
+    y = jax.scipy.linalg.solve_triangular(Lf, rhs, lower=True)
+    x = jax.scipy.linalg.solve_triangular(Lf.T, y, lower=False)
+    return jnp.exp(-p.gamma) * x
+
+
+def gl_conditioning_penalty(p: GLParams) -> jax.Array:
+    """lambda * (||diag(L)||^2 + gamma^2) — keeps G near identity (paper §4.2).
+
+    Penalizes the *deviation* of the materialized Cholesky diagonal from 1 so
+    the penalty is zero at init.
+    """
+    d = jnp.diagonal(_chol_factor(p.L))
+    return jnp.sum((d - 1.0) ** 2) + p.gamma**2
+
+
+# ---------------------------------------------------------------------------
+# Fixed rotations (baselines) + orthogonal init/checks
+# ---------------------------------------------------------------------------
+
+
+def hadamard_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """Normalized Hadamard-like orthogonal matrix.
+
+    Exact Sylvester Hadamard for powers of two; for n = 2^k * m (m odd > 1)
+    we use kron(H_{2^k}, Q_m) with Q_m a seeded random orthogonal factor —
+    full Hadamard matrices don't exist for every m, and the role here is only
+    "fixed incoherent rotation" (QuaRot baseline), which the kron preserves.
+    """
+    k = n & (-n)  # largest power of two dividing n
+    m = n // k
+    h = np.array([[1.0]])
+    size = 1
+    while size < k:
+        h = np.block([[h, h], [h, -h]])
+        size *= 2
+    h = h / np.sqrt(k)
+    if m > 1:
+        rng = np.random.default_rng(seed=m)
+        q, _ = np.linalg.qr(rng.standard_normal((m, m)))
+        h = np.kron(h, q)
+    return jnp.asarray(h, dtype=dtype)
+
+
+def random_orthogonal(key: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
+    a = jax.random.normal(key, (n, n), dtype=jnp.float32)
+    q, r = jnp.linalg.qr(a)
+    q = q * jnp.sign(jnp.diagonal(r))[None, :]
+    return q.astype(dtype)
+
+
+def orthogonal_init(n: int, mode: str = "identity", key: jax.Array | None = None) -> jax.Array:
+    if mode == "identity":
+        return jnp.eye(n, dtype=jnp.float32)
+    if mode == "hadamard":
+        return hadamard_matrix(n)
+    if mode == "random":
+        assert key is not None
+        return random_orthogonal(key, n)
+    raise ValueError(f"unknown orthogonal init {mode!r}")
+
+
+def orthogonality_error(q: jax.Array) -> jax.Array:
+    n = q.shape[0]
+    return jnp.max(jnp.abs(q.T @ q - jnp.eye(n, dtype=q.dtype)))

@@ -1,0 +1,224 @@
+"""Model-level TwinQuant: rewrite a params pytree into quantized form.
+
+Two products, one algorithm:
+
+* :func:`quantize_params` — the **serving** path: every eligible linear is
+  replaced by a packed 4-bit dual-component pack (``up/us/vp/vs/rp/rs``)
+  consumed by the fused Pallas kernel through ``models.common.linear``.
+  Works for every architecture family (stacked layers are vmapped). The
+  transforms (Q, G) are folded into the components before packing.
+
+* :func:`simulate_quantize_params` — the **evaluation** path: eligible
+  linears are replaced by dequantized "sim" dicts that reproduce exact
+  W4A4/W4A8 TwinQuant numerics (including online activation transform +
+  activation fake-quant) with plain bf16 matmuls — used by the accuracy
+  benchmarks (paper Tables 2/3 reproduction) where we need model-level PPL
+  under naive / +lowrank / +hadamard / TwinQuant variants on CPU.
+
+Exclusions (kept high-precision, documented in DESIGN.md): embeddings, lm
+head, MoE routers, norms/biases/convs/recurrences (not matmul weights), and
+DeepSeek's ``wkv_b`` (it participates in the absorbed decode path as an
+einsum operand, not a plain linear).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, QuantSpec
+from repro.core.calibration import CalibConfig, calibrate_layer
+from repro.core.decomposition import svd_decompose
+from repro.core.quantization import QuantConfig, dequantize, quantize
+from repro.core.transforms import hadamard_matrix
+from repro.kernels.ref import pack_twinquant_weights, quantize_rows_ref, pack_rows_groupsplit
+
+EXCLUDE = re.compile(r"(embed|head|router|wkv_b|mtp/proj)")
+
+
+def _eligible(path_str: str, w) -> bool:
+    if EXCLUDE.search(path_str):
+        return False
+    if w.ndim < 2:
+        return False
+    k, n = w.shape[-2], w.shape[-1]
+    return k % 256 == 0 and n % 2 == 0 and k >= 256
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p)))))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# serving path: packed weights
+# ---------------------------------------------------------------------------
+
+
+def _pack_one(w: jax.Array, spec: QuantSpec):
+    """2-D weight -> twinquant pack dict (SVD split, sqrt-balanced)."""
+    k, n = w.shape
+    r = min(spec.rank, k // 2, n)
+    r = max(2, r // 2 * 2)
+    U, V, R = svd_decompose(w.astype(jnp.float32), r)
+    tq = pack_twinquant_weights(U, V, R, a_bits=spec.a_bits, group=min(spec.group_size, k))
+    return {
+        "up": tq.up, "us": tq.us, "vp": tq.vp, "vs": tq.vs, "rp": tq.rp, "rs": tq.rs,
+        "abits": jnp.zeros((spec.a_bits,), jnp.int8),
+    }
+
+
+def _pack_one_w4a16(w: jax.Array, spec: QuantSpec):
+    k, n = w.shape
+    g = min(spec.group_size, k)
+    wq, ws = quantize_rows_ref(w.astype(jnp.float32), g, 4)
+    return {"wp": pack_rows_groupsplit(wq, g), "ws": ws}
+
+
+def quantize_params(params: Any, cfg: ModelConfig, spec: QuantSpec) -> Any:
+    """Rewrite eligible linears into packed quantized form (values via
+    RTN-SVD; calibrated transforms can be folded in upstream). Pure jnp —
+    usable under jax.eval_shape for the dry-run."""
+    if spec.mode == "bf16":
+        return params
+    pack = _pack_one_w4a16 if spec.mode == "w4a16" else lambda w: _pack_one(w, spec)
+    if spec.mode == "w4a16":
+        pack = lambda w: _pack_one_w4a16(w, spec)
+
+    def visit(tree, path=""):
+        if isinstance(tree, dict):
+            if "w" in tree and hasattr(tree["w"], "ndim"):
+                w = tree["w"]
+                if _eligible(path + "/w", w):
+                    fn = pack
+                    for _ in range(w.ndim - 2):  # vmap over stacked dims
+                        fn = jax.vmap(fn)
+                    out = fn(w.astype(jnp.float32))
+                    if "b" in tree:
+                        out["b"] = tree["b"]
+                    return out
+                return tree
+            return {k: visit(v, f"{path}/{k}") for k, v in tree.items()}
+        return tree
+
+    return visit(params)
+
+
+# ---------------------------------------------------------------------------
+# evaluation path: exact-numerics simulation dicts
+# ---------------------------------------------------------------------------
+
+
+def build_sim_linear(
+    w: jax.Array,
+    method: str,
+    spec: QuantSpec,
+    calib_x: Optional[jax.Array] = None,
+    calib_cfg: Optional[CalibConfig] = None,
+) -> dict:
+    """2-D weight -> sim dict for exact quantized-numerics evaluation.
+
+    method: 'naive' (RTN, no decomposition) | 'lowrank' (SVD, both 4-bit) |
+            'hadamard' (SVD + fixed rotation) | 'twinquant' (learned Q, G).
+    """
+    k, n = w.shape
+    w = w.astype(jnp.float32)
+    if calib_x is not None and calib_x.shape[-1] != k:
+        calib_x = None  # tap dim mismatch (e.g. down-proj input is d_ff-dim)
+    r = max(2, min(spec.rank, k // 2, n) // 2 * 2)
+    g = min(spec.group_size, k)
+    wq = QuantConfig(bits=4, group_size=g, axis=0)
+    vq = QuantConfig(bits=4, group_size=min(spec.group_size, r), axis=0)
+
+    def dq(t, c):
+        return dequantize(quantize(t, c), dtype=jnp.float32)
+
+    lam = jnp.ones((k,), jnp.float32)
+    Q = None
+    if method == "naive":
+        return {
+            "lam": lam, "r_dq": dq(w, wq).astype(jnp.bfloat16),
+            "abits": jnp.zeros((spec.a_bits,), jnp.int8),
+        }
+    if method == "twinquant":
+        cc = calib_cfg or CalibConfig(rank=r, a_bits=spec.a_bits, group_size=g,
+                                      steps_global=40, steps_invert=40, steps_joint=20)
+        cc = cc if cc.rank == r else CalibConfig(**{**cc.__dict__, "rank": r})
+        x = calib_x if calib_x is not None else jax.random.normal(jax.random.PRNGKey(0), (256, k))
+        res = calibrate_layer(x, w, cc)
+        lam = res.decomp.lam
+        U2 = res.Q.T @ res.decomp.U @ res.G
+        V2 = res.G_inv @ res.decomp.V
+        R2 = res.Q.T @ res.decomp.R
+        Q = res.Q
+    else:
+        U, V, R = svd_decompose(w, r)
+        if method == "hadamard":
+            Q = hadamard_matrix(k)
+            U2, V2, R2 = Q.T @ U, V, Q.T @ R
+        else:  # lowrank
+            U2, V2, R2 = U, V, R
+
+    out = {
+        "lam": lam,
+        "u_dq": dq(U2, wq).astype(jnp.bfloat16),
+        "v_dq": dq(V2, vq).astype(jnp.bfloat16),
+        "r_dq": dq(R2, wq).astype(jnp.bfloat16),
+        "abits": jnp.zeros((spec.a_bits,), jnp.int8),
+    }
+    if Q is not None:
+        out["Q"] = Q.astype(jnp.bfloat16)
+    return out
+
+
+def simulate_quantize_params(
+    params: Any,
+    cfg: ModelConfig,
+    spec: QuantSpec,
+    method: str,
+    calib_taps: Optional[dict] = None,
+    calib_cfg: Optional[CalibConfig] = None,
+) -> Any:
+    """Rewrite eligible linears into sim dicts. Stacked layer dims are looped
+    in python (calibration is a python-loop trainer). calib_taps: optional
+    {path_prefix: activations (..., K)} map for real calibration data."""
+
+    def tap_for(path):
+        if not calib_taps:
+            return None
+        for key, acts in calib_taps.items():
+            if key in path:
+                return acts
+        return None
+
+    def visit(tree, path=""):
+        if isinstance(tree, dict):
+            if "w" in tree and hasattr(tree["w"], "ndim"):
+                w = tree["w"]
+                if not _eligible(path + "/w", w):
+                    return tree
+                if w.ndim == 2:
+                    out = build_sim_linear(w, method, spec, tap_for(path), calib_cfg)
+                else:
+                    lead = w.shape[:-2]
+                    flat = w.reshape((-1,) + w.shape[-2:])
+                    tap = tap_for(path)
+                    sims = []
+                    for i in range(flat.shape[0]):
+                        ti = None
+                        if tap is not None:
+                            ti = tap[i] if tap.ndim == 3 and tap.shape[0] == flat.shape[0] else tap
+                        sims.append(build_sim_linear(flat[i], method, spec, ti, calib_cfg))
+                    out = jax.tree.map(lambda *xs: jnp.stack(xs).reshape(lead + xs[0].shape), *sims)
+                if "b" in tree:
+                    out["b"] = tree["b"]
+                return out
+            return {k: visit(v, f"{path}/{k}") for k, v in tree.items()}
+        return tree
+
+    return visit(params)

@@ -1,0 +1,134 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles: leading batch dims, M-padding to the block size, interpret-mode
+selection (automatic on CPU — the kernels TARGET TPU and are validated in
+interpret mode per DESIGN.md), bias addition, and block-size heuristics.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.ref import TwinQuantWeights, pack_twinquant_weights  # re-export
+from repro.kernels.twinquant_dual_gemm import dual_gemm
+from repro.kernels.w4a16_gemm import w4a16_gemm
+
+__all__ = [
+    "TwinQuantWeights",
+    "pack_twinquant_weights",
+    "twinquant_matmul",
+    "w4a16_matmul",
+    "default_interpret",
+    "pick_blocks",
+]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def pick_blocks(m: int, n: int, k: int, group: int):
+    """Block-size heuristic: MXU-aligned, VMEM-bounded, shape-capped."""
+    bm = min(128, _round_up_pow2(m))
+    bn = 256 if n % 256 == 0 else (128 if n % 128 == 0 else n)
+    bk = 512 if k % 512 == 0 else (256 if k % 256 == 0 else (128 if k % 128 == 0 else k))
+    bk = max(bk, group)
+    return bm, bn, bk
+
+
+def _round_up_pow2(x: int) -> int:
+    p = 8
+    while p < x and p < 128:
+        p *= 2
+    return p
+
+
+def _flatten_pad(x: jax.Array, bm: int):
+    """(..., K) -> padded (M', K); returns (x2d, batch_shape, m)."""
+    batch_shape = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    pad = (-m) % bm
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    return x2, batch_shape, m
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_m", "block_n", "block_k", "use_ref"))
+def twinquant_matmul(
+    x: jax.Array,
+    w: TwinQuantWeights,
+    bias: Optional[jax.Array] = None,
+    *,
+    interpret: Optional[bool] = None,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    """y = TwinQuant(x) for x of shape (..., K); returns (..., N) bf16.
+
+    ``use_ref=True`` routes through the pure-jnp oracle — the production
+    fallback for shapes the kernel doesn't tile (and for CPU speed in smoke
+    tests; interpret-mode Pallas is exact but slow).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    k = x.shape[-1]
+    n = w.ndim_out
+    if use_ref:
+        x2, batch_shape, m = _flatten_pad(x, 1)
+        y = _ref.dual_gemm_ref(x2, w)
+    else:
+        bm, bn, bk = pick_blocks(x.size // k, n, k, w.group)
+        bm = block_m or bm
+        bn = block_n or bn
+        bk = block_k or bk
+        x2, batch_shape, m = _flatten_pad(x, bm)
+        y = dual_gemm(x2, w, block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    y = y[:m].reshape(*batch_shape, n)
+    if bias is not None:
+        y = (y.astype(jnp.float32) + bias.astype(jnp.float32)).astype(y.dtype)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("group", "interpret", "block_m", "block_n", "block_k", "use_ref"))
+def w4a16_matmul(
+    x: jax.Array,
+    wp: jax.Array,
+    ws: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    group: int = 128,
+    interpret: Optional[bool] = None,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    k = x.shape[-1]
+    n = wp.shape[1]
+    if use_ref:
+        x2, batch_shape, m = _flatten_pad(x, 1)
+        y = _ref.w4a16_gemm_ref(x2, wp, ws, group=group)
+    else:
+        bm, bn, bk = pick_blocks(x.size // k, n, k, group)
+        bm = block_m or bm
+        bn = block_n or bn
+        bk = block_k or bk
+        x2, batch_shape, m = _flatten_pad(x, bm)
+        y = w4a16_gemm(
+            x2, wp, ws, group=group, block_m=bm, block_n=bn, block_k=bk, interpret=interpret
+        )
+    y = y[:m].reshape(*batch_shape, n)
+    if bias is not None:
+        y = (y.astype(jnp.float32) + bias.astype(jnp.float32)).astype(y.dtype)
+    return y

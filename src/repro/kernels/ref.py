@@ -1,0 +1,265 @@
+"""Pure-jnp oracles for the TwinQuant kernels.
+
+These define the EXACT numerics the Pallas kernels must reproduce — same
+group structure, same rounding (``jnp.round``), same f32 accumulation order —
+so interpret-mode kernel tests can compare with tight tolerances.
+
+Packing layout ("group-split rows"): quantized weights are packed two int4
+values per int8 byte along the contraction axis (axis 0). Within each scale
+group of ``G`` rows, packed row ``j`` of the group holds logical row ``j``
+(low nibble) and row ``j + G/2`` (high nibble). This keeps every packed block
+fully local to its scale group, so a ``(block_k/2, block_n)`` packed tile
+unpacks into exactly the ``(block_k, block_n)`` logical tile of the kernel's
+current K block — the property the TPU kernel's BlockSpec tiling relies on
+(a global interleaved layout would not block correctly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import qmax_for_bits
+
+__all__ = [
+    "pack_rows_groupsplit",
+    "unpack_rows_groupsplit",
+    "quantize_rows_ref",
+    "quantize_act_ref",
+    "dual_gemm_ref",
+    "w4a16_gemm_ref",
+    "TwinQuantWeights",
+    "pack_twinquant_weights",
+]
+
+
+# ---------------------------------------------------------------------------
+# group-split packing along axis 0
+# ---------------------------------------------------------------------------
+
+
+def pack_rows_groupsplit(q: jax.Array, group: int) -> jax.Array:
+    """(K, N) int4-valued int8 -> (K/2, N) packed, group-split layout."""
+    k, n = q.shape
+    assert k % group == 0 and group % 2 == 0, (k, group)
+    g2 = group // 2
+    q4 = q.reshape(k // group, 2, g2, n)
+    lo = q4[:, 0]
+    hi = q4[:, 1]
+    packed = (lo & 0x0F) | ((hi & 0x0F) << 4)
+    return packed.astype(jnp.int8).reshape(k // 2, n)
+
+
+def unpack_rows_groupsplit(p: jax.Array, group: int) -> jax.Array:
+    """Inverse of :func:`pack_rows_groupsplit`."""
+    k2, n = p.shape
+    g2 = group // 2
+    p4 = p.reshape(k2 // g2, g2, n).astype(jnp.int32)
+    lo = jnp.right_shift(jnp.left_shift(p4, 28), 28)
+    hi = jnp.right_shift(jnp.left_shift(p4, 24), 28)
+    out = jnp.concatenate([lo, hi], axis=1)  # (K/group, group, n)
+    return out.reshape(k2 * 2, n).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# quantization helpers shared with the kernel (identical rounding)
+# ---------------------------------------------------------------------------
+
+
+def quantize_rows_ref(w: jax.Array, group: int, bits: int):
+    """Group-wise symmetric quantization along axis 0.
+
+    Returns (q int8 (K, N), scales f32 (K/group, N)).
+    """
+    k, n = w.shape
+    qmax = qmax_for_bits(bits)
+    g = w.reshape(k // group, group, n).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g), axis=1)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(g / scale[:, None, :]), -qmax, qmax)
+    return q.reshape(k, n).astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def quantize_act_ref(x: jax.Array, group: int, bits: int):
+    """Group-wise symmetric quantization along axis 1 (activations).
+
+    Returns (q int8 (M, K), scales f32 (M, K/group)).
+    """
+    m, k = x.shape
+    qmax = qmax_for_bits(bits)
+    g = x.reshape(m, k // group, group).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g), axis=2)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(g / scale[:, :, None]), -qmax, qmax)
+    return q.reshape(m, k).astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _int8_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+# ---------------------------------------------------------------------------
+# packed-weight container (produced offline, consumed by kernel + oracle)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TwinQuantWeights:
+    """Offline-quantized dual-component weights (HBM-resident, 4-bit packed)."""
+
+    up: jax.Array  # (K/2, r)   packed int4 — low-rank in-factor  Q^T U G
+    us: jax.Array  # (K/G, r)   f32 scales
+    vp: jax.Array  # (r/2, N)   packed int4 — low-rank out-factor G^-1 V
+    vs: jax.Array  # (r/gr, N)  f32 scales
+    rp: jax.Array  # (K/2, N)   packed int4 — residual Q^T R
+    rs: jax.Array  # (K/G, N)   f32 scales
+    group: int  # K-axis scale group (128)
+    rgroup: int  # r-axis scale group (min(128, r))
+    a_bits: int  # activation bits (4 or 8); H is requantized at a_bits
+
+    def tree_flatten(self):
+        return (self.up, self.us, self.vp, self.vs, self.rp, self.rs), (
+            self.group,
+            self.rgroup,
+            self.a_bits,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def kdim(self) -> int:
+        return self.up.shape[0] * 2
+
+    @property
+    def ndim_out(self) -> int:
+        return self.rp.shape[1]
+
+    @property
+    def rank(self) -> int:
+        return self.up.shape[1]
+
+
+def pack_twinquant_weights(
+    U: jax.Array,
+    V: jax.Array,
+    R: jax.Array,
+    *,
+    w_bits: int = 4,
+    a_bits: int = 4,
+    group: int = 128,
+) -> TwinQuantWeights:
+    """Quantize + pack the (already transformed) components offline."""
+    assert w_bits == 4, "packed path is int4; use w4a16 for other widths"
+    k, r = U.shape
+    rgroup = min(group, r)
+    uq, us = quantize_rows_ref(U, group, w_bits)
+    vq, vs = quantize_rows_ref(V, rgroup, w_bits)
+    rq, rs = quantize_rows_ref(R, group, w_bits)
+    return TwinQuantWeights(
+        up=pack_rows_groupsplit(uq, group),
+        us=us,
+        vp=pack_rows_groupsplit(vq, rgroup),
+        vs=vs,
+        rp=pack_rows_groupsplit(rq, group),
+        rs=rs,
+        group=group,
+        rgroup=rgroup,
+        a_bits=a_bits,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the dual-component GEMM oracle
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("block_k",))
+def dual_gemm_ref(x: jax.Array, w: TwinQuantWeights, block_k: int = 512) -> jax.Array:
+    """Reference for the fused dual-component kernel.
+
+    y = dq(Xq @ Rq)  +  dq( requant(dq(Xq @ Uq)) @ Vq )
+
+    with group-wise scales and H requantized at ``w.a_bits``. Accumulation
+    order matches the kernel: K groups in ascending order via lax.scan.
+    """
+    m, k = x.shape
+    G, gr, a_bits = w.group, w.rgroup, w.a_bits
+    a_qmax = qmax_for_bits(a_bits)
+    r = w.rank
+    n = w.ndim_out
+
+    xq, xs = quantize_act_ref(x, G, a_bits)
+    uq = unpack_rows_groupsplit(w.up, G)
+    vq = unpack_rows_groupsplit(w.vp, gr)
+    rq = unpack_rows_groupsplit(w.rp, G)
+
+    n_groups = k // G
+
+    def group_partial(g):
+        xg = jax.lax.dynamic_slice(xq, (0, g * G), (m, G))
+        sg = jax.lax.dynamic_slice(xs, (0, g), (m, 1))
+        rg = jax.lax.dynamic_slice(rq, (g * G, 0), (G, n))
+        ug = jax.lax.dynamic_slice(uq, (g * G, 0), (G, r))
+        rsg = jax.lax.dynamic_slice(w.rs, (g, 0), (1, n))
+        usg = jax.lax.dynamic_slice(w.us, (g, 0), (1, r))
+        acc_r = _int8_dot(xg, rg).astype(jnp.float32) * sg * rsg
+        acc_h = _int8_dot(xg, ug).astype(jnp.float32) * sg * usg
+        return acc_r, acc_h
+
+    def body(carry, g):
+        acc_r, acc_h = carry
+        pr, ph = group_partial(g)
+        return (acc_r + pr, acc_h + ph), None
+
+    init = (jnp.zeros((m, n), jnp.float32), jnp.zeros((m, r), jnp.float32))
+    (acc_r, h), _ = jax.lax.scan(body, init, jnp.arange(n_groups))
+
+    # requantize H at a_bits, gr groups along r
+    hg = h.reshape(m, r // gr, gr)
+    amax = jnp.max(jnp.abs(hg), axis=2)
+    hs = jnp.where(amax > 0, amax / a_qmax, 1.0)
+    hq = jnp.clip(jnp.round(hg / hs[:, :, None]), -a_qmax, a_qmax).astype(jnp.int8)
+    hq = hq.reshape(m, r)
+
+    out = acc_r
+    for gg in range(r // gr):
+        hqg = hq[:, gg * gr : (gg + 1) * gr]
+        vg = vq[gg * gr : (gg + 1) * gr, :]
+        p = _int8_dot(hqg, vg).astype(jnp.float32)
+        out = out + p * hs[:, gg][:, None] * w.vs[gg, :][None, :]
+    return out.astype(jnp.bfloat16)
+
+
+@partial(jax.jit, static_argnames=("group",))
+def w4a16_gemm_ref(x: jax.Array, wp: jax.Array, ws: jax.Array, group: int = 128) -> jax.Array:
+    """Weight-only-quantized GEMM oracle: bf16 activations, int4 weights.
+
+    wp: (K/2, N) packed; ws: (K/G, N) scales. Dequantized weights are cast to
+    bf16 and dotted with f32 accumulation, one scale group at a time in
+    ascending order — the exact numerics of the w4a16 Pallas kernel.
+    """
+    wq = unpack_rows_groupsplit(wp, group)
+    k, n = wq.shape
+    m = x.shape[0]
+    xb = x.astype(jnp.bfloat16)
+
+    def body(acc, g):
+        wg = jax.lax.dynamic_slice(wq, (g * group, 0), (group, n))
+        sg = jax.lax.dynamic_slice(ws, (g, 0), (1, n))
+        w_deq = (wg.astype(jnp.float32) * sg).astype(jnp.bfloat16)
+        xg = jax.lax.dynamic_slice(xb, (0, g * group), (m, group))
+        p = jax.lax.dot_general(
+            xg, w_deq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return acc + p, None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((m, n), jnp.float32), jnp.arange(k // group))
+    return acc.astype(jnp.bfloat16)

@@ -1,0 +1,222 @@
+"""Fused dual-component W4A4/W4A8 GEMM — the paper's §4.3 kernel, TPU-native.
+
+One ``pl.pallas_call`` computes
+
+    Y = dq(Xq @ Rq)  +  dq( requant(dq(Xq @ Uq)) @ Vq )
+
+for a TwinQuant-decomposed linear layer, with:
+
+* activations quantized **in-kernel, once per M×K tile** (at the first N
+  block) into a VMEM scratch and reused for both components and all N blocks
+  — the paper's "quantize the input activation tile once";
+* the two-stage low-rank path pipelined **entirely in VMEM**: the f32
+  intermediate ``H = dq(Xq @ Uq)`` lives in a scratch accumulator across K
+  steps, is re-quantized on the fly at the last K step of the first N block
+  (scale ``s_H`` estimated from the accumulator, as in the paper), and is
+  consumed by the second int GEMM without ever touching HBM;
+* both component outputs merged in a **single epilogue** with one bf16
+  write-back per output tile.
+
+Grid is ``(M/bm, N/bn, K/bk)`` with K innermost
+(``dimension_semantics = (parallel, arbitrary, arbitrary)``). HBM traffic:
+
+* weights (U, V, R) move at 4 bits/value (group-split nibble packing — see
+  kernels/ref.py for the layout invariant that keeps packed tiles local to
+  their scale group);
+* U is small (K×r/2 bytes) and is pinned whole in VMEM via a constant-index
+  BlockSpec, so it is fetched exactly once per kernel invocation;
+* X is fetched once per M block: its index map degenerates to block (m, 0)
+  for n > 0, and Pallas skips refetches when the block index is unchanged.
+
+The MXU consumes int8 (TPU has no int4 MMA — see DESIGN.md §3): packed
+nibbles are sign-extended to int8 in VMEM by the VPU, and all dots accumulate
+in int32 via ``preferred_element_type``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quantization import qmax_for_bits
+from repro.kernels.ref import TwinQuantWeights
+
+__all__ = ["dual_gemm", "DEFAULT_BLOCKS"]
+
+DEFAULT_BLOCKS = dict(block_m=128, block_n=256, block_k=512)
+
+
+def _unpack_rows(p: jax.Array) -> jax.Array:
+    """(G/2, w) packed int8 -> (G, w) int8 (group-split layout)."""
+    p32 = p.astype(jnp.int32)
+    lo = jnp.right_shift(jnp.left_shift(p32, 28), 28)
+    hi = jnp.right_shift(jnp.left_shift(p32, 24), 28)
+    return jnp.concatenate([lo, hi], axis=0).astype(jnp.int8)
+
+
+def _int8_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def _dual_gemm_kernel(
+    # inputs
+    x_ref,  # (bm, bk)   bf16 — block (m, k) when n==0 else (m, 0)
+    up_ref,  # (K/2, r)  int8 packed — whole array, fetched once
+    us_ref,  # (K/G, r)  f32
+    vp_ref,  # (r/2, bn) int8 packed
+    vs_ref,  # (r/gr, bn) f32
+    rp_ref,  # (bk/2, bn) int8 packed
+    rs_ref,  # (bk/G, bn) f32
+    # output
+    o_ref,  # (bm, bn)  bf16
+    # scratch
+    xq_s,  # (bm, K)    int8 — quantized activation row-panel
+    xs_s,  # (bm, K/G)  f32  — its per-group scales
+    h_s,  # (bm, r)     f32  — low-rank intermediate accumulator
+    hq_s,  # (bm, r)    int8 — requantized H
+    hs_s,  # (bm, r/gr) f32  — H scales
+    acc_s,  # (bm, bn)  f32  — residual-component accumulator
+    *,
+    bk: int,
+    G: int,
+    gr: int,
+    r: int,
+    a_bits: int,
+    n_k: int,
+):
+    n = pl.program_id(1)
+    k = pl.program_id(2)
+    a_qmax = qmax_for_bits(a_bits)
+    gpb = bk // G  # scale groups per K block
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    @pl.when((n == 0) & (k == 0))
+    def _zero_h():
+        h_s[...] = jnp.zeros_like(h_s)
+
+    # ---- stage A (first N block only): quantize the X tile into scratch and
+    # accumulate the first low-rank GEMM H += dq(Xq_g @ Uq_g)
+    @pl.when(n == 0)
+    def _quantize_and_lowrank():
+        x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+        for g in range(gpb):
+            xg = x[:, g * G : (g + 1) * G]
+            amax = jnp.max(jnp.abs(xg), axis=1, keepdims=True)  # (bm, 1)
+            scale = jnp.where(amax > 0, amax / a_qmax, 1.0)
+            q = jnp.clip(jnp.round(xg / scale), -a_qmax, a_qmax).astype(jnp.int8)
+            xq_s[:, pl.ds(k * bk + g * G, G)] = q
+            xs_s[:, pl.ds(k * gpb + g, 1)] = scale
+            # first low-rank GEMM on the freshly quantized group
+            ug = _unpack_rows(up_ref[pl.ds((k * bk + g * G) // 2, G // 2), :])  # (G, r)
+            us = us_ref[pl.ds(k * gpb + g, 1), :]  # (1, r)
+            ph = _int8_dot(q, ug).astype(jnp.float32)
+            h_s[...] += ph * scale * us
+
+    # ---- stage B: residual-component partial for this (n, k) tile
+    for g in range(gpb):
+        xg = xq_s[:, pl.ds(k * bk + g * G, G)]  # (bm, G) int8
+        sg = xs_s[:, pl.ds(k * gpb + g, 1)]  # (bm, 1)
+        rg = _unpack_rows(rp_ref[g * (G // 2) : (g + 1) * (G // 2), :])  # (G, bn)
+        rs = rs_ref[g : g + 1, :]  # (1, bn)
+        pr = _int8_dot(xg, rg).astype(jnp.float32)
+        acc_s[...] += pr * sg * rs
+
+    # ---- stage C (first N block, last K step): requantize H on the fly
+    @pl.when((n == 0) & (k == n_k - 1))
+    def _requantize_h():
+        h = h_s[...]
+        for gg in range(r // gr):
+            hg = h[:, gg * gr : (gg + 1) * gr]
+            amax = jnp.max(jnp.abs(hg), axis=1, keepdims=True)
+            scale = jnp.where(amax > 0, amax / a_qmax, 1.0)
+            hq_s[:, gg * gr : (gg + 1) * gr] = jnp.clip(
+                jnp.round(hg / scale), -a_qmax, a_qmax
+            ).astype(jnp.int8)
+            hs_s[:, gg : gg + 1] = scale
+
+    # ---- stage D (last K step): single epilogue — second low-rank GEMM +
+    # merge with the residual accumulator + one write-back
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out = acc_s[...]
+        for gg in range(r // gr):
+            hqg = hq_s[:, gg * gr : (gg + 1) * gr]  # (bm, gr)
+            vg = _unpack_rows(vp_ref[gg * (gr // 2) : (gg + 1) * (gr // 2), :])
+            pv = _int8_dot(hqg, vg).astype(jnp.float32)
+            out = out + pv * hs_s[:, gg : gg + 1] * vs_ref[gg : gg + 1, :]
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret"),
+)
+def dual_gemm(
+    x: jax.Array,
+    w: TwinQuantWeights,
+    *,
+    block_m: int = 128,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused dual-component quantized matmul. x: (M, K) -> (M, N) bf16.
+
+    M, N, K must be multiples of the block sizes (the ops.py wrapper pads).
+    """
+    m, k = x.shape
+    n = w.ndim_out
+    r = w.rank
+    G, gr = w.group, w.rgroup
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (m, n, k)
+    assert block_k % G == 0 and r % gr == 0 and gr % 2 == 0
+    n_k = k // block_k
+
+    grid = (m // block_m, n // block_n, n_k)
+
+    kernel = functools.partial(
+        _dual_gemm_kernel,
+        bk=block_k, G=G, gr=gr, r=r, a_bits=w.a_bits, n_k=n_k,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # X: fetched only during the n==0 sweep (index pins to (m, 0) after)
+            pl.BlockSpec(
+                (block_m, block_k),
+                lambda mi, ni, ki: (mi, jnp.where(ni == 0, ki, 0)),
+            ),
+            # U pinned whole in VMEM (K*r/2 bytes), fetched once
+            pl.BlockSpec((k // 2, r), lambda mi, ni, ki: (0, 0)),
+            pl.BlockSpec((k // G, r), lambda mi, ni, ki: (0, 0)),
+            pl.BlockSpec((r // 2, block_n), lambda mi, ni, ki: (0, ni)),
+            pl.BlockSpec((r // gr, block_n), lambda mi, ni, ki: (0, ni)),
+            pl.BlockSpec((block_k // 2, block_n), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((block_k // G, block_n), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.bfloat16),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, k), jnp.int8),
+            pltpu.VMEM((block_m, k // G), jnp.float32),
+            pltpu.VMEM((block_m, r), jnp.float32),
+            pltpu.VMEM((block_m, r), jnp.int8),
+            pltpu.VMEM((block_m, r // gr), jnp.float32),
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY, pltpu.ARBITRARY),
+        ),
+        interpret=interpret,
+    )(x, w.up, w.us, w.vp, w.vs, w.rp, w.rs)

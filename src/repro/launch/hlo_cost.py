@@ -1,0 +1,352 @@
+"""HLO-text cost model with while-loop trip-count multiplication.
+
+Why this exists: XLA:CPU's ``compiled.cost_analysis()`` counts a while-loop
+body ONCE, not x trip-count (verified: a 16-step scan of a 0.54 GFLOP matmul
+reports 0.56 GFLOP, the unrolled version 8.9 GFLOP). All our models scan over
+layers, so the built-in numbers undercount by ~n_layers. This module parses
+the optimized per-partition HLO and recomputes:
+
+* flops     — dot ops: 2 x result-elements x contraction size (batch dims are
+              part of the result). Elementwise/reduce ops contribute 1 flop
+              per output element. Multiplied through while trip counts.
+* bytes     — per top-level instruction: result + operand bytes ("bytes
+              accessed" semantics; fusions count only their boundary I/O).
+* collectives — result bytes per kind, x trip counts.
+
+Trip counts come from the loop-condition computation's s32 ``constant(N)``
+(jax scans lower to `compare(counter, N), direction=LT`).
+
+Validated against cost_analysis on unrolled programs (tests/test_roofline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([a-z][a-z0-9\-]*)\((.*)$"
+)
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s*constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast"}
+
+
+def shape_elems(shape_str: str) -> float:
+    total = 0.0
+    for _, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    rest: str  # operands + attributes (may span the rest of the line)
+
+    def operands(self) -> list[str]:
+        # operands live before the first "), " attribute boundary
+        depth = 0
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    args = self.rest[:i]
+                    break
+                depth -= 1
+        else:
+            args = self.rest
+        return _OPERAND_RE.findall(args)
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps: dict[str, list[Instr]] = {}
+        self.symtab: dict[str, dict[str, str]] = {}
+        self.entry: str | None = None
+        self._parse(text)
+        self._flops_memo: dict[str, float] = {}
+        self._trip_memo: dict[str, int] = {}
+
+    def _parse(self, text: str) -> None:
+        cur = None
+        is_entry = False
+        for line in text.splitlines():
+            hdr = _COMP_HDR.match(line)
+            if hdr and ("->" in line):
+                cur = hdr.group(1)
+                self.comps[cur] = []
+                self.symtab[cur] = {}
+                if line.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                ins = Instr(name=m.group(1), shape=m.group(2), opcode=m.group(3),
+                            rest=m.group(4))
+                self.comps[cur].append(ins)
+                self.symtab[cur][ins.name] = ins.shape
+
+    # ------------------------------------------------------------------
+
+    def trip_count(self, cond_comp: str) -> int:
+        if cond_comp in self._trip_memo:
+            return self._trip_memo[cond_comp]
+        best = 1
+        for ins in self.comps.get(cond_comp, []):
+            for c in _CONST_RE.finditer(ins.shape + " " + ins.opcode + "(" + ins.rest):
+                best = max(best, int(c.group(1)))
+            # constants may also appear as standalone constant instrs
+            if ins.opcode == "constant" and ins.shape.startswith("s32[]"):
+                m = re.search(r"constant\((\d+)\)", "constant(" + ins.rest)
+                if m:
+                    best = max(best, int(m.group(1)))
+            # dig into fused compare computations
+            cm = _CALLS_RE.search(ins.rest)
+            if cm and cm.group(1) in self.comps:
+                best = max(best, self.trip_count(cm.group(1)))
+        self._trip_memo[cond_comp] = best
+        return best
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        out_elems = shape_elems(ins.shape)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+        ops = ins.operands()
+        if not m or not ops:
+            return 2 * out_elems
+        lhs_shape = self.symtab[comp].get(ops[0], "")
+        dims = _SHAPE_RE.search(lhs_shape)
+        if not dims:
+            return 2 * out_elems
+        lhs_dims = [int(d) for d in dims.group(2).split(",") if d]
+        k = 1
+        for idx in m.group(1).split(","):
+            if idx:
+                i = int(idx)
+                if i < len(lhs_dims):
+                    k *= lhs_dims[i]
+        return 2.0 * out_elems * k
+
+    def comp_flops(self, comp: str) -> float:
+        if comp in self._flops_memo:
+            return self._flops_memo[comp]
+        self._flops_memo[comp] = 0.0  # cycle guard
+        total = 0.0
+        for ins in self.comps.get(comp, []):
+            if ins.opcode == "dot":
+                total += self._dot_flops(comp, ins)
+            elif ins.opcode == "while":
+                body = _BODY_RE.search(ins.rest)
+                cond = _COND_RE.search(ins.rest)
+                trip = self.trip_count(cond.group(1)) if cond else 1
+                if body:
+                    total += trip * self.comp_flops(body.group(1))
+            elif ins.opcode in ("fusion", "call", "conditional", "map"):
+                for cm in set(_CALLS_RE.findall(ins.rest)):
+                    total += self.comp_flops(cm)
+            elif ins.opcode in ("reduce", "reduce-window"):
+                ops = ins.operands()
+                if ops:
+                    total += shape_elems(self.symtab[comp].get(ops[0], ins.shape))
+            elif ins.opcode in ("add", "multiply", "subtract", "divide", "exponential",
+                                "tanh", "rsqrt", "maximum", "minimum", "compare",
+                                "select", "convert", "log"):
+                total += shape_elems(ins.shape)
+        self._flops_memo[comp] = total
+        return total
+
+    def _param_slice_bytes(self, called: str) -> dict[int, float]:
+        """For a fused computation: parameter index -> effective read bytes,
+        for params consumed ONLY by dynamic-slice / dynamic-update-slice /
+        gather (operand 0). Scan bodies slice one layer's weights out of the
+        (L, ...) stacked array per iteration — counting the full stacked
+        operand per trip overcounts HBM reads by L."""
+        out: dict[int, float] = {}
+        instrs = self.comps.get(called, [])
+        sym = self.symtab.get(called, {})
+        pidx: dict[str, int] = {}
+        for ins in instrs:
+            if ins.opcode == "parameter":
+                m = re.match(r"(\d+)\)", ins.rest)
+                if m:
+                    pidx[ins.name] = int(m.group(1))
+        consumers: dict[str, list] = defaultdict(list)
+        for ins in instrs:
+            for pos, op in enumerate(ins.operands()):
+                if op in pidx:
+                    consumers[op].append((ins, pos))
+        for pname, uses in consumers.items():
+            ok = True
+            eff = 0.0
+            for ins, pos in uses:
+                if ins.opcode in ("dynamic-slice", "gather") and pos == 0:
+                    eff += shape_bytes(ins.shape)
+                elif ins.opcode == "dynamic-update-slice" and pos == 0:
+                    ops = ins.operands()
+                    upd = sym.get(ops[1], "") if len(ops) > 1 else ""
+                    eff += 2 * shape_bytes(upd)
+                else:
+                    ok = False
+                    break
+            if ok and uses:
+                out[pidx[pname]] = eff
+        return out
+
+    def _fusion_root(self, called: str):
+        instrs = self.comps.get(called, [])
+        return instrs[-1] if instrs else None
+
+    def _instr_bytes(self, comp: str, ins: Instr) -> float:
+        if ins.opcode in ("dynamic-slice", "gather"):
+            return 2 * shape_bytes(ins.shape)
+        if ins.opcode == "dynamic-update-slice":
+            ops = ins.operands()
+            upd = self.symtab[comp].get(ops[1], "") if len(ops) > 1 else ""
+            return 2 * shape_bytes(upd)
+        b = shape_bytes(ins.shape)
+        inplace_dus = False
+        eff: dict[int, float] = {}
+        if ins.opcode == "fusion":
+            cm = _CALLS_RE.search(ins.rest)
+            if cm and cm.group(1) in self.comps:
+                eff = self._param_slice_bytes(cm.group(1))
+                # in-place cache update: a dus inside the fusion whose result
+                # has the same element count as the fusion result means XLA
+                # aliases the big buffer and writes only the update window
+                # (possibly wrapped in CPU-only bf16<->f32 converts) —
+                # counting the full result overcounts by S per decode step
+                res_elems = shape_elems(ins.shape)
+                for inner in self.comps[cm.group(1)]:
+                    if inner.opcode == "dynamic-update-slice" and shape_elems(inner.shape) == res_elems:
+                        iops = inner.operands()
+                        upd = self.symtab[cm.group(1)].get(iops[1], "") if len(iops) > 1 else ""
+                        b = 2 * shape_bytes(upd)
+                        inplace_dus = True
+                        break
+        for pos, op in enumerate(ins.operands()):
+            if pos in eff:
+                b += eff[pos]
+            elif inplace_dus and shape_elems(self.symtab[comp].get(op, "")) == shape_elems(ins.shape):
+                pass  # the aliased big operand — not re-read
+            else:
+                b += shape_bytes(self.symtab[comp].get(op, ""))
+        return b
+
+    def _comp_bytes_coll(self, comp: str, mult: float, bytes_acc: list,
+                         coll: dict, visited: tuple) -> None:
+        if comp in visited:
+            return
+        for ins in self.comps.get(comp, []):
+            if ins.opcode == "while":
+                body = _BODY_RE.search(ins.rest)
+                cond = _COND_RE.search(ins.rest)
+                trip = self.trip_count(cond.group(1)) if cond else 1
+                if body:
+                    self._comp_bytes_coll(body.group(1), mult * trip, bytes_acc,
+                                          coll, visited + (comp,))
+                continue
+            if ins.opcode in ("call", "conditional"):
+                for cm in set(_CALLS_RE.findall(ins.rest)):
+                    self._comp_bytes_coll(cm, mult, bytes_acc, coll, visited + (comp,))
+                continue
+            opbase = ins.opcode.replace("-start", "").replace("-done", "")
+            if opbase in COLLECTIVES and not ins.opcode.endswith("-done"):
+                coll[opbase] += mult * shape_bytes(ins.shape)
+                coll["count_" + opbase] += mult
+            if ins.opcode in _SKIP_BYTES:
+                continue
+            bytes_acc[0] += mult * self._instr_bytes(comp, ins)
+
+    def analyze(self) -> dict:
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        flops = self.comp_flops(self.entry)
+        bytes_acc = [0.0]
+        coll: dict = defaultdict(float)
+        self._comp_bytes_coll(self.entry, 1.0, bytes_acc, coll, ())
+        coll_total = sum(v for k, v in coll.items() if not k.startswith("count_"))
+        return {
+            "flops": flops,
+            "bytes": bytes_acc[0],
+            "coll_bytes": coll_total,
+            "coll_detail": dict(coll),
+        }
+
+
+def analyze_hlo(text: str) -> dict:
+    return HloCost(text).analyze()
+
+
+def top_bytes(text: str, n: int = 20) -> list[tuple[float, str, str]]:
+    """Debug: the n largest (bytes x trip-mult) instructions — the
+    hypothesis-generation tool of the §Perf loop."""
+    hc = HloCost(text)
+    rows: list[tuple[float, str, str]] = []
+
+    def walk(comp: str, mult: float, visited: tuple):
+        if comp in visited:
+            return
+        for ins in hc.comps.get(comp, []):
+            if ins.opcode == "while":
+                body = _BODY_RE.search(ins.rest)
+                cond = _COND_RE.search(ins.rest)
+                trip = hc.trip_count(cond.group(1)) if cond else 1
+                if body:
+                    walk(body.group(1), mult * trip, visited + (comp,))
+                continue
+            if ins.opcode in ("call", "conditional"):
+                for cm in set(_CALLS_RE.findall(ins.rest)):
+                    walk(cm, mult, visited + (comp,))
+                continue
+            if ins.opcode in _SKIP_BYTES:
+                continue
+            b = hc._instr_bytes(comp, ins) * mult
+            rows.append((b, ins.opcode, f"{comp}/{ins.name} {ins.shape[:60]} x{mult:g}"))
+
+    walk(hc.entry, 1.0, ())
+    rows.sort(reverse=True)
+    return rows[:n]

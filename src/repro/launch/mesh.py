@@ -1,0 +1,27 @@
+"""Production mesh construction (assignment §MULTI-POD DRY-RUN).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+AXES_SINGLE = ("data", "model")
+AXES_MULTI = ("pod", "data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = AXES_MULTI if multi_pod else AXES_SINGLE
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=AXES_SINGLE):
+    """Small host-device mesh for tests (XLA_FLAGS device_count >= prod(shape))."""
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

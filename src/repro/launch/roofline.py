@@ -1,0 +1,150 @@
+"""Roofline term derivation from compiled artifacts (assignment §ROOFLINE).
+
+    compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes / (chips * HBM_BW)
+    collective = collective_bytes / (chips * LINK_BW)
+
+IMPORTANT accounting note (verified empirically, see EXPERIMENTS.md §Dry-run):
+``compiled.cost_analysis()`` on an SPMD-partitioned module reports the cost
+of the PER-DEVICE program (the HLO module is the per-partition program), and
+the shapes appearing in its collective ops are per-device payloads. So the
+terms below use per-device numbers directly — dividing whole-program numbers
+by chips (the assignment's formula) and using per-device numbers are the
+same quantity. MODEL_FLOPS is global and is divided by chips when compared.
+
+collective_bytes: for every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute we count the RESULT bytes of the op (the
+payload a device moves through its ICI links, up to the O(1) ring factor
+(g-1)/g ≈ 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "s2": 0.25, "u2": 0.25,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9\[\]{},: ]+?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind from optimized HLO text."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(out, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str = m.group(1) or m.group(2) or ""
+        kind = m.group(3)
+        b = _shape_bytes(shape_str)
+        # -start/-done pairs would double-count; only count -start or bare
+        span_txt = hlo_text[m.start():m.end()]
+        if "-done(" in span_txt:
+            continue
+        out[kind] += b
+        counts[kind] += 1
+    out["total"] = sum(out.values())
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-device (cost_analysis of the per-partition module)
+    hbm_bytes: float  # per-device
+    coll_bytes: float  # per-device
+    chips: int
+    model_flops: Optional[float] = None  # GLOBAL 6·N·D / 2·N·tokens
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if not self.model_flops or not self.flops:
+            return None
+        return (self.model_flops / self.chips) / self.flops
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """MFU upper bound: time the model-FLOPs would take at peak, over the
+        roofline-bound step time. This is the §Perf score per cell."""
+        if not self.model_flops:
+            return None
+        return (self.model_flops / (self.chips * PEAK_FLOPS)) / self.bound_time
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_compiled(compiled, chips: int, model_flops: Optional[float] = None) -> Roofline:
+    """Roofline from the compiled artifact, using the trip-count-aware HLO
+    cost model (launch/hlo_cost.py) — XLA:CPU's cost_analysis undercounts
+    while-loop bodies (counted once, not x trips)."""
+    from repro.launch.hlo_cost import analyze_hlo
+
+    hc = analyze_hlo(compiled.as_text())
+    return Roofline(flops=hc["flops"], hbm_bytes=hc["bytes"],
+                    coll_bytes=hc["coll_bytes"], chips=chips,
+                    model_flops=model_flops)

@@ -1,0 +1,106 @@
+"""Serving launcher: prefill/decode step construction + a batched-request
+serving loop (continuous-batching-style slot management).
+
+The decode step is the function the ``decode_*`` / ``long_*`` dry-run cells
+lower; the ``Server`` class is the runnable end-to-end driver used by
+examples/serve_quantized.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models.registry import get_model
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    model = get_model(cfg)
+
+    def prefill_step(params, tokens, state, **frontend):
+        return model.prefill(params, cfg, tokens, state, **frontend)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    model = get_model(cfg)
+
+    def decode_step(params, state, tokens):
+        return model.decode_step(params, cfg, state, tokens)
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: jax.Array  # (S,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    """Minimal batched serving loop: static batch of slots, greedy sampling.
+
+    Requests are admitted into free slots; all slots decode in lock-step (the
+    TPU-efficient layout); finished requests free their slot. Per-slot
+    positions are tracked so prompts of different lengths coexist.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4, max_len: int = 128):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.params = params
+        self.batch = batch_slots
+        self.max_len = max_len
+        self.state = self.model.init_decode_state(cfg, batch_slots, max_len)
+        self.slots: list[Optional[Request]] = [None] * batch_slots
+        self._decode = jax.jit(
+            lambda p, st, t: self.model.decode_step(p, cfg, st, t)
+        )
+
+    def submit(self, req: Request) -> bool:
+        """Admit into a free slot; prefill its prompt via per-slot decode."""
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = req
+                # feed the prompt token-by-token through the shared decode
+                # step (slot-local prefill; cache positions are global-step
+                # aligned, so prompts are left-padded into the timeline)
+                for t in range(req.prompt.shape[0]):
+                    tok = jnp.zeros((self.batch, 1), jnp.int32)
+                    tok = tok.at[i, 0].set(req.prompt[t])
+                    logits, self.state = self._decode(self.params, self.state, tok)
+                req._last_logits = logits[i, -1]
+                return True
+        return False
+
+    def step(self) -> int:
+        """One lock-step decode for all active slots; returns #active."""
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        tok = jnp.zeros((self.batch, 1), jnp.int32)
+        for i in active:
+            req = self.slots[i]
+            nxt = int(jnp.argmax(req._last_logits)) % self.cfg.vocab
+            req.out.append(nxt)
+            tok = tok.at[i, 0].set(nxt)
+        logits, self.state = self._decode(self.params, self.state, tok)
+        for i in active:
+            req = self.slots[i]
+            req._last_logits = logits[i, -1]
+            if len(req.out) >= req.max_new or int(self.state["pos"]) >= self.max_len - 1:
+                req.done = True
+                self.slots[i] = None
+        return len(active)
+
+    def run_until_done(self, max_steps: int = 1000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0:
+                return

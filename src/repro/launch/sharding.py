@@ -1,0 +1,266 @@
+"""Sharding rules: param-path -> PartitionSpec, per architecture family.
+
+Conventions (Megatron/MaxText-style, see DESIGN.md §5):
+
+* ``fsdp`` axes shard a weight's *contraction-adjacent* dim (ZeRO-3); XLA
+  SPMD inserts the all-gathers.
+* ``model`` (TP) shards attention heads / MLP hidden / experts / vocab.
+* Activations: batch over dp axes; hidden dim unsharded between blocks
+  (sequence-parallel resharding is an option flag used by the perf loop).
+* Quantized packs inherit the spec of the bf16 weight they replace (packed
+  rows halve K — same axis mapping).
+
+Rules are (regex over the '/'-joined param path, spec-builder) pairs; first
+match wins; default replicate. This table IS the parallelism layout of the
+framework — the dry-run and the real launcher share it.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig
+from repro.models.context import MeshContext
+
+__all__ = ["param_specs", "batch_specs", "decode_state_specs", "make_shardings"]
+
+
+def _rules(cfg: ModelConfig, ctx: MeshContext):
+    f = tuple(ctx.fsdp_axes) or None  # fsdp axes (e.g. ("data",)) or replicate
+    m = ctx.tp_axis  # "model"
+    e = ctx.ep_axis
+
+    def last2(spec_in, spec_out):
+        """Spec for a (possibly layer-stacked) matrix: leading dims None."""
+
+        def build(shape):
+            lead = (None,) * (len(shape) - 2)
+            return P(*lead, spec_in, spec_out)
+
+        return build
+
+    def lastn(*specs):
+        def build(shape):
+            lead = (None,) * (len(shape) - len(specs))
+            return P(*lead, *specs)
+
+        return build
+
+    def vec(spec):
+        def build(shape):
+            lead = (None,) * (len(shape) - 1)
+            return P(*lead, spec)
+
+        return build
+
+    R = [
+        # --- embeddings / heads: vocab over model, feature over fsdp
+        (r"embed$", lambda s: P(m, f)),
+        (r"head/w$", last2(f, m)),
+        # --- attention (dense/GQA, whisper, zamba shared, xlstm-free)
+        (r"attn/[qkv]/w$", last2(f, m)),
+        (r"attn/[qkv]/b$", vec(m)),
+        (r"attn/o/w$", last2(m, f)),
+        (r"xattn/[qkv]/w$", last2(f, m)),
+        (r"xattn/o/w$", last2(m, f)),
+        (r"shared/[qkv]/w$", last2(f, m)),
+        (r"shared/o/w$", last2(m, f)),
+        # --- MLA projections
+        (r"wq_a/w$", last2(f, None)),
+        (r"wq_b/w$", last2(f, m)),
+        (r"wkv_a/w$", last2(f, None)),
+        (r"wkv_b/w$", last2(f, m)),
+        # --- MLP (dense & shared-expert & whisper gelu & slstm ffn)
+        (r"(mlp|ffn|shared/mlp|moe/shared)/(gate|up)/w$", last2(f, m)),
+        (r"(mlp|ffn|shared/mlp|moe/shared)/(gate|up)/b$", vec(m)),
+        (r"(mlp|ffn|shared/mlp|moe/shared)/down/w$", last2(m, f)),
+        # --- MoE experts: E over ep, then D over fsdp (gathered in-shard)
+        (r"moe/(gate|up)/w$", lastn(e, f, None)),
+        (r"moe/down/w$", lastn(e, None, f)),
+        (r"moe/router$", lastn(None, None)),
+        # --- quantized packs inherit their parent linear's layout
+        (r"attn/[qkv]/(rp|rs|up|us)$", last2(f, m)),
+        (r"attn/[qkv]/(vp|vs)$", last2(None, m)),
+        (r"attn/o/(rp|rs|up|us)$", last2(m, f)),
+        (r"attn/o/(vp|vs)$", last2(None, f)),
+        (r"(mlp|ffn)/(gate|up)/(rp|rs|up|us)$", last2(f, m)),
+        (r"(mlp|ffn)/(gate|up)/(vp|vs)$", last2(None, m)),
+        (r"(mlp|ffn)/down/(rp|rs|up|us)$", last2(m, f)),
+        (r"(mlp|ffn)/down/(vp|vs)$", last2(None, f)),
+        (r"abits$", lambda s: P()),
+        # --- xLSTM
+        (r"m_layers/(up|wq|wk|wv)/w$", last2(f, m)),
+        (r"m_layers/wif/w$", last2(f, None)),
+        (r"m_layers/down/w$", last2(m, f)),
+        (r"m_layers/conv$", vec(m)),
+        # --- Mamba2
+        (r"m_layers/in_proj/w$", last2(f, None)),
+        (r"(m_layers|rest_layers)/out_proj/w$", last2(m, f)),
+        (r"(m_layers|rest_layers)/conv$", vec(None)),
+        (r"rest_layers/in_proj/w$", last2(f, None)),
+        # --- sLSTM recurrence: heads over model
+        (r"s_layers/w/w$", last2(f, None)),
+        (r"s_layers/r$", lastn(m, None, None)),
+        # --- zamba adapters
+        (r"adapters/w$", last2(m, f)),
+        # --- MTP
+        (r"mtp/proj/w$", last2(f, m)),
+    ]
+    return [(re.compile(pat), fn) for pat, fn in R]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(getattr(p, "idx", p)))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ModelConfig, params_tree, ctx: MeshContext):
+    """Pytree of PartitionSpec matching params_tree (arrays or SDS)."""
+    rules = _rules(cfg, ctx)
+
+    def spec_for(path, leaf):
+        s = _path_str(path)
+        shape = leaf.shape
+        for pat, fn in rules:
+            if pat.search(s):
+                spec = fn(shape)
+                return _fit(spec, shape, ctx)
+        return P()  # replicate (norms, scalars, gates, biases)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_tree)
+
+
+def _axis_size(ctx: MeshContext, axes) -> int:
+    if axes is None or ctx.mesh is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= ctx.mesh.shape[a]
+    return n
+
+
+def _fit(spec: P, shape, ctx: MeshContext) -> P:
+    """Drop axis assignments that don't divide the dim (keeps XLA from
+    padding tiny dims like kv-head counts below the axis size)."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+        elif dim % _axis_size(ctx, ax) == 0 and dim >= _axis_size(ctx, ax):
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def opt_state_specs(cfg: ModelConfig, params_tree, pspecs, ctx: MeshContext):
+    """ZeRO-1 option: when params are replicated (small models, fsdp off),
+    still shard the f32 Adam moments over the dp axes (largest divisible
+    dim) — they are 4x the param bytes and dominate replicated-state HBM."""
+    dp = tuple(ctx.dp_axes) or None
+
+    def spec_for(leaf, pspec):
+        if any(ax is not None for ax in tuple(pspec)):
+            return pspec  # follow the param sharding (ZeRO-3)
+        shape = leaf.shape
+        for i, dim in enumerate(shape):
+            if dp and dim % _axis_size(ctx, dp) == 0 and dim >= _axis_size(ctx, dp):
+                spec = [None] * len(shape)
+                spec[i] = dp
+                return P(*spec)
+        return P()
+
+    return jax.tree.map(spec_for, params_tree, pspecs)
+
+
+def batch_specs(cfg: ModelConfig, batch_tree, ctx: MeshContext):
+    """Batch inputs: leading batch dim over dp axes (dropped when the batch
+    doesn't divide, e.g. long_500k's batch=1)."""
+    dp = tuple(ctx.dp_axes) or None
+
+    def spec_for(path, leaf):
+        lead = (None,) * (len(leaf.shape) - 1)
+        return _fit(P(dp, *lead), leaf.shape, ctx)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_tree)
+
+
+def decode_state_specs(cfg: ModelConfig, state_tree, ctx: MeshContext, *,
+                       seq_shard: bool = False):
+    """KV caches / recurrent states.
+
+    Layout: (L, B, S, KV, hd) caches -> batch over dp; kv-heads over model if
+    they divide, else the sequence dim; ``seq_shard=True`` (long_500k,
+    batch < dp size) shards S over (dp + model) instead.
+    """
+    dp = tuple(ctx.dp_axes) or None
+    m = ctx.tp_axis
+
+    def spec_for(path, leaf):
+        s = _path_str(path)
+        shape = leaf.shape
+        if s.endswith("pos"):
+            return P()
+        if "shared_" in s or s.endswith(("k", "v", "xk", "xv")) and len(shape) == 5:
+            # (L, B, S, KV, hd)
+            if seq_shard:
+                return _fit(P(None, None, tuple(ctx.dp_axes) + ((m,) if m else ()), None, None), shape, ctx)
+            kv = shape[3]
+            if m and kv % _axis_size(ctx, m) == 0:
+                return _fit(P(None, dp, None, m, None), shape, ctx)
+            return _fit(P(None, dp, m, None, None), shape, ctx)
+        if s.endswith(("ckv", "krope")) and len(shape) == 4:
+            # MLA latent cache (L, B, S, r): batch over dp, seq over model
+            if seq_shard:
+                return _fit(P(None, None, tuple(ctx.dp_axes) + ((m,) if m else ()), None), shape, ctx)
+            return _fit(P(None, dp, m, None), shape, ctx)
+        if s.endswith(("mC", "mn", "mm")):
+            # xlstm matrix state (..., B, H, dh[, dh]): batch dp, value dim model
+            lead = (None,) * (len(shape) - 1)
+            idx = len(shape) - (4 if s.endswith("mC") else (3 if s.endswith("mn") else 2))
+            spec = [None] * len(shape)
+            spec[idx] = dp
+            if s.endswith("mC") and m:
+                spec[-1] = m
+            return _fit(P(*spec), shape, ctx)
+        if s.endswith("ssm") or s.endswith("ssm_rest"):
+            # (L..., B, H, P, N): batch dp, ssm heads over model
+            spec = [None] * len(shape)
+            spec[-4] = dp
+            spec[-3] = m
+            return _fit(P(*spec), shape, ctx)
+        if s.endswith(("conv", "conv_rest")):
+            spec = [None] * len(shape)
+            spec[-3] = dp
+            return _fit(P(*spec), shape, ctx)
+        if len(shape) >= 2:
+            spec = [None] * len(shape)
+            spec[-2] = dp  # (L?, B, D) recurrent vectors: batch dim heuristic
+            if s.startswith(("sh", "sc", "sn", "sm")) or "/s" in s:
+                spec = [None] * len(shape)
+                spec[-2] = dp
+            return _fit(P(*spec), shape, ctx)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, state_tree)
+
+
+def make_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

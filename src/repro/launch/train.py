@@ -1,0 +1,135 @@
+"""Training launcher: step construction + fault-tolerant supervision loop.
+
+``make_train_step`` builds the pjit-able step (loss -> grads -> optional int8
+gradient compression -> AdamW). ``TrainLoop`` wraps it with checkpointing,
+restart-on-failure, and straggler detection — the parts that make the system
+runnable on a real multi-pod cluster (deliverable: fault tolerance).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models.registry import get_model
+from repro.optim import AdamW, AdamWState
+from repro.optim.grad_compression import compress_grads_int8, decompress_grads_int8
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, grad_compress: bool = False) -> Callable:
+    model = get_model(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: model.loss_fn(p, cfg, batch))(params)
+        if grad_compress:
+            # int8 EF compression of the DP gradient reduction (the psum is
+            # implicit in SPMD; compressing before the reduce shrinks the
+            # all-reduce payload 4x — the collective term of the roofline)
+            ef = opt_state[1]
+            q, s, ef = compress_grads_int8(grads, ef)
+            grads = decompress_grads_int8(q, s)
+            adam_state, _ = opt_state
+            new_params, adam_state = opt.update(grads, adam_state, params)
+            return new_params, (adam_state, ef), loss
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, opt: AdamW, key, grad_compress: bool = False):
+    model = get_model(cfg)
+    params = model.init_params(cfg, key)
+    opt_state = opt.init(params)
+    if grad_compress:
+        ef = jax.tree.map(jnp.zeros_like, params)
+        return params, (opt_state, ef)
+    return params, opt_state
+
+
+# ---------------------------------------------------------------------------
+# supervision loop: checkpoint/restart + straggler monitoring
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EWMA step-time tracker; flags steps slower than ``threshold`` x EWMA.
+
+    On a real cluster the flag feeds preemption/rescheduling; here it is the
+    hook point (and is unit-tested with injected delays)."""
+
+    alpha: float = 0.1
+    threshold: float = 2.0
+    ewma: Optional[float] = None
+    flagged: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = self.ewma is not None and dt > self.threshold * self.ewma
+        self.ewma = dt if self.ewma is None else (1 - self.alpha) * self.ewma + self.alpha * dt
+        if is_straggler:
+            self.flagged.append((step, dt))
+        return is_straggler
+
+
+class TrainLoop:
+    """Fault-tolerant training driver.
+
+    * periodic async checkpoints (manager handles atomic publish/retention)
+    * on step failure: restore latest checkpoint and continue (max_restarts)
+    * data pipeline is resumed deterministically from the checkpointed step
+    """
+
+    def __init__(self, cfg: ModelConfig, step_fn, ckpt_manager, data_iter_factory,
+                 ckpt_every: int = 100, max_restarts: int = 3,
+                 monitor: Optional[StragglerMonitor] = None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.ckpt = ckpt_manager
+        self.data_iter_factory = data_iter_factory
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.monitor = monitor or StragglerMonitor()
+        self.restarts = 0
+
+    def run(self, params, opt_state, start_step: int, num_steps: int,
+            fail_injector: Optional[Callable[[int], None]] = None):
+        """Returns (params, opt_state, losses, end_step)."""
+        step = start_step
+        losses = []
+        data = self.data_iter_factory(step)
+        while step < num_steps:
+            try:
+                batch = next(data)
+                if fail_injector is not None:
+                    fail_injector(step)
+                t0 = time.monotonic()
+                params, opt_state, loss = self.step_fn(params, opt_state, batch)
+                jax.block_until_ready(loss)
+                self.monitor.observe(step, time.monotonic() - t0)
+                losses.append(float(loss))
+                step += 1
+                if step % self.ckpt_every == 0:
+                    self.ckpt.save(step, {"params": params, "opt": opt_state})
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                template = {"params": params, "opt": opt_state}
+                restored = self.ckpt.restore_latest(like=template)
+                if restored is None:
+                    # no checkpoint yet: restart from the initial state
+                    data = self.data_iter_factory(start_step)
+                    step = start_step
+                    continue
+                step, state = restored
+                params, opt_state = state["params"], state["opt"]
+                data = self.data_iter_factory(step)
+        self.ckpt.save(step, {"params": params, "opt": opt_state})
+        self.ckpt.wait()
+        return params, opt_state, losses, step

@@ -1,0 +1,1 @@
+from repro.models import common, context, registry  # noqa: F401

@@ -1,0 +1,483 @@
+"""Shared model substrate: norms, RoPE, linears (with quantized dispatch),
+GQA attention with KV cache, embedding/init helpers.
+
+Parameters are plain nested dicts of jnp arrays (scan-stacked per layer).
+Every matmul in the network goes through :func:`linear`, which dispatches on
+the parameter keys:
+
+    {"w" [, "b"]}                          -> bf16 dense
+    {"wp", "ws" [, "b"]}                   -> W4A16 weight-only (packed int4)
+    {"up","us","vp","vs","rp","rs" [,"b"]} -> TwinQuant dual-component W4A4/W4A8
+
+so TwinQuant is a first-class precision mode of the whole framework, not a
+bolt-on — quantize_model() rewrites the params pytree and every architecture
+(dense/MoE/MLA/SSM/...) picks it up through this one dispatcher.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+
+DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False, scale: float = 1.0):
+    std = scale / (d_in**0.5)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * std).astype(DTYPE)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), DTYPE)
+    return p
+
+
+def embed_init(key, vocab: int, d: int):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(DTYPE)
+
+
+def _cs(x: jax.Array, *spec_dims) -> jax.Array:
+    """Context-aware sharding constraint (no-op without a mesh)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.models.context import get_mesh_context
+
+    ctx = get_mesh_context()
+    if ctx.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, P(*spec_dims)))
+
+
+def embed_attend(embed: jax.Array) -> jax.Array:
+    """Constrain the embedding table at its use site. Without this the SPMD
+    partitioner materializes replicated f32 embed gradients when the table is
+    used by both the input gather and a tied head (measured 4x temp blowup —
+    EXPERIMENTS §Perf iteration log)."""
+    from repro.models.context import get_mesh_context
+
+    ctx = get_mesh_context()
+    if ctx.mesh is None:
+        return embed
+    fsdp = tuple(ctx.fsdp_axes) or None
+    return _cs(embed, ctx.tp_axis, fsdp)
+
+
+def embed_lookup(embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Sharded token-embedding gather: (B, S) -> (B, S, D)."""
+    from repro.models.context import get_mesh_context
+
+    ctx = get_mesh_context()
+    x = embed_attend(embed)[tokens]
+    if ctx.mesh is None:
+        return x
+    dp = tuple(ctx.dp_axes) or None
+    return _cs(x, dp, *([None] * (x.ndim - 1)))
+
+
+# ---------------------------------------------------------------------------
+# linear dispatch (bf16 / w4a16 / twinquant)
+# ---------------------------------------------------------------------------
+
+
+def linear(p: dict, x: jax.Array) -> jax.Array:
+    """Apply a (possibly quantized) linear layer; x: (..., K) -> (..., N)."""
+    if "w" in p:
+        y = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
+        if "b" in p:
+            y = y + p["b"].astype(y.dtype)
+        return y
+    if "r_dq" in p:  # quantized-numerics simulation (benchmarks; exact W4Ax math)
+        from repro.core.quantization import QuantConfig, fake_quant
+
+        xh = x / p["lam"].astype(x.dtype)
+        if "Q" in p:
+            xh = jnp.einsum("...k,kq->...q", xh, p["Q"].astype(x.dtype))
+        a_bits = p["abits"].shape[-1]
+        if a_bits < 16:
+            k = xh.shape[-1]
+            xh = fake_quant(xh, QuantConfig(bits=a_bits, group_size=min(128, k), axis=-1))
+        w_eff = p["r_dq"].astype(x.dtype)
+        y = jnp.einsum("...k,kn->...n", xh, w_eff)
+        if "u_dq" in p:
+            h = jnp.einsum("...k,kr->...r", xh, p["u_dq"].astype(x.dtype))
+            if a_bits < 16:  # H requantization (the fused kernel's s_H step)
+                r = h.shape[-1]
+                h = fake_quant(h, QuantConfig(bits=a_bits, group_size=min(128, r), axis=-1))
+            y = y + jnp.einsum("...r,rn->...n", h, p["v_dq"].astype(x.dtype))
+        if "b" in p:
+            y = y + p["b"].astype(y.dtype)
+        return y
+    if "rp" in p:  # TwinQuant dual-component pack
+        from repro.kernels.ops import TwinQuantWeights, twinquant_matmul
+
+        # static metadata is encoded in (static) shapes: scale-group sizes
+        # from packed-vs-scale row ratios, activation bits from the `abits`
+        # marker array's length — keeps the params pytree jit-pure
+        w = TwinQuantWeights(
+            up=p["up"], us=p["us"], vp=p["vp"], vs=p["vs"], rp=p["rp"], rs=p["rs"],
+            group=p["rp"].shape[-2] * 2 // p["rs"].shape[-2],
+            rgroup=p["vp"].shape[-2] * 2 // p["vs"].shape[-2],
+            a_bits=p["abits"].shape[-1],
+        )
+        return twinquant_matmul(x, w, p.get("b"), use_ref=jax.default_backend() == "cpu").astype(x.dtype)
+    if "wp" in p:  # W4A16 weight-only pack
+        from repro.kernels.ops import w4a16_matmul
+
+        return w4a16_matmul(
+            x, p["wp"], p["ws"], p.get("b"),
+            group=p["wp"].shape[-2] * 2 // p["ws"].shape[-2],
+            use_ref=jax.default_backend() == "cpu",
+        ).astype(x.dtype)
+    raise KeyError(f"unrecognized linear params: {sorted(p)}")
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype) + b.astype(x.dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+# ---------------------------------------------------------------------------
+# RoPE (partial-fraction aware)
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions: jax.Array, head_dim: int, fraction: float, theta: float):
+    """cos/sin tables for the rotated sub-dimension. positions: (...,)"""
+    rot = int(head_dim * fraction) // 2 * 2
+    if rot == 0 or theta <= 0:
+        return None
+    freqs = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., rot/2)
+    return jnp.cos(ang), jnp.sin(ang), rot
+
+
+def apply_rope(x: jax.Array, tables) -> jax.Array:
+    """x: (B, S, H, hd); tables from rope_tables with positions (B, S)."""
+    if tables is None:
+        return x
+    cos, sin, rot = tables
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1) if xp.shape[-1] else yr
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (train / prefill / decode-with-cache)
+# ---------------------------------------------------------------------------
+
+
+def _sdpa(q, k, v, mask) -> jax.Array:
+    """q: (B,Sq,H,hd), k: (B,Sk,KV,hd), v: (B,Sk,KV,hd_v); GQA via head
+    grouping; qk and v head dims may differ (MLA). f32 softmax."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / (hd**0.5)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+# memory-efficient causal attention: never materializes the (Sq, Sk) score
+# matrix — online-softmax over KV blocks (flash-attention recurrence), with
+# fully-masked blocks skipped via lax.cond. Used by every train/prefill path
+# once S exceeds _ATTN_CHUNK; without it the 4k/32k shapes need O(S^2) temp
+# (hundreds of GB/device at 32k — see EXPERIMENTS.md §Perf iteration log).
+_ATTN_CHUNK = 512
+
+
+def _shard_heads(x: jax.Array, head_axis: int) -> jax.Array:
+    """Constrain an attention tensor's head dim over the TP axis (when it
+    divides) and its batch dim over dp. Without this the SPMD partitioner
+    re-gathers the full stacked K/V per flash step (measured 12 TB/device on
+    deepseek prefill — §Perf cell B iteration 1)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.models.context import get_mesh_context
+
+    ctx = get_mesh_context()
+    if ctx.mesh is None or ctx.tp_axis is None:
+        return x
+    tp = ctx.mesh.shape[ctx.tp_axis]
+    spec = [None] * x.ndim
+    dp = tuple(ctx.dp_axes)
+    dpn = 1
+    for a in dp:
+        dpn *= ctx.mesh.shape[a]
+    if dp and x.shape[0] % dpn == 0:
+        spec[0] = dp
+    if x.shape[head_axis] % tp == 0:
+        spec[head_axis] = ctx.tp_axis
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def _sdpa_causal_chunked(q, k, v, chunk: int = _ATTN_CHUNK) -> jax.Array:
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    hv = v.shape[-1]
+    if s % chunk != 0 or s <= chunk:
+        causal = jnp.tril(jnp.ones((s, s), bool))[None]
+        return _sdpa(q, k, v, causal)
+    n = s // chunk
+    scale = hd**-0.5
+    q = _shard_heads(q, 2)
+    k = _shard_heads(k, 2)
+    v = _shard_heads(v, 2)
+    qb = (q * scale).reshape(b, n, chunk, kv, g, hd)
+    kb = _shard_heads(k.reshape(b, n, chunk, kv, hd), 3)
+    vb = _shard_heads(v.reshape(b, n, chunk, kv, hv), 3)
+
+    def q_block(_, qi_and_q):
+        qi, qq = qi_and_q  # qq (B, cq, KV, G, hd)
+
+        def kv_step(carry, kj_and_kv):
+            kj, kk, vv = kj_and_kv
+
+            def compute(carry):
+                m, l, acc = carry
+                logits = jnp.einsum("bqkgh,bskh->bkgqs", qq, kk).astype(jnp.float32)
+                qpos = qi * chunk + jnp.arange(chunk)
+                kpos = kj * chunk + jnp.arange(chunk)
+                causal = qpos[:, None] >= kpos[None, :]
+                logits = jnp.where(causal[None, None, None], logits, -1e30)
+                m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+                p = jnp.exp(logits - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bkgqs,bskh->bkgqh", p.astype(vv.dtype), vv
+                ).astype(jnp.float32)
+                return m_new, l_new, acc_new
+
+            carry = jax.lax.cond(kj <= qi, compute, lambda c: c, carry)
+            return carry, None
+
+        init = (
+            jnp.full((b, kv, g, chunk), -1e30, jnp.float32),
+            jnp.zeros((b, kv, g, chunk), jnp.float32),
+            jnp.zeros((b, kv, g, chunk, hv), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (jnp.arange(n), kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KV, G, cq, hv)
+        return None, out.transpose(0, 3, 1, 2, 4).astype(v.dtype)  # (B, cq, KV, G, hv)
+
+    _, blocks = jax.lax.scan(
+        q_block, None, (jnp.arange(n), qb.transpose(1, 0, 2, 3, 4, 5))
+    )
+    # blocks: (n, B, cq, KV, G, hv)
+    return blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hv)
+
+
+def sdpa_causal(q, k, v) -> jax.Array:
+    """Causal attention, memory-efficient for long sequences."""
+    return _sdpa_causal_chunked(q, k, v)
+
+
+def attention_train(p: dict, x: jax.Array, cfg: ModelConfig, positions=None,
+                    segment_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence causal attention (training / prefill)."""
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(p["q"], x).reshape(b, s, h, hd)
+    k = linear(p["k"], x).reshape(b, s, kvh, hd)
+    v = linear(p["v"], x).reshape(b, s, kvh, hd)
+    if positions is None:
+        positions = jnp.arange(s)[None, :].astype(jnp.int32) * jnp.ones((b, 1), jnp.int32)
+    tables = rope_tables(positions, hd, cfg.rope_fraction, cfg.rope_theta)
+    q = apply_rope(q, tables)
+    k = apply_rope(k, tables)
+    if segment_mask is not None:
+        causal = jnp.tril(jnp.ones((s, s), bool))[None] & segment_mask
+        out = _sdpa(q, k, v, causal)
+    else:
+        out = sdpa_causal(q, k, v)
+    return linear(p["o"], out.reshape(b, s, h * hd))
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+                  dtype=DTYPE) -> dict:
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((n_layers, batch, max_len, kvh, hd), dtype),
+        "v": jnp.zeros((n_layers, batch, max_len, kvh, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def attention_decode(p: dict, x: jax.Array, cfg: ModelConfig, k_cache, v_cache,
+                     pos: jax.Array):
+    """One-token decode: x (B, 1, D); cache (B, S_max, KV, hd); pos scalar.
+
+    Returns (out, new_k, new_v)."""
+    out, kt, vt = attention_decode_ro(p, x, cfg, k_cache, v_cache, pos)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, kt.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, vt.astype(v_cache.dtype), (0, pos, 0, 0))
+    return out, k_cache, v_cache
+
+
+def attention_decode_ro(p: dict, x: jax.Array, cfg: ModelConfig, k_cache, v_cache,
+                        pos: jax.Array):
+    """Read-only-cache decode attention (§Perf optimization).
+
+    The naive formulation updates the cache INSIDE the layer scan, which
+    makes the scan write every layer's full (B, S, KV, hd) cache slice back
+    per token (2 x cache bytes of HBM write traffic per step). Here the scan
+    reads the cache read-only and attends over [cache(<pos), current token];
+    the caller batches ONE one-token dynamic-update-slice per layer after the
+    scan. Returns (out, k_t, v_t)."""
+    b, sq, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(p["q"], x).reshape(b, sq, h, hd)
+    kt = linear(p["k"], x).reshape(b, sq, kvh, hd)
+    vt = linear(p["v"], x).reshape(b, sq, kvh, hd)
+    positions = jnp.full((b, sq), pos, jnp.int32)
+    tables = rope_tables(positions, hd, cfg.rope_fraction, cfg.rope_theta)
+    q = apply_rope(q, tables)
+    kt = apply_rope(kt, tables)
+
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    s_max = k_cache.shape[1]
+    logits_c = jnp.einsum("bskgh,btkh->bkgst", qg, k_cache).astype(jnp.float32)
+    logits_c = logits_c / (hd**0.5)
+    mask = jnp.arange(s_max)[None, None, None, None, :] < pos  # strict: self handled below
+    logits_c = jnp.where(mask, logits_c, -1e30)
+    logit_s = jnp.einsum("bskgh,bskh->bkgs", qg, kt).astype(jnp.float32)[..., None] / (hd**0.5)
+    m = jnp.maximum(jnp.max(logits_c, axis=-1, keepdims=True), logit_s)
+    pc = jnp.exp(logits_c - m)
+    ps = jnp.exp(logit_s - m)
+    den = jnp.sum(pc, axis=-1, keepdims=True) + ps
+    out = jnp.einsum("bkgst,btkh->bskgh", (pc / den).astype(v_cache.dtype), v_cache)
+    out = out + (ps / den)[..., 0][..., None].transpose(0, 3, 1, 2, 4).astype(vt.dtype) * vt[:, :, :, None, :]
+    out = out.reshape(b, sq, h, hd)
+    return linear(p["o"], out.reshape(b, sq, h * hd)), kt, vt
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, f: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, f),
+        "up": dense_init(k2, d, f),
+        "down": dense_init(k3, f, d),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    return linear(p["down"], swiglu(linear(p["gate"], x), linear(p["up"], x)))
+
+
+def attn_init(key, cfg: ModelConfig, d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "q": dense_init(k1, d, h * hd, bias=cfg.qkv_bias),
+        "k": dense_init(k2, d, kvh * hd, bias=cfg.qkv_bias),
+        "v": dense_init(k3, d, kvh * hd, bias=cfg.qkv_bias),
+        "o": dense_init(k4, h * hd, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab: int) -> jax.Array:
+    """Mean CE over tokens; labels < 0 are masked out."""
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def _shard_logits(x: jax.Array) -> jax.Array:
+    """Constrain chunk logits to (dp, None, model) — without this the SPMD
+    partitioner replicates the f32 logits over the model axis (measured:
+    2 full-vocab copies = 40 GB/device at 4k seq; EXPERIMENTS §Perf)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.models.context import get_mesh_context
+
+    ctx = get_mesh_context()
+    if ctx.mesh is None or ctx.tp_axis is None:
+        return x
+    spec = P(tuple(ctx.dp_axes) or None, None, ctx.tp_axis)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+_CE_CHUNK = 256
+
+
+def cross_entropy_chunked(hidden: jax.Array, labels: jax.Array, unembed_fn,
+                          chunk: int = _CE_CHUNK) -> jax.Array:
+    """Memory-bounded CE: unembed + log-softmax one sequence-chunk at a time
+    (rematerialized in backward), so full-sequence f32 logits never exist.
+
+    hidden: (B, S, D) post-final-norm; unembed_fn: (B, c, D) -> (B, c, V).
+    """
+    b, s, d = hidden.shape
+    if s % chunk != 0 or s <= chunk:
+        logits = _shard_logits(unembed_fn(hidden).astype(jnp.float32))
+        return cross_entropy(logits, labels, 0)
+    n = s // chunk
+    hs = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        xc, lc = xs
+        logits = _shard_logits(unembed_fn(xc).astype(jnp.float32))
+        mask = lc >= 0
+        safe = jnp.where(mask, lc, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        return (carry[0] + jnp.sum(nll * mask), carry[1] + jnp.sum(mask)), None
+
+    body = jax.checkpoint(body)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hs, ls)
+    )
+    return tot / jnp.maximum(cnt, 1)

@@ -1,0 +1,65 @@
+"""Mesh context for mesh-aware layers (MoE expert parallelism, KV-sequence
+sharding). The launcher sets this before tracing; smoke tests leave it unset
+and layers take their collective-free local paths.
+
+This is deliberately a trace-time (static) context, not a traced value:
+the presence/size of mesh axes changes the *program structure* (shard_map
+blocks, all_to_all), which must be decided at trace time anyway.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+from jax.sharding import Mesh
+
+__all__ = ["MeshContext", "set_mesh_context", "get_mesh_context", "mesh_context"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    mesh: Optional[Mesh] = None
+    dp_axes: tuple[str, ...] = ()  # batch / FSDP axes ("pod", "data")
+    tp_axis: Optional[str] = None  # tensor-parallel axis ("model")
+    ep_axis: Optional[str] = None  # expert-parallel axis (usually == tp_axis)
+    fsdp_axes: tuple[str, ...] = ()  # parameter-sharding axes for ZeRO-3
+    seq_axis: Optional[str] = None  # KV/sequence sharding axis for long decode
+
+    @property
+    def ep_size(self) -> int:
+        if self.mesh is None or self.ep_axis is None:
+            return 1
+        return self.mesh.shape[self.ep_axis]
+
+    @property
+    def token_axes(self) -> tuple[str, ...]:
+        """Axes the flattened token dim is sharded over for MoE dispatch."""
+        axes = tuple(self.dp_axes)
+        if self.ep_axis:
+            axes = axes + (self.ep_axis,)
+        return axes
+
+
+_CTX = MeshContext()
+
+
+def set_mesh_context(ctx: MeshContext) -> None:
+    global _CTX
+    _CTX = ctx
+
+
+def get_mesh_context() -> MeshContext:
+    return _CTX
+
+
+@contextlib.contextmanager
+def mesh_context(ctx: MeshContext):
+    global _CTX
+    prev = _CTX
+    _CTX = ctx
+    try:
+        yield
+    finally:
+        _CTX = prev

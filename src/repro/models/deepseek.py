@@ -1,0 +1,224 @@
+"""DeepSeek-V3: MLA attention + (first_k_dense dense layers, then MoE layers
+with 1 shared + 256 routed experts, top-8) + optional MTP head.
+
+Two scan-stacked parameter groups (dense_layers / moe_layers) keep the HLO
+size depth-independent while honoring the heterogeneous layer stack.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import common as C
+from repro.models.mla import (
+    mla_decode,
+    mla_init,
+    mla_init_cache,
+    mla_prefill_layer,
+    mla_train,
+)
+from repro.models.moe_layer import moe_ffn, moe_init
+
+
+def _dense_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": mla_init(k1, cfg),
+        "mlp": C.mlp_init(k2, cfg.d_model, cfg.d_ff),
+        "ln1": jnp.ones((cfg.d_model,), C.DTYPE),
+        "ln2": jnp.ones((cfg.d_model,), C.DTYPE),
+    }
+
+
+def _moe_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": mla_init(k1, cfg),
+        "moe": moe_init(k2, cfg),
+        "ln1": jnp.ones((cfg.d_model,), C.DTYPE),
+        "ln2": jnp.ones((cfg.d_model,), C.DTYPE),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ke, kd, km, kh, kt = jax.random.split(key, 5)
+    nd = cfg.first_k_dense
+    nm = cfg.n_layers - nd
+    dense_layers = jax.vmap(lambda k: _dense_layer_init(k, cfg))(jax.random.split(kd, nd))
+    moe_layers = jax.vmap(lambda k: _moe_layer_init(k, cfg))(jax.random.split(km, nm))
+    p = {
+        "embed": C.embed_init(ke, cfg.padded_vocab, cfg.d_model),
+        "dense_layers": dense_layers,
+        "moe_layers": moe_layers,
+        "ln_f": jnp.ones((cfg.d_model,), C.DTYPE),
+        "head": C.dense_init(kh, cfg.d_model, cfg.padded_vocab),
+    }
+    if cfg.mtp:
+        k1, k2 = jax.random.split(kt)
+        p["mtp"] = {
+            "proj": C.dense_init(k1, 2 * cfg.d_model, cfg.d_model),
+            "layer": _dense_layer_init(k2, cfg.replace(d_ff=cfg.d_ff_expert * 4)),
+            "ln_in": jnp.ones((2 * cfg.d_model,), C.DTYPE),
+        }
+    return p
+
+
+def _dense_block(lp, x, cfg):
+    x = x + mla_train(lp["attn"], C.rmsnorm(x, lp["ln1"], cfg.norm_eps), cfg)
+    return x + C.mlp_apply(lp["mlp"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+
+
+def _moe_block(lp, x, aux, cfg):
+    x = x + mla_train(lp["attn"], C.rmsnorm(x, lp["ln1"], cfg.norm_eps), cfg)
+    m, a = moe_ffn(lp["moe"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg)
+    return x + m, aux + a
+
+
+def _trunk(params: dict, cfg: ModelConfig, tokens: jax.Array):
+    x = C.embed_lookup(params["embed"], tokens)
+
+    def dbody(x, lp):
+        return _dense_block(lp, x, cfg), None
+
+    def mbody(carry, lp):
+        x, aux = carry
+        x, aux = _moe_block(lp, x, aux, cfg)
+        return (x, aux), None
+
+    if cfg.remat:
+        dbody = jax.checkpoint(dbody)
+        mbody = jax.checkpoint(mbody)
+    x, _ = jax.lax.scan(dbody, x, params["dense_layers"])
+    (x, aux), _ = jax.lax.scan(mbody, (x, jnp.zeros((), jnp.float32)), params["moe_layers"])
+    return x, aux / max(1, cfg.n_layers - cfg.first_k_dense)
+
+
+def _head(params):
+    return lambda xc: C.linear(params["head"], xc)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array):
+    x, aux = _trunk(params, cfg, tokens)
+    return _unembed(params, cfg, x), aux, x
+
+
+def _unembed(params, cfg, x):
+    x = C.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return C.linear(params["head"], x)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    tokens, labels = batch["tokens"], batch["labels"]
+    h_final, aux = _trunk(params, cfg, tokens)
+    hn = C.rmsnorm(h_final, params["ln_f"], cfg.norm_eps)
+    ce = C.cross_entropy_chunked(hn[:, :-1], labels[:, 1:], _head(params))
+    loss = ce + cfg.router_aux_weight * aux
+    if cfg.mtp and "mtp" in params:
+        # Multi-token prediction: predict t+2 from (h_t, emb(tok_{t+1}))
+        mp = params["mtp"]
+        emb_next = C.embed_lookup(params["embed"], tokens[:, 1:])
+        h = h_final[:, :-1]
+        cat = jnp.concatenate([h, emb_next.astype(h.dtype)], axis=-1)
+        cat = C.rmsnorm(cat, mp["ln_in"], cfg.norm_eps)
+        h_mtp = C.linear(mp["proj"], cat)
+        h_mtp = _dense_block(mp["layer"], h_mtp, cfg.replace(d_ff=cfg.d_ff_expert * 4))
+        h_mtp = C.rmsnorm(h_mtp, params["ln_f"], cfg.norm_eps)
+        ce_mtp = C.cross_entropy_chunked(h_mtp[:, :-1], labels[:, 2:], _head(params))
+        loss = loss + 0.3 * ce_mtp
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=C.DTYPE):
+    return mla_init_cache(cfg, batch, max_len, cfg.n_layers, dtype)
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict):
+    x = C.embed_lookup(params["embed"], tokens)
+    b, s, _ = x.shape
+
+    def dbody(x, lp):
+        h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        att, ckv, krope = mla_prefill_layer(lp["attn"], h, cfg)
+        x = x + att
+        x = x + C.mlp_apply(lp["mlp"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+        return x, (ckv, krope)
+
+    def mbody(x, lp):
+        h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        att, ckv, krope = mla_prefill_layer(lp["attn"], h, cfg)
+        x = x + att
+        m, _ = moe_ffn(lp["moe"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg)
+        return x + m, (ckv, krope)
+
+    x, (ckv_d, kr_d) = jax.lax.scan(dbody, x, params["dense_layers"])
+    x, (ckv_m, kr_m) = jax.lax.scan(mbody, x, params["moe_layers"])
+    ckv = jnp.concatenate([ckv_d, ckv_m], axis=0)
+    krope = jnp.concatenate([kr_d, kr_m], axis=0)
+    state = {
+        "ckv": jax.lax.dynamic_update_slice(
+            state["ckv"], ckv.astype(state["ckv"].dtype), (0, 0, 0, 0)
+        ),
+        "krope": jax.lax.dynamic_update_slice(
+            state["krope"], krope.astype(state["krope"].dtype), (0, 0, 0, 0)
+        ),
+        "pos": jnp.asarray(s, jnp.int32),
+    }
+    return _unembed(params, cfg, x[:, -1:]), state
+
+
+def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
+    x = C.embed_lookup(params["embed"], tokens)
+    pos = state["pos"]
+    nd = cfg.first_k_dense
+
+    def dbody(x, lp_cache):
+        lp, ckv, krope = lp_cache
+        h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        att, ckv, krope = mla_decode(lp["attn"], h, cfg, ckv, krope, pos)
+        x = x + att
+        x = x + C.mlp_apply(lp["mlp"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+        return x, (ckv, krope)
+
+    def mbody(x, lp_cache):
+        lp, ckv, krope = lp_cache
+        h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        att, ckv, krope = mla_decode(lp["attn"], h, cfg, ckv, krope, pos)
+        x = x + att
+        m, _ = moe_ffn(lp["moe"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg)
+        return x + m, (ckv, krope)
+
+    x, (ckv_d, kr_d) = jax.lax.scan(
+        dbody, x, (params["dense_layers"], state["ckv"][:nd], state["krope"][:nd])
+    )
+    x, (ckv_m, kr_m) = jax.lax.scan(
+        mbody, x, (params["moe_layers"], state["ckv"][nd:], state["krope"][nd:])
+    )
+    new_state = {
+        "ckv": jnp.concatenate([ckv_d, ckv_m], axis=0),
+        "krope": jnp.concatenate([kr_d, kr_m], axis=0),
+        "pos": pos + 1,
+    }
+    return _unembed(params, cfg, x), new_state
+
+
+def count_params(cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    attn = d * qr + qr * h * (nope + rope) + d * (kvr + rope) + kvr * h * (nope + vd) + h * vd * d
+    dense_mlp = 3 * d * cfg.d_ff
+    expert = 3 * d * cfg.d_ff_expert
+    nd, nm = cfg.first_k_dense, cfg.n_layers - cfg.first_k_dense
+    shared = cfg.n_shared_experts * expert
+    total = nd * (attn + dense_mlp) + nm * (attn + cfg.n_experts * expert + shared + d * cfg.n_experts)
+    active = nd * (attn + dense_mlp) + nm * (attn + cfg.top_k * expert + shared + d * cfg.n_experts)
+    emb = cfg.padded_vocab * d * 2
+    return total + emb, active + emb

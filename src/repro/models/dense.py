@@ -1,0 +1,209 @@
+"""Dense decoder-only transformer (qwen2 / stablelm / phi4 / internlm2 /
+llama3 / qwen3) and the VLM variant (internvl2: stub patch embeddings
+prepended to the token sequence).
+
+Layers are scan-stacked: params["layers"] holds (L, ...) arrays and the
+forward pass is a single jax.lax.scan over layers — essential to keep HLO
+size and SPMD-partitioning time flat in depth for the 512-device dry-run.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import common as C
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": C.attn_init(k1, cfg),
+        "mlp": C.mlp_init(k2, cfg.d_model, cfg.d_ff),
+        "ln1": jnp.ones((cfg.d_model,), C.DTYPE),
+        "ln2": jnp.ones((cfg.d_model,), C.DTYPE),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: layer_init(k, cfg))(layer_keys)
+    p = {
+        "embed": C.embed_init(ke, cfg.padded_vocab, cfg.d_model),
+        "layers": layers,
+        "ln_f": jnp.ones((cfg.d_model,), C.DTYPE),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = C.dense_init(kh, cfg.d_model, cfg.padded_vocab)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block_train(lp: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = x + C.attention_train(lp["attn"], C.rmsnorm(x, lp["ln1"], cfg.norm_eps), cfg)
+    return h + C.mlp_apply(lp["mlp"], C.rmsnorm(h, lp["ln2"], cfg.norm_eps))
+
+
+def _embed(params, cfg: ModelConfig, tokens: jax.Array, patches=None) -> jax.Array:
+    x = C.embed_lookup(params["embed"], tokens)
+    if patches is not None:  # VLM: prepend stub patch embeddings
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    return x
+
+
+def head_fn(params, cfg: ModelConfig):
+    """Chunk-applicable unembed: (B, c, D) -> (B, c, V)."""
+    if cfg.tie_embeddings:
+        return lambda xc: jnp.einsum("bsd,vd->bsv", xc, C.embed_attend(params["embed"]).astype(xc.dtype))
+    return lambda xc: C.linear(params["head"], xc)
+
+
+def _unembed(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    return head_fn(params, cfg)(C.rmsnorm(x, params["ln_f"], cfg.norm_eps))
+
+
+def hidden_states(params: dict, cfg: ModelConfig, tokens: jax.Array, patches=None) -> jax.Array:
+    x = _embed(params, cfg, tokens, patches)
+
+    def body(x, lp):
+        return _block_train(lp, x, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return C.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, patches=None) -> jax.Array:
+    """tokens (B, S) -> logits (B, S[, +P], padded_vocab)."""
+    return head_fn(params, cfg)(hidden_states(params, cfg, tokens, patches))
+
+
+def forward_with_taps(params: dict, cfg: ModelConfig, tokens: jax.Array):
+    """Forward that also returns per-layer calibration activations:
+    {'attn': (L, T, D) ln1 outputs, 'mlp': (L, T, D) ln2 outputs} — the
+    inputs seen by the q/k/v and gate/up linears (the paper's per-layer
+    calibration set)."""
+    x = _embed(params, cfg, tokens)
+
+    def body(x, lp):
+        h1 = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        h = x + C.attention_train(lp["attn"], h1, cfg)
+        h2 = C.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        out = h + C.mlp_apply(lp["mlp"], h2)
+        b, s, d = h1.shape
+        return out, (h1.reshape(b * s, d), h2.reshape(b * s, d))
+
+    x, (t1, t2) = jax.lax.scan(body, x, params["layers"])
+    logits = _unembed(params, cfg, x)
+    return logits, {"attn": t1, "mlp": t2}
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    patches = batch.get("patches")
+    h = hidden_states(params, cfg, batch["tokens"], patches)
+    if patches is not None:
+        h = h[:, patches.shape[1] :]  # loss on the text positions only
+    return C.cross_entropy_chunked(h[:, :-1], batch["labels"][:, 1:], head_fn(params, cfg))
+
+
+# ---------------------------------------------------------------------------
+# serving (prefill + decode with KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=C.DTYPE) -> dict:
+    return C.init_kv_cache(cfg, batch, max_len, cfg.n_layers, dtype)
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict,
+            patches=None):
+    """Run the prompt, filling the cache. Returns (last_logits, state)."""
+    x = _embed(params, cfg, tokens, patches)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :] * jnp.ones((b, 1), jnp.int32)
+
+    def body(x, lp):
+        h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        bb, ss, _ = h.shape
+        hh, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = C.linear(lp["attn"]["q"], h).reshape(bb, ss, hh, hd)
+        k = C.linear(lp["attn"]["k"], h).reshape(bb, ss, kvh, hd)
+        v = C.linear(lp["attn"]["v"], h).reshape(bb, ss, kvh, hd)
+        tables = C.rope_tables(positions, hd, cfg.rope_fraction, cfg.rope_theta)
+        q = C.apply_rope(q, tables)
+        k = C.apply_rope(k, tables)
+        att = C.sdpa_causal(q, k, v)
+        x = x + C.linear(lp["attn"]["o"], att.reshape(bb, ss, hh * hd))
+        x = x + C.mlp_apply(lp["mlp"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+        return x, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    s_max = state["k"].shape[2]
+    state = {
+        "k": jax.lax.dynamic_update_slice(state["k"], ks.astype(state["k"].dtype), (0, 0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(state["v"], vs.astype(state["v"].dtype), (0, 0, 0, 0, 0)),
+        "pos": jnp.asarray(s, jnp.int32),
+    }
+    return _unembed(params, cfg, x[:, -1:]), state
+
+
+def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
+    """tokens (B, 1) -> (logits (B, 1, V), new state). One new token with a
+    KV cache of max_len (the `decode_*` / `long_*` shapes lower THIS).
+
+    The layer scan reads the cache READ-ONLY and emits each layer's one-token
+    (k_t, v_t); the cache is updated with a single batched one-token write
+    after the scan — per-step cache write traffic is O(L·B·KV·hd), not
+    O(L·B·S·KV·hd) (§Perf cell C iteration 2)."""
+    x = C.embed_lookup(params["embed"], tokens)
+    pos = state["pos"]
+
+    def body(x, lp_cache):
+        lp, kc, vc = lp_cache
+        h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        att, kt, vt = C.attention_decode_ro(lp["attn"], h, cfg, kc, vc, pos)
+        x = x + att
+        x = x + C.mlp_apply(lp["mlp"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+        return x, (kt, vt)
+
+    x, (kts, vts) = jax.lax.scan(body, x, (params["layers"], state["k"], state["v"]))
+    new_state = {
+        "k": jax.lax.dynamic_update_slice(
+            state["k"], kts.astype(state["k"].dtype), (0, 0, pos, 0, 0)
+        ),
+        "v": jax.lax.dynamic_update_slice(
+            state["v"], vts.astype(state["v"].dtype), (0, 0, pos, 0, 0)
+        ),
+        "pos": pos + 1,
+    }
+    return _unembed(params, cfg, x), new_state
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg: ModelConfig) -> tuple[int, int]:
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim
+    attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+    mlp = 3 * d * f
+    per_layer = attn + mlp + 2 * d
+    emb = cfg.padded_vocab * d * (1 if cfg.tie_embeddings else 2)
+    total = cfg.n_layers * per_layer + emb + d
+    return total, total

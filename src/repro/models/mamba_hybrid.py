@@ -1,0 +1,398 @@
+"""Zamba2-style hybrid: Mamba2 (SSD) trunk + a weight-shared attention/MLP
+block invoked every ``shared_attn_every`` layers on concat(hidden, embed0),
+projected back through a per-invocation adapter (the Zamba re-injection).
+
+Mamba2 uses the chunked SSD algorithm for train/prefill (scan over chunks
+carrying the (H, P, N) state) and the O(1) recurrence for decode — which is
+what makes the long_500k decode shape runnable for this family. The shared
+attention block keeps an ordinary KV cache per invocation; at 500k decode the
+cache's sequence dim is sharded over the mesh (plain einsum ops — XLA SPMD
+partitions the masked softmax reductions, no shard_map needed).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import common as C
+
+# §Perf cell A' napkin math: SSD state traffic/token ~ H*P*N/chunk, intra-
+# chunk bytes/token ~ chunk — crossover for (P=N=64) is ~128
+CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _mamba_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner_ssm
+    n = cfg.ssm_state
+    h = cfg.n_ssm_heads
+    k = jax.random.split(key, 4)
+    return {
+        "ln": jnp.ones((d,), C.DTYPE),
+        "in_proj": C.dense_init(k[0], d, 2 * di + 2 * n + h),
+        "conv": (jax.random.normal(k[1], (cfg.ssm_conv, di + 2 * n)) * 0.1).astype(C.DTYPE),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus(-2) ~ 0.12
+        "gn": jnp.ones((di,), C.DTYPE),
+        "out_proj": C.dense_init(k[2], di, d),
+    }
+
+
+def _shared_block_init(key, cfg: ModelConfig) -> dict:
+    d2 = 2 * cfg.d_model
+    h, hd = cfg.n_heads, cfg.head_dim
+    k = jax.random.split(key, 7)
+    return {
+        "ln1": jnp.ones((d2,), C.DTYPE),
+        "q": C.dense_init(k[0], d2, h * hd),
+        "k": C.dense_init(k[1], d2, h * hd),
+        "v": C.dense_init(k[2], d2, h * hd),
+        "o": C.dense_init(k[3], h * hd, h * hd),
+        "ln2": jnp.ones((d2,), C.DTYPE),
+        "mlp": {
+            "gate": C.dense_init(k[4], d2, cfg.d_ff),
+            "up": C.dense_init(k[5], d2, cfg.d_ff),
+            "down": C.dense_init(k[6], cfg.d_ff, h * hd),
+        },
+    }
+
+
+def _segments(cfg: ModelConfig):
+    every = cfg.shared_attn_every
+    if every <= 0:
+        return 0, cfg.n_layers, cfg.n_layers
+    n_seg = cfg.n_layers // every
+    rest = cfg.n_layers - n_seg * every
+    return n_seg, every, rest
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ke, km, ks, ka, kr, kh = jax.random.split(key, 6)
+    n_seg, every, rest = _segments(cfg)
+    p = {
+        "embed": C.embed_init(ke, cfg.padded_vocab, cfg.d_model),
+        "ln_f": jnp.ones((cfg.d_model,), C.DTYPE),
+        "head": C.dense_init(kh, cfg.d_model, cfg.padded_vocab),
+    }
+    if n_seg == 0:
+        p["m_layers"] = jax.vmap(lambda k: _mamba_init(k, cfg))(jax.random.split(km, cfg.n_layers))
+    else:
+        mkeys = jax.random.split(km, n_seg * every).reshape(n_seg, every, 2)
+        p["m_layers"] = jax.vmap(jax.vmap(lambda k: _mamba_init(k, cfg)))(mkeys)
+        p["shared"] = _shared_block_init(ks, cfg)
+        adapters = jax.vmap(
+            lambda k: C.dense_init(k, cfg.n_heads * cfg.head_dim, cfg.d_model)
+        )(jax.random.split(ka, n_seg))
+        p["adapters"] = adapters
+        if rest:
+            p["rest_layers"] = jax.vmap(lambda k: _mamba_init(k, cfg))(jax.random.split(kr, rest))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD core
+# ---------------------------------------------------------------------------
+
+
+def _ssd_chunkwise(x, dt, A, Bm, Cm, state):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N); state: (B,H,P,N)."""
+    b, s, h, pdim = x.shape
+    n = Bm.shape[-1]
+    nc = s // CHUNK
+    l = CHUNK
+    xf = x.astype(jnp.float32).reshape(b, nc, l, h, pdim)
+    dtf = dt.reshape(b, nc, l, h)
+    Bf = Bm.astype(jnp.float32).reshape(b, nc, l, n)
+    Cf = Cm.astype(jnp.float32).reshape(b, nc, l, n)
+    la = dtf * A[None, None, None, :]  # (B,nc,l,H) log decay (<= 0)
+
+    def chunk_step(st, xs):
+        xx, dd, bb, cc, ll = xs  # (B,l,H,P), (B,l,H), (B,l,N), (B,l,N), (B,l,H)
+        F = jnp.cumsum(ll, axis=1)  # (B,l,H)
+        # intra-chunk: y_t = sum_{s<=t} exp(F_t - F_s) dt_s (C_t . B_s) x_s
+        w = F[:, :, None, :] - F[:, None, :, :]  # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((l, l), bool))[None, :, :, None]
+        # mask in log-space BEFORE exp: masked entries have F_t - F_s > 0 and
+        # exp overflows, poisoning the where() gradient with 0*inf
+        w = jnp.exp(jnp.where(tri, w, -1e30))
+        cb = jnp.einsum("btn,bsn->bts", cc, bb)[:, :, :, None]  # (B,t,s,1)
+        scores = cb * w * dd[:, None, :, :]  # (B,t,s,H)
+        y = jnp.einsum("btsh,bshp->bthp", scores, xx)
+        # inter-chunk
+        y = y + jnp.exp(F)[..., None] * jnp.einsum("btn,bhpn->bthp", cc, st)
+        # state update
+        g = F[:, -1]  # (B,H)
+        wk = jnp.exp(g[:, None, :] - F) * dd  # (B,l,H)
+        st_new = jnp.exp(g)[:, :, None, None] * st + jnp.einsum(
+            "blhp,bln,blh->bhpn", xx, bb, wk
+        )
+        return st_new, y
+
+    xs = (
+        xf.transpose(1, 0, 2, 3, 4), dtf.transpose(1, 0, 2, 3),
+        Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3), la.transpose(1, 0, 2, 3),
+    )
+    state, ys = jax.lax.scan(chunk_step, state, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, pdim)
+    return y, state
+
+
+def _ssd_step(x, dt, A, Bm, Cm, state):
+    """Single-step recurrence. x: (B,1,H,P); state: (B,H,P,N)."""
+    xf = x[:, 0].astype(jnp.float32)
+    dd = dt[:, 0]
+    bb = Bm[:, 0].astype(jnp.float32)
+    cc = Cm[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dd * A[None, :])  # (B,H)
+    state = decay[:, :, None, None] * state + jnp.einsum(
+        "bhp,bn,bh->bhpn", xf, bb, dd
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cc, state)
+    return y[:, None], state
+
+
+def _mamba_block(lp, x, cfg: ModelConfig, state=None, conv_state=None, step=False):
+    b, s, d = x.shape
+    di, n, h = cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads
+    pdim = cfg.ssm_head_dim
+    hin = C.rmsnorm(x, lp["ln"], cfg.norm_eps)
+    proj = C.linear(lp["in_proj"], hin)
+    z = proj[..., :di]
+    xbc = proj[..., di : 2 * di + 2 * n]
+    dt_raw = proj[..., 2 * di + 2 * n :].astype(jnp.float32)  # (B,S,H)
+    # causal depthwise conv over [x, B, C]
+    k = lp["conv"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((b, k - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    xbc = sum(xp[:, i : i + s, :] * lp["conv"][i][None, None, :] for i in range(k))
+    new_conv = xp[:, -(k - 1) :, :]
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs = xbc[..., :di].reshape(b, s, h, pdim)
+    Bm = xbc[..., di : di + n]
+    Cm = xbc[..., di + n :]
+    dt = jax.nn.softplus(dt_raw + lp["dt_bias"][None, None, :])
+    A = -jnp.exp(lp["A_log"])
+    if state is None:
+        state = jnp.zeros((b, h, pdim, n), jnp.float32)
+    core = _ssd_step if step else _ssd_chunkwise
+    y, state = core(xs, dt, A, Bm, Cm, state)
+    y = y + lp["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = C.rmsnorm(y, lp["gn"], cfg.norm_eps) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return x + C.linear(lp["out_proj"], y), state, new_conv
+
+
+# ---------------------------------------------------------------------------
+# shared attention block (Zamba re-injection)
+# ---------------------------------------------------------------------------
+
+
+def _shared_attn(sp, adapter, x, emb0, cfg: ModelConfig, cache=None, pos=None):
+    """x: (B,S,D); emb0: (B,S,D) original embeddings. Returns (delta, new_kv)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    cat = jnp.concatenate([x, emb0.astype(x.dtype)], axis=-1)
+    hin = C.rmsnorm(cat, sp["ln1"], cfg.norm_eps)
+    q = C.linear(sp["q"], hin).reshape(b, s, h, hd)
+    k = C.linear(sp["k"], hin).reshape(b, s, h, hd)
+    v = C.linear(sp["v"], hin).reshape(b, s, h, hd)
+    positions = (
+        jnp.arange(s)[None, :] * jnp.ones((b, 1), jnp.int32)
+        if pos is None
+        else jnp.full((b, s), pos, jnp.int32)
+    )
+    tables = C.rope_tables(positions, hd, 1.0, 10000.0)
+    q = C.apply_rope(q, tables)
+    k = C.apply_rope(k, tables)
+    if cache is None:
+        att = C.sdpa_causal(q, k, v)
+        new_kv = (k, v)
+    else:
+        kc, vc = cache
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos, 0, 0))
+        mask = (jnp.arange(kc.shape[1])[None, None, :] <= pos) * jnp.ones((b, s, 1), bool)
+        att = C._sdpa(q, kc, vc, mask)
+        new_kv = (kc, vc)
+    y = C.linear(sp["o"], att.reshape(b, s, h * hd))
+    y = y + C.linear(
+        sp["mlp"]["down"],
+        C.swiglu(C.linear(sp["mlp"]["gate"], C.rmsnorm(cat, sp["ln2"], cfg.norm_eps)),
+                 C.linear(sp["mlp"]["up"], C.rmsnorm(cat, sp["ln2"], cfg.norm_eps))),
+    )
+    return C.linear(adapter, y), new_kv
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, tokens):
+    x = C.embed_lookup(params["embed"], tokens)
+    emb0 = x
+    b, s, d = x.shape
+    pad = (-s) % CHUNK
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        emb0 = jnp.pad(emb0, ((0, 0), (0, pad), (0, 0)))
+    n_seg, every, rest = _segments(cfg)
+
+    def m_body(x, lp):
+        out, _, _ = _mamba_block(lp, x, cfg)
+        return out, None
+
+    if cfg.remat:
+        m_body = jax.checkpoint(m_body)
+
+    if n_seg == 0:
+        x, _ = jax.lax.scan(m_body, x, params["m_layers"])
+    else:
+        def seg_body(x, seg):
+            mls, adapter = seg
+            x, _ = jax.lax.scan(m_body, x, mls)
+            delta, _ = _shared_attn(params["shared"], adapter, x, emb0, cfg)
+            return x + delta, None
+
+        if cfg.remat:
+            seg_body = jax.checkpoint(seg_body)
+        x, _ = jax.lax.scan(seg_body, x, (params["m_layers"], params["adapters"]))
+        if rest:
+            x, _ = jax.lax.scan(m_body, x, params["rest_layers"])
+    x = x[:, :s]
+    x = C.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return C.linear(params["head"], x)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    # trunk re-used from forward, but unembed is chunked
+    tokens = batch["tokens"]
+    x = C.embed_lookup(params["embed"], tokens)
+    emb0 = x
+    b, s, d = x.shape
+    pad = (-s) % CHUNK
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        emb0 = jnp.pad(emb0, ((0, 0), (0, pad), (0, 0)))
+    n_seg, every, rest = _segments(cfg)
+
+    def m_body(x, lp):
+        out, _, _ = _mamba_block(lp, x, cfg)
+        return out, None
+
+    if cfg.remat:
+        m_body = jax.checkpoint(m_body)
+
+    if n_seg == 0:
+        x, _ = jax.lax.scan(m_body, x, params["m_layers"])
+    else:
+        def seg_body(x, seg):
+            mls, adapter = seg
+            x, _ = jax.lax.scan(m_body, x, mls)
+            delta, _ = _shared_attn(params["shared"], adapter, x, emb0, cfg)
+            return x + delta, None
+
+        if cfg.remat:
+            seg_body = jax.checkpoint(seg_body)
+        x, _ = jax.lax.scan(seg_body, x, (params["m_layers"], params["adapters"]))
+        if rest:
+            x, _ = jax.lax.scan(m_body, x, params["rest_layers"])
+    h = C.rmsnorm(x[:, :s], params["ln_f"], cfg.norm_eps)
+    return C.cross_entropy_chunked(
+        h[:, :-1], batch["labels"][:, 1:], lambda xc: C.linear(params["head"], xc)
+    )
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=C.DTYPE):
+    n_seg, every, rest = _segments(cfg)
+    di, n, h_ssm = cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads
+    pdim = cfg.ssm_head_dim
+    kconv = cfg.ssm_conv
+    mshape = (n_seg, every) if n_seg else (cfg.n_layers,)
+    st = {
+        "ssm": jnp.zeros((*mshape, batch, h_ssm, pdim, n), jnp.float32),
+        "conv": jnp.zeros((*mshape, batch, kconv - 1, di + 2 * n), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if n_seg:
+        h, hd = cfg.n_heads, cfg.head_dim
+        st["shared_k"] = jnp.zeros((n_seg, batch, max_len, h, hd), dtype)
+        st["shared_v"] = jnp.zeros((n_seg, batch, max_len, h, hd), dtype)
+        if rest:
+            st["ssm_rest"] = jnp.zeros((rest, batch, h_ssm, pdim, n), jnp.float32)
+            st["conv_rest"] = jnp.zeros((rest, batch, kconv - 1, di + 2 * n), dtype)
+    return st
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens):
+    x = C.embed_lookup(params["embed"], tokens)
+    emb0 = x
+    pos = state["pos"]
+    n_seg, every, rest = _segments(cfg)
+
+    def m_body(x, lp_st):
+        lp, sst, cst = lp_st
+        out, sst, cst = _mamba_block(lp, x, cfg, sst, cst, step=True)
+        return out, (sst, cst)
+
+    if n_seg == 0:
+        x, (ssm, conv) = jax.lax.scan(m_body, x, (params["m_layers"], state["ssm"], state["conv"]))
+        new_state = {**state, "ssm": ssm, "conv": conv, "pos": pos + 1}
+    else:
+        def seg_body(x, seg):
+            mls, ssm, conv, adapter, kc, vc = seg
+            x, (ssm, conv) = jax.lax.scan(m_body, x, (mls, ssm, conv))
+            delta, (kc, vc) = _shared_attn(
+                params["shared"], adapter, x, emb0, cfg, cache=(kc, vc), pos=pos
+            )
+            return x + delta, (ssm, conv, kc, vc)
+
+        x, (ssm, conv, kc, vc) = jax.lax.scan(
+            seg_body, x,
+            (params["m_layers"], state["ssm"], state["conv"], params["adapters"],
+             state["shared_k"], state["shared_v"]),
+        )
+        new_state = {**state, "ssm": ssm, "conv": conv, "shared_k": kc, "shared_v": vc,
+                     "pos": pos + 1}
+        if rest:
+            x, (ssm_r, conv_r) = jax.lax.scan(
+                m_body, x, (params["rest_layers"], state["ssm_rest"], state["conv_rest"])
+            )
+            new_state.update(ssm_rest=ssm_r, conv_rest=conv_r)
+    x = C.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return C.linear(params["head"], x), new_state
+
+
+def prefill(params, cfg: ModelConfig, tokens, state):
+    x = C.embed_lookup(params["embed"], tokens)
+    h = forward(params, cfg, tokens)
+    logits = h[:, -1:]
+
+    def step(st, t):
+        lg, st = decode_step(params, cfg, st, t[:, None])
+        return st, ()
+
+    state, _ = jax.lax.scan(step, state, tokens.T)
+    return logits, state
+
+
+def count_params(cfg: ModelConfig):
+    d, di, n, h_ssm = cfg.d_model, cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads
+    m_layer = d * (2 * di + 2 * n + h_ssm) + cfg.ssm_conv * (di + 2 * n) + 3 * h_ssm + di * d + di + d
+    n_seg, every, rest = _segments(cfg)
+    d2, hhd = 2 * d, cfg.n_heads * cfg.head_dim
+    shared = 3 * d2 * hhd + hhd * hhd + 2 * d2 * cfg.d_ff + cfg.d_ff * hhd + 2 * d2
+    adapters = n_seg * hhd * d
+    total = cfg.n_layers * m_layer + (shared if n_seg else 0) + adapters + cfg.padded_vocab * d * 2 + d
+    return total, total

@@ -1,0 +1,128 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Train/prefill use the expanded form; decode uses the **absorbed** form that
+attends directly over the compressed latent cache (kv_lora + rope dims per
+position — MLA's memory advantage), absorbing the k-up-projection into the
+query and the v-up-projection into the output. This is the standard MLA
+decode optimization and is what makes the 32k-decode shape's KV bytes small.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import common as C
+
+
+def mla_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "wq_a": C.dense_init(k1, d, qr),
+        "q_norm": jnp.ones((qr,), C.DTYPE),
+        "wq_b": C.dense_init(k2, qr, h * (nope + rope)),
+        "wkv_a": C.dense_init(k3, d, kvr + rope),
+        "kv_norm": jnp.ones((kvr,), C.DTYPE),
+        "wkv_b": C.dense_init(k4, kvr, h * (nope + vd)),
+        "o": C.dense_init(k5, h * vd, d),
+    }
+
+
+def _rope_1head(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """RoPE on a (B, S, r) tensor (shared key rope path, one 'head')."""
+    tables = C.rope_tables(positions, x.shape[-1], 1.0, theta)
+    return C.apply_rope(x[:, :, None, :], tables)[:, :, 0, :]
+
+
+def mla_train(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Expanded-form causal MLA (training / prefill math)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    positions = jnp.arange(s)[None, :] * jnp.ones((b, 1), jnp.int32)
+
+    cq = C.rmsnorm(C.linear(p["wq_a"], x), p["q_norm"], cfg.norm_eps)
+    q = C.linear(p["wq_b"], cq).reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    tables = C.rope_tables(positions, rope, 1.0, cfg.rope_theta)
+    q_rope = C.apply_rope(q_rope, tables)
+
+    ckv_full = C.linear(p["wkv_a"], x)
+    ckv = C.rmsnorm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = _rope_1head(ckv_full[..., cfg.kv_lora_rank :], positions, cfg.rope_theta)
+    kv = C.linear(p["wkv_b"], ckv).reshape(b, s, h, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rope))], axis=-1
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = C.sdpa_causal(q_full, k, v)  # kv heads == heads here
+    return C.linear(p["o"], out.reshape(b, s, h * vd))
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int, dtype=C.DTYPE):
+    return {
+        "ckv": jnp.zeros((n_layers, batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((n_layers, batch, max_len, cfg.qk_rope_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_prefill_layer(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Expanded attention + return the latent cache lines for this layer."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :] * jnp.ones((b, 1), jnp.int32)
+    ckv_full = C.linear(p["wkv_a"], x)
+    ckv = C.rmsnorm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = _rope_1head(ckv_full[..., cfg.kv_lora_rank :], positions, cfg.rope_theta)
+    return mla_train(p, x, cfg), ckv, k_rope
+
+
+def mla_decode(p: dict, x: jax.Array, cfg: ModelConfig, ckv_cache, krope_cache, pos):
+    """Absorbed-form single-token decode over the latent cache.
+
+    x: (B, 1, D); ckv_cache: (B, S_max, kvr); krope_cache: (B, S_max, rope).
+    """
+    b, sq, d = x.shape
+    h = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    positions = jnp.full((b, sq), pos, jnp.int32)
+
+    cq = C.rmsnorm(C.linear(p["wq_a"], x), p["q_norm"], cfg.norm_eps)
+    q = C.linear(p["wq_b"], cq).reshape(b, sq, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    tables = C.rope_tables(positions, rope, 1.0, cfg.rope_theta)
+    q_rope = C.apply_rope(q_rope, tables)
+
+    # update latent cache with this step's compressed kv
+    ckv_full = C.linear(p["wkv_a"], x)
+    ckv_t = C.rmsnorm(ckv_full[..., :kvr], p["kv_norm"], cfg.norm_eps)
+    krope_t = _rope_1head(ckv_full[..., kvr:], positions, cfg.rope_theta)
+    ckv_cache = jax.lax.dynamic_update_slice(ckv_cache, ckv_t.astype(ckv_cache.dtype), (0, pos, 0))
+    krope_cache = jax.lax.dynamic_update_slice(
+        krope_cache, krope_t.astype(krope_cache.dtype), (0, pos, 0)
+    )
+
+    # absorb W_uk into q: q_eff (B, 1, H, kvr)
+    wkv_b = p["wkv_b"]["w"].reshape(kvr, h, nope + vd)
+    w_k = wkv_b[..., :nope]  # (kvr, H, nope)
+    w_v = wkv_b[..., nope:]  # (kvr, H, vd)
+    q_eff = jnp.einsum("bqhn,khn->bqhk", q_nope, w_k.astype(x.dtype))
+
+    s_max = ckv_cache.shape[1]
+    logits = jnp.einsum("bqhk,btk->bhqt", q_eff, ckv_cache).astype(jnp.float32)
+    logits = logits + jnp.einsum("bqhr,btr->bhqt", q_rope, krope_cache).astype(jnp.float32)
+    logits = logits / ((nope + rope) ** 0.5)
+    mask = (jnp.arange(s_max)[None, None, None, :] <= pos)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqt,btk->bqhk", probs, ckv_cache)
+    out = jnp.einsum("bqhk,khv->bqhv", ctx, w_v.astype(x.dtype))
+    return C.linear(p["o"], out.reshape(b, sq, h * vd)), ckv_cache, krope_cache

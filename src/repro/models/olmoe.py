@@ -1,0 +1,126 @@
+"""OLMoE: dense GQA attention + MoE FFN in every layer (scan-stacked)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import common as C
+from repro.models import dense as D
+from repro.models.moe_layer import moe_ffn, moe_init
+
+
+def layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": C.attn_init(k1, cfg),
+        "moe": moe_init(k2, cfg),
+        "ln1": jnp.ones((cfg.d_model,), C.DTYPE),
+        "ln2": jnp.ones((cfg.d_model,), C.DTYPE),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: layer_init(k, cfg))(layer_keys)
+    return {
+        "embed": C.embed_init(ke, cfg.padded_vocab, cfg.d_model),
+        "layers": layers,
+        "ln_f": jnp.ones((cfg.d_model,), C.DTYPE),
+        "head": C.dense_init(kh, cfg.d_model, cfg.padded_vocab),
+    }
+
+
+def _trunk(params: dict, cfg: ModelConfig, tokens: jax.Array):
+    x = C.embed_lookup(params["embed"], tokens)
+
+    def body(carry, lp):
+        x, aux = carry
+        h = x + C.attention_train(lp["attn"], C.rmsnorm(x, lp["ln1"], cfg.norm_eps), cfg)
+        m, a = moe_ffn(lp["moe"], C.rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+        return (h + m, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    return C.rmsnorm(x, params["ln_f"], cfg.norm_eps), aux / cfg.n_layers
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array):
+    h, aux = _trunk(params, cfg, tokens)
+    return D.head_fn(params, cfg)(h), aux
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    h, aux = _trunk(params, cfg, batch["tokens"])
+    ce = C.cross_entropy_chunked(h[:, :-1], batch["labels"][:, 1:], D.head_fn(params, cfg))
+    return ce + cfg.router_aux_weight * aux
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=C.DTYPE) -> dict:
+    return C.init_kv_cache(cfg, batch, max_len, cfg.n_layers, dtype)
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict):
+    x = C.embed_lookup(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :] * jnp.ones((b, 1), jnp.int32)
+
+    def body(x, lp):
+        h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        hh, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = C.linear(lp["attn"]["q"], h).reshape(b, s, hh, hd)
+        k = C.linear(lp["attn"]["k"], h).reshape(b, s, kvh, hd)
+        v = C.linear(lp["attn"]["v"], h).reshape(b, s, kvh, hd)
+        tables = C.rope_tables(positions, hd, cfg.rope_fraction, cfg.rope_theta)
+        q = C.apply_rope(q, tables)
+        k = C.apply_rope(k, tables)
+        att = C.sdpa_causal(q, k, v)
+        x = x + C.linear(lp["attn"]["o"], att.reshape(b, s, hh * hd))
+        m, _ = moe_ffn(lp["moe"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg)
+        return x + m, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    state = {
+        "k": jax.lax.dynamic_update_slice(state["k"], ks.astype(state["k"].dtype), (0, 0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(state["v"], vs.astype(state["v"].dtype), (0, 0, 0, 0, 0)),
+        "pos": jnp.asarray(s, jnp.int32),
+    }
+    return D._unembed(params, cfg, x[:, -1:]), state
+
+
+def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
+    x = C.embed_lookup(params["embed"], tokens)
+    pos = state["pos"]
+
+    def body(x, lp_cache):
+        lp, kc, vc = lp_cache
+        h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        att, kt, vt = C.attention_decode_ro(lp["attn"], h, cfg, kc, vc, pos)
+        x = x + att
+        m, _ = moe_ffn(lp["moe"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg)
+        return x + m, (kt, vt)
+
+    x, (kts, vts) = jax.lax.scan(body, x, (params["layers"], state["k"], state["v"]))
+    new_state = {
+        "k": jax.lax.dynamic_update_slice(
+            state["k"], kts.astype(state["k"].dtype), (0, 0, pos, 0, 0)
+        ),
+        "v": jax.lax.dynamic_update_slice(
+            state["v"], vts.astype(state["v"].dtype), (0, 0, pos, 0, 0)
+        ),
+        "pos": pos + 1,
+    }
+    return D._unembed(params, cfg, x), new_state
+
+
+def count_params(cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.head_dim
+    attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+    expert = 3 * d * cfg.d_ff_expert
+    per_layer_total = attn + cfg.n_experts * expert + d * cfg.n_experts + 2 * d
+    per_layer_active = attn + cfg.top_k * expert + d * cfg.n_experts + 2 * d
+    emb = cfg.padded_vocab * d * 2
+    return cfg.n_layers * per_layer_total + emb + d, cfg.n_layers * per_layer_active + emb + d

@@ -1,0 +1,162 @@
+"""Model registry: family -> (init, loss, prefill, decode, counters).
+
+Uniform protocol used by launch/{train,serve,dryrun}.py and the tests:
+
+    init_params(cfg, key) -> params
+    loss_fn(params, cfg, batch) -> scalar loss        (train_step lowers this)
+    init_decode_state(cfg, batch, max_len) -> state
+    prefill(params, cfg, tokens, state[, frontend]) -> (logits, state)
+    decode_step(params, cfg, state, tokens) -> (logits, state)
+"""
+
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import common as C
+from repro.models import dense, deepseek, encdec, mamba_hybrid, olmoe, xlstm
+
+
+def _vlm_loss(params, cfg, batch):
+    return dense.loss_fn(params, cfg, batch)
+
+
+def _vlm_prefill(params, cfg, tokens, state, patches=None):
+    return dense.prefill(params, cfg, tokens, state, patches=patches)
+
+
+_DENSE = SimpleNamespace(
+    init_params=dense.init_params,
+    loss_fn=dense.loss_fn,
+    forward=dense.forward,
+    init_decode_state=dense.init_decode_state,
+    prefill=dense.prefill,
+    decode_step=dense.decode_step,
+    count_params=dense.count_params,
+)
+
+_VLM = SimpleNamespace(
+    init_params=dense.init_params,
+    loss_fn=_vlm_loss,
+    forward=dense.forward,
+    init_decode_state=dense.init_decode_state,
+    prefill=_vlm_prefill,
+    decode_step=dense.decode_step,
+    count_params=dense.count_params,
+)
+
+_FAMILIES = {
+    "dense": _DENSE,
+    "vlm": _VLM,
+    "moe": SimpleNamespace(
+        init_params=olmoe.init_params,
+        loss_fn=olmoe.loss_fn,
+        forward=olmoe.forward,
+        init_decode_state=olmoe.init_decode_state,
+        prefill=olmoe.prefill,
+        decode_step=olmoe.decode_step,
+        count_params=olmoe.count_params,
+    ),
+    "mla_moe": SimpleNamespace(
+        init_params=deepseek.init_params,
+        loss_fn=deepseek.loss_fn,
+        forward=deepseek.forward,
+        init_decode_state=deepseek.init_decode_state,
+        prefill=deepseek.prefill,
+        decode_step=deepseek.decode_step,
+        count_params=deepseek.count_params,
+    ),
+    "encdec": SimpleNamespace(
+        init_params=encdec.init_params,
+        loss_fn=encdec.loss_fn,
+        forward=encdec.forward,
+        init_decode_state=encdec.init_decode_state,
+        prefill=encdec.prefill,
+        decode_step=encdec.decode_step,
+        count_params=encdec.count_params,
+    ),
+    "xlstm": SimpleNamespace(
+        init_params=xlstm.init_params,
+        loss_fn=xlstm.loss_fn,
+        forward=xlstm.forward,
+        init_decode_state=xlstm.init_decode_state,
+        prefill=xlstm.prefill,
+        decode_step=xlstm.decode_step,
+        count_params=xlstm.count_params,
+    ),
+    "mamba_hybrid": SimpleNamespace(
+        init_params=mamba_hybrid.init_params,
+        loss_fn=mamba_hybrid.loss_fn,
+        forward=mamba_hybrid.forward,
+        init_decode_state=mamba_hybrid.init_decode_state,
+        prefill=mamba_hybrid.prefill,
+        decode_step=mamba_hybrid.decode_step,
+        count_params=mamba_hybrid.count_params,
+    ),
+}
+
+
+def get_model(cfg: ModelConfig) -> SimpleNamespace:
+    return _FAMILIES[cfg.family]
+
+
+def count_total_params(cfg: ModelConfig) -> int:
+    return int(get_model(cfg).count_params(cfg)[0])
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    return int(get_model(cfg).count_params(cfg)[1])
+
+
+# ---------------------------------------------------------------------------
+# input specs: ShapeDtypeStruct stand-ins for every model input per shape
+# (the dry-run deliverable). No device allocation.
+# ---------------------------------------------------------------------------
+
+SHAPE_SETS = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, reduced: bool = False) -> dict:
+    """ShapeDtypeStructs for the given (arch x shape) cell's step function."""
+    spec = SHAPE_SETS[shape_name]
+    b, s = spec["batch"], spec["seq"]
+    if reduced:
+        b, s = min(b, 2), min(s, 2 * 256)
+    i32 = jnp.int32
+    out = {}
+    if spec["kind"] == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.family == "vlm":
+            out["patches"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    elif spec["kind"] == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.family == "vlm":
+            out["patches"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    else:  # decode: one token, cache of length s
+        out["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+    return out
+
+
+def applicable_shapes(cfg: ModelConfig) -> dict[str, str]:
+    """shape -> 'run' | reason-for-skip, per the assignment rules."""
+    out = {}
+    for name in SHAPE_SETS:
+        if name == "long_500k" and not cfg.sub_quadratic:
+            out[name] = "skip: full-attention arch; 500k decode needs sub-quadratic attention"
+        else:
+            out[name] = "run"
+    return out

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, AdamWState  # noqa: F401
+from repro.optim.grad_compression import compress_grads_int8  # noqa: F401

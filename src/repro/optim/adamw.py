@@ -1,0 +1,71 @@
+"""AdamW (decoupled weight decay) as a pure pytree transformation.
+
+Moments are stored in f32 by default; ``moment_dtype=bfloat16`` halves
+optimizer-state HBM (used by the deepseek-671b configs to fit 16 GB/chip —
+see EXPERIMENTS.md §Dry-run). States inherit the parameter shardings, i.e.
+ZeRO-style sharded optimizer state comes for free from param FSDP specs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params: Any) -> AdamWState:
+        z = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return AdamWState(
+            mu=jax.tree.map(z, params),
+            nu=jax.tree.map(z, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, grads: Any, state: AdamWState, params: Any):
+        count = state.count + 1
+        if self.clip_norm is not None:
+            gn = jnp.sqrt(
+                sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+            )
+            factor = jnp.minimum(1.0, self.clip_norm / (gn + 1e-12))
+            grads = jax.tree.map(lambda g: g * factor, grads)
+
+        b1c = 1 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu32 = self.b1 * mu.astype(jnp.float32) + (1 - self.b1) * g32
+            nu32 = self.b2 * nu.astype(jnp.float32) + (1 - self.b2) * g32 * g32
+            step = (mu32 / b1c) / (jnp.sqrt(nu32 / b2c) + self.eps)
+            decay = self.weight_decay if p.ndim >= 2 else 0.0  # no decay on norms
+            new_p = p.astype(jnp.float32) - self.lr * (step + decay * p.astype(jnp.float32))
+            return (
+                new_p.astype(p.dtype),
+                mu32.astype(self.moment_dtype),
+                nu32.astype(self.moment_dtype),
+            )
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(mu=new_mu, nu=new_nu, count=count)

@@ -1,0 +1,45 @@
+"""int8 gradient compression for the DP all-reduce (distributed-optimization
+trick, DESIGN.md §5).
+
+Quantize each gradient leaf to int8 with a per-leaf scale **before** the
+data-parallel reduction and keep the quantization residual in an
+error-feedback accumulator so the compression error is corrected on the next
+step (EF-SGD). 4x less DP all-reduce traffic.
+
+Usage in the train step (inside shard_map over the dp axes, or under jit the
+psum is implicit): grads come back already averaged; here we expose the
+quantize/dequantize pair + the EF state so the launcher can wrap the
+reduction explicitly when collective bytes dominate the roofline.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads_int8(grads: Any, ef: Optional[Any] = None):
+    """Returns (q_grads int8, scales, new_ef). Dequantize with q * scale."""
+    if ef is None:
+        ef = jax.tree.map(jnp.zeros_like, grads)
+
+    def comp(g, e):
+        g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(g32))
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        resid = g32 - q.astype(jnp.float32) * scale
+        return q, scale, resid.astype(g.dtype)
+
+    out = jax.tree.map(comp, grads, ef)
+    is3 = lambda x: isinstance(x, tuple)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    new_ef = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    return q, s, new_ef
+
+
+def decompress_grads_int8(q: Any, scales: Any):
+    return jax.tree.map(lambda qq, ss: qq.astype(jnp.float32) * ss, q, scales)

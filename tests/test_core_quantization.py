@@ -1,0 +1,128 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    QuantConfig,
+    QTensor,
+    compute_scales,
+    dequantize,
+    fake_quant,
+    pack_int4,
+    quantize,
+    unpack_int4,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def test_quantize_roundtrip_error_bound():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 256))
+    cfg = QuantConfig(bits=4, group_size=128, axis=-1)
+    qt = quantize(x, cfg)
+    xr = dequantize(qt)
+    # max error per element <= scale/2 within the group
+    g = x.reshape(64, 2, 128)
+    s = qt.scale[..., None]
+    err = jnp.abs((xr - x).reshape(64, 2, 128))
+    assert bool(jnp.all(err <= s / 2 + 1e-6))
+
+
+def test_quantize_values_in_range():
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 128)) * 10
+    for bits in (4, 8):
+        qt = quantize(x, QuantConfig(bits=bits, group_size=64, axis=-1))
+        qmax = 2 ** (bits - 1) - 1
+        assert int(jnp.max(qt.q)) <= qmax
+        assert int(jnp.min(qt.q)) >= -qmax
+
+
+def test_quantize_axis0_groups():
+    x = jax.random.normal(jax.random.PRNGKey(2), (256, 48))
+    cfg = QuantConfig(bits=4, group_size=128, axis=0)
+    qt = quantize(x, cfg)
+    assert qt.scale.shape == (2, 48)
+    xr = dequantize(qt)
+    assert xr.shape == x.shape
+    # relative frobenius error should be small-ish for 4-bit
+    rel = float(jnp.linalg.norm(xr - x) / jnp.linalg.norm(x))
+    assert rel < 0.15
+
+
+def test_zero_group_is_safe():
+    x = jnp.zeros((4, 128))
+    qt = quantize(x, QuantConfig(bits=4, group_size=128))
+    assert bool(jnp.all(qt.q == 0))
+    assert bool(jnp.all(jnp.isfinite(dequantize(qt))))
+
+
+def test_int8_much_better_than_int4():
+    x = jax.random.normal(jax.random.PRNGKey(3), (128, 512))
+    e4 = jnp.linalg.norm(x - dequantize(quantize(x, QuantConfig(bits=4))))
+    e8 = jnp.linalg.norm(x - dequantize(quantize(x, QuantConfig(bits=8))))
+    assert float(e8) < float(e4) / 8
+
+
+def test_fake_quant_matches_quant_dequant():
+    x = jax.random.normal(jax.random.PRNGKey(4), (16, 256))
+    cfg = QuantConfig(bits=4, group_size=128)
+    np.testing.assert_allclose(
+        np.asarray(fake_quant(x, cfg)),
+        np.asarray(dequantize(quantize(x, cfg), dtype=x.dtype)),
+        rtol=0, atol=0,
+    )
+
+
+def test_fake_quant_ste_gradient():
+    cfg = QuantConfig(bits=4, group_size=8)
+    x = jnp.linspace(-1.0, 1.0, 8)[None, :]
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x, cfg)))(x)
+    # interior values get identity gradient
+    assert bool(jnp.all(g >= 0))
+    assert float(jnp.max(g)) == 1.0
+
+
+def test_pack_unpack_int4_roundtrip():
+    q = jnp.arange(-7, 8, dtype=jnp.int8)
+    q = jnp.tile(q, 16)[: 16 * 14].reshape(16, 14)
+    p = pack_int4(q)
+    assert p.shape == (16, 7)
+    u = unpack_int4(p)
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(q))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=8),
+    st.sampled_from([4, 8]),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_dequant_error_half_scale(rows, bits, seed):
+    """Property: |x - dq(q(x))| <= scale/2 element-wise, any shape/bits."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (rows, 64)) * (seed % 7 + 1)
+    cfg = QuantConfig(bits=bits, group_size=32, axis=-1)
+    qt = quantize(x, cfg)
+    xr = dequantize(qt)
+    s = jnp.repeat(qt.scale, 32, axis=-1)
+    assert bool(jnp.all(jnp.abs(xr - x) <= s / 2 + 1e-6))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_pack_unpack_identity(seed):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.randint(key, (8, 32), -7, 8, dtype=jnp.int8)
+    np.testing.assert_array_equal(np.asarray(unpack_int4(pack_int4(q))), np.asarray(q))
+
+
+def test_qtensor_is_pytree():
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, 128))
+    qt = quantize(x, QuantConfig(bits=4, group_size=128))
+    leaves = jax.tree.leaves(qt)
+    assert len(leaves) == 2
+    qt2 = jax.tree.map(lambda a: a, qt)
+    assert isinstance(qt2, QTensor)

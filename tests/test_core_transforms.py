@@ -1,0 +1,118 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.manifold import HybridOpt, cayley_step
+from repro.core.transforms import (
+    GLParams,
+    gl_init,
+    gl_inverse,
+    gl_materialize,
+    hadamard_matrix,
+    orthogonal_init,
+    orthogonality_error,
+    random_orthogonal,
+)
+
+
+def test_hadamard_orthogonal_pow2():
+    for n in (2, 8, 64, 128):
+        h = hadamard_matrix(n)
+        assert float(orthogonality_error(h)) < 1e-5
+
+
+def test_hadamard_orthogonal_non_pow2():
+    # the dims that appear in assigned archs
+    for n in (1536, 3072, 5120):
+        h = hadamard_matrix(n)
+        assert float(orthogonality_error(h)) < 1e-4
+
+
+def test_random_orthogonal():
+    q = random_orthogonal(jax.random.PRNGKey(0), 96)
+    assert float(orthogonality_error(q)) < 1e-5
+
+
+def test_gl_identity_at_init():
+    p = gl_init(32)
+    g = gl_materialize(p)
+    np.testing.assert_allclose(np.asarray(g), np.eye(32), atol=1e-5)
+    gi = gl_inverse(p)
+    np.testing.assert_allclose(np.asarray(gi), np.eye(32), atol=1e-5)
+
+
+def test_gl_inverse_consistency_after_perturbation():
+    key = jax.random.PRNGKey(1)
+    p = gl_init(24)
+    p = GLParams(
+        P=random_orthogonal(key, 24),
+        L=p.L + 0.05 * jax.random.normal(jax.random.PRNGKey(2), (24, 24)),
+        gamma=jnp.asarray(0.3),
+    )
+    g = gl_materialize(p)
+    gi = gl_inverse(p)
+    np.testing.assert_allclose(np.asarray(g @ gi), np.eye(24), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gi @ g), np.eye(24), atol=1e-4)
+
+
+def test_cayley_step_preserves_orthogonality():
+    key = jax.random.PRNGKey(3)
+    q = random_orthogonal(key, 48)
+    a = jax.random.normal(jax.random.PRNGKey(4), (48, 48))
+    skew = a - a.T
+    q2 = cayley_step(q, skew, 0.1)
+    assert float(orthogonality_error(q2)) < 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1), st.floats(min_value=1e-4, max_value=0.5))
+def test_property_cayley_always_on_manifold(seed, lr):
+    """Property: Cayley retraction keeps Q orthogonal for any skew/lr."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    q = random_orthogonal(k1, 16)
+    a = jax.random.normal(k2, (16, 16))
+    q2 = cayley_step(q, a - a.T, lr)
+    assert float(orthogonality_error(q2)) < 1e-4
+
+
+def test_hybrid_opt_descends_and_stays_on_manifold():
+    """Minimize ||X Q - Y||^2 over orthogonal Q: must descend and stay on M."""
+    key = jax.random.PRNGKey(5)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (64, 32))
+    q_true = random_orthogonal(k2, 32)
+    y = x @ q_true
+
+    params = {"Q": orthogonal_init(32, "random", key=k3), "b": jnp.zeros((32,))}
+    mask = {"Q": True, "b": False}
+    opt = HybridOpt(lr=0.05, momentum=0.9)
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.mean((x @ p["Q"] + p["b"] - y) ** 2)
+
+    l0 = float(loss(params))
+    step = jax.jit(lambda p, s: opt.update(jax.grad(loss)(p), s, p, mask))
+    for _ in range(200):
+        params, state = step(params, state)
+    l1 = float(loss(params))
+    assert l1 < l0 * 0.05
+    assert float(orthogonality_error(params["Q"])) < 1e-3
+
+
+def test_hybrid_opt_lr_scale_freezes_leaves():
+    key = jax.random.PRNGKey(6)
+    params = {"Q": orthogonal_init(16, "random", key=key), "b": jnp.ones((16,))}
+    mask = {"Q": True, "b": False}
+    opt = HybridOpt(lr=0.1)
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["Q"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    scales = {"Q": 0.0, "b": 1.0}
+    new_params, _ = opt.update(jax.grad(loss)(params), state, params, mask, scales)
+    np.testing.assert_array_equal(np.asarray(new_params["Q"]), np.asarray(params["Q"]))
+    assert not np.allclose(np.asarray(new_params["b"]), np.asarray(params["b"]))

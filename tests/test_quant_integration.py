@@ -1,0 +1,141 @@
+"""Model-level quantization integration: packed serving path, simulation
+path, sharding-spec coverage of quantized pytrees, MoE quantized experts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ModelConfig, QuantSpec, get_config
+from repro.core.twinquant import quantize_params, simulate_quantize_params
+from repro.models import dense
+from repro.models.registry import get_model
+
+CFG = ModelConfig(
+    name="qtest", family="dense", n_layers=2, d_model=256, n_heads=4,
+    n_kv_heads=2, head_dim=64, d_ff=512, vocab=260, remat=False,
+)
+
+
+@pytest.fixture(scope="module")
+def model_and_batch():
+    params = dense.init_params(CFG, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, CFG.vocab)
+    return params, toks
+
+
+def test_packed_w4a4_serving(model_and_batch):
+    params, toks = model_and_batch
+    qp = quantize_params(params, CFG, QuantSpec(mode="w4a4", rank=32))
+    # eligible linears got packed
+    flat = {"/".join(str(getattr(k, "key", k)) for k in p): v
+            for p, v in jax.tree_util.tree_leaves_with_path(qp)}
+    assert any(k.endswith("rp") for k in flat)
+    assert not any("head" in k and k.endswith("rp") for k in flat)
+    logits_fp = dense.forward(params, CFG, toks).astype(jnp.float32)
+    logits_q = dense.forward(qp, CFG, toks).astype(jnp.float32)
+    assert jnp.all(jnp.isfinite(logits_q))
+    # untrained random weights are 4-bit's worst case (no outlier structure,
+    # near-uniform logits): require strong correlation, not argmax equality
+    corr = float(jnp.corrcoef(logits_fp.ravel(), logits_q.ravel())[0, 1])
+    assert corr > 0.7, corr
+
+
+def test_packed_w4a16_serving(model_and_batch):
+    params, toks = model_and_batch
+    qp = quantize_params(params, CFG, QuantSpec(mode="w4a16"))
+    logits_q = dense.forward(qp, CFG, toks).astype(jnp.float32)
+    logits_fp = dense.forward(params, CFG, toks).astype(jnp.float32)
+    assert jnp.all(jnp.isfinite(logits_q))
+    rel = float(jnp.linalg.norm(logits_q - logits_fp) / jnp.linalg.norm(logits_fp))
+    # random iid weights are 4-bit's worst case; layer exactness is covered
+    # by test_kernels — this is a sanity bound on 2-layer error amplification
+    assert rel < 0.6, rel
+
+
+def test_quantized_decode(model_and_batch):
+    params, toks = model_and_batch
+    qp = quantize_params(params, CFG, QuantSpec(mode="w4a4", rank=32))
+    state = dense.init_decode_state(CFG, 2, 48)
+    logits, state = dense.prefill(qp, CFG, toks, state)
+    logits, state = dense.decode_step(qp, CFG, state, toks[:, :1])
+    assert logits.shape == (2, 1, CFG.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_sim_variants_ordering(model_and_batch):
+    """W4A8 beats W4A4; on OUTLIER-structured weights (the paper's setting —
+    random flat-spectrum weights are the case where decomposition does NOT
+    help, consistent with Observation 1), lowrank beats naive."""
+    params, toks = model_and_batch
+    # inject heavy input-channel outliers into every block linear
+    import copy
+
+    def spike(tree):
+        if isinstance(tree, dict):
+            if "w" in tree and tree["w"].ndim == 3 and tree["w"].shape[1] >= 256:
+                w = tree["w"]
+                rows = jnp.arange(0, w.shape[1], 37)
+                return {**tree, "w": w.at[:, rows, :].mul(10.0)}
+            return {k: spike(v) for k, v in tree.items()}
+        return tree
+
+    sp = spike(params)
+    ref = dense.forward(sp, CFG, toks).astype(jnp.float32)
+
+    def fid(method, mode):
+        qp = simulate_quantize_params(sp, CFG, QuantSpec(mode=mode, rank=32), method)
+        lg = dense.forward(qp, CFG, toks).astype(jnp.float32)
+        return float(jnp.linalg.norm(lg - ref))
+
+    e_naive = fid("naive", "w4a4")
+    e_low = fid("lowrank", "w4a4")
+    e_low8 = fid("lowrank", "w4a8")
+    assert e_low < e_naive, (e_low, e_naive)
+    assert e_low8 < e_low, (e_low8, e_low)
+
+
+def test_quantize_params_eval_shape_pure():
+    """The dry-run contract: quantize_params works under jax.eval_shape."""
+    params_sds = jax.eval_shape(lambda k: dense.init_params(CFG, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+    q_sds = jax.eval_shape(lambda p: quantize_params(p, CFG, QuantSpec(mode="w4a4", rank=32)),
+                           params_sds)
+    leaves = jax.tree.leaves(q_sds)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    # packed int4 buffers: rp has K/2 rows
+    assert q_sds["layers"]["mlp"]["down"]["rp"].shape[-2] == CFG.d_ff // 2
+
+
+def test_quantized_moe_local_path():
+    cfg = get_config("olmoe-1b-7b", reduced=True).replace(
+        d_model=256, d_ff_expert=256, n_experts=4, top_k=2, head_dim=64,
+        n_heads=4, n_kv_heads=4, remat=False,
+    )
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(2))
+    qp = quantize_params(params, cfg, QuantSpec(mode="w4a4", rank=16))
+    # expert packs are stacked over E
+    assert qp["layers"]["moe"]["gate"]["rp"].shape[-3] == cfg.n_experts
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0, cfg.vocab)
+    logits, aux = model.forward(qp, cfg, toks)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_sharding_specs_cover_quantized_tree():
+    """Every quantized leaf gets a valid PartitionSpec (dry-run contract)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.sharding import param_specs
+    from repro.models.context import MeshContext
+
+    params_sds = jax.eval_shape(lambda k: dense.init_params(CFG, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+    q_sds = jax.eval_shape(lambda p: quantize_params(p, CFG, QuantSpec(mode="w4a4", rank=32)),
+                           params_sds)
+    ctx = MeshContext(mesh=None, dp_axes=("data",), tp_axis="model",
+                      fsdp_axes=("data",))
+    specs = param_specs(CFG, q_sds, ctx)
+    for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        assert isinstance(s, P)
