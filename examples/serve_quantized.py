@@ -1,5 +1,5 @@
 """Serving driver: quantize a trained model to PACKED W4A4 (the fused-kernel
-format) and serve batched requests through the continuous-batching server.
+format) and serve batched requests through the continuous-batching engine.
 
 On CPU the quantized linears run the jnp oracle path; on TPU the same params
 route through the fused Pallas kernel (models/common.linear dispatch).
@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs import QuantSpec
 from repro.core.twinquant import quantize_params
-from repro.launch.serve import Request, Server
+from repro.launch.serve import ContinuousBatchingEngine, Request, SamplingParams
 from benchmarks.common import get_trained_model
 
 
@@ -25,32 +25,38 @@ def main():
     qparams = quantize_params(params, cfg, qspec)
 
     n_quant = sum(1 for p in jax.tree_util.tree_leaves_with_path(qparams)
-                  if str(p[0][-1]).endswith("'rp'"))
+                  if getattr(p[0][-1], "key", None) == "rp")
     pb = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params)) / 1e6
     qb = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(qparams)) / 1e6
     print(f" {n_quant} linears packed; params {pb:.1f}MB -> {qb:.1f}MB")
 
-    server = Server(cfg, qparams, batch_slots=4, max_len=96)
+    engine = ContinuousBatchingEngine(cfg, qparams, batch_slots=4, max_len=96)
     prompts = [
         "def main(", "import jax", "class Model", "# TwinQuant",
         "return x +", "for i in",
     ]
+    # mixed per-request sampling: half greedy, half temperature+top-k
+    requests = [
+        Request(
+            jnp.asarray(list(p.encode()), jnp.int32), max_new=12,
+            sampling=(SamplingParams() if i % 2 == 0
+                      else SamplingParams(temperature=0.8, top_k=40, seed=i)),
+        )
+        for i, p in enumerate(prompts)
+    ]
     t0 = time.monotonic()
-    pending = [Request(jnp.asarray(list(p.encode()), jnp.int32), max_new=12)
-               for p in prompts]
-    done = []
-    while pending or any(server.slots):
-        while pending and server.submit(pending[0]):
-            done.append(pending.pop(0))
-        server.step()
-    server.run_until_done()
+    engine.serve(requests)
     dt = time.monotonic() - t0
-    total_new = sum(len(r.out) for r in done)
-    for p, r in zip(prompts, done):
+    for p, r in zip(prompts, requests):
         txt = bytes(t for t in r.out if t < 256).decode(errors="replace")
-        print(f"  {p!r} -> {txt!r}")
-    print(f" served {len(done)} requests, {total_new} tokens in {dt:.1f}s "
-          f"({total_new/dt:.1f} tok/s on 1 CPU core, ref path)")
+        mode = "greedy" if r.sampling.temperature <= 0 else "t=0.8/k=40"
+        print(f"  [{mode:>10}] {p!r} -> {txt!r}")
+    th = engine.throughput()
+    total_new = sum(len(r.out) for r in requests)
+    print(f" served {len(requests)} requests, {total_new} tokens in {dt:.1f}s: "
+          f"decode {th['decode_tok_s']:.1f} tok/s, prefill {th['prefill_tok_s']:.1f} tok/s, "
+          f"mean occupancy {th['mean_batch_occupancy']:.2f}/{engine.batch} slots "
+          f"(1 CPU core, ref path)")
     print("serve_quantized OK")
 
 

@@ -86,9 +86,10 @@ def quantize_params(params: Any, cfg: ModelConfig, spec: QuantSpec) -> Any:
     usable under jax.eval_shape for the dry-run."""
     if spec.mode == "bf16":
         return params
-    pack = _pack_one_w4a16 if spec.mode == "w4a16" else lambda w: _pack_one(w, spec)
     if spec.mode == "w4a16":
         pack = lambda w: _pack_one_w4a16(w, spec)
+    else:
+        pack = lambda w: _pack_one(w, spec)
 
     def visit(tree, path=""):
         if isinstance(tree, dict):

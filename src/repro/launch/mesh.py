@@ -25,3 +25,16 @@ def make_debug_mesh(shape=(2, 2), axes=AXES_SINGLE):
 
 def dp_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def use_mesh(mesh):
+    """Version-compatible mesh context: ``with use_mesh(mesh): ...``.
+
+    ``jax.set_mesh`` landed after 0.4.x (and ``jax.sharding.use_mesh``
+    before that); on older installs entering the ``Mesh`` itself sets the
+    resource env, which is all the dry-run/compile paths need."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh

@@ -1,18 +1,39 @@
-"""Serving launcher: prefill/decode step construction + a batched-request
-serving loop (continuous-batching-style slot management).
+"""Serving launcher: prefill/decode step construction + a continuous-batching
+serving engine built on per-slot cache state.
 
 The decode step is the function the ``decode_*`` / ``long_*`` dry-run cells
-lower; the ``Server`` class is the runnable end-to-end driver used by
-examples/serve_quantized.py.
+lower; :class:`ContinuousBatchingEngine` is the runnable end-to-end driver
+used by examples/serve_quantized.py and benchmarks/bench_throughput.py.
+
+Engine architecture (DESIGN.md §10):
+
+* Every decode state carries a **per-slot position vector** ``pos (B,)`` —
+  each batch slot is an independent timeline, so requests of different
+  lengths decode in lock-step without sharing a global step counter.
+* **Admission** runs the model's real prefill once on a batch-1 state (one
+  batched pass over the whole prompt, not T decode steps) and splices the
+  resulting cache/recurrent state into the free slot with a single
+  ``dynamic_update_slice_in_dim`` per leaf — live slots are never touched.
+* The slot axis of every state leaf is inferred structurally (batch-2 vs
+  batch-1 ``eval_shape`` diff), so the same engine serves KV-cache
+  transformers, MLA latent caches, SSM/xLSTM recurrent states, and hybrid
+  stacks without per-family splice code.
+* **Eviction** is host bookkeeping only: a finished request frees its slot;
+  stale device state is fully overwritten at the next admission, and
+  per-slot masking (``arange(S) < pos[b]``) keeps it invisible meanwhile.
+* Sampling is per-request (greedy / temperature / top-k) on the host.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import deque
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ModelConfig
 from repro.models.registry import get_model
@@ -36,20 +57,84 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
     return decode_step
 
 
+# ---------------------------------------------------------------------------
+# requests + sampling
+# ---------------------------------------------------------------------------
+
+
 @dataclasses.dataclass
+class SamplingParams:
+    """Per-request sampling. ``temperature <= 0`` means greedy; ``top_k > 0``
+    restricts sampling to the k most likely tokens."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+
+@dataclasses.dataclass(eq=False)
 class Request:
-    prompt: jax.Array  # (S,) int32
+    prompt: Any  # (S,) int32
     max_new: int = 16
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    frontend: dict = dataclasses.field(default_factory=dict)  # vlm/encdec extras
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # engine-private
+    _last_logits: Any = dataclasses.field(default=None, repr=False)
+    _rng: Any = dataclasses.field(default=None, repr=False)
 
 
-class Server:
-    """Minimal batched serving loop: static batch of slots, greedy sampling.
+# ---------------------------------------------------------------------------
+# slot-state splicing
+# ---------------------------------------------------------------------------
 
-    Requests are admitted into free slots; all slots decode in lock-step (the
-    TPU-efficient layout); finished requests free their slot. Per-slot
-    positions are tracked so prompts of different lengths coexist.
+
+def _slot_axes(cfg: ModelConfig, model, max_len: int):
+    """Pytree of ints: the slot (batch) axis of every decode-state leaf,
+    inferred by diffing a batch-2 against a batch-1 ``eval_shape`` — exactly
+    one dim differs (2 vs 1), and that dim is the slot axis. Works for any
+    family without hand-written per-leaf layout tables."""
+    big = jax.eval_shape(lambda: model.init_decode_state(cfg, 2, max_len))
+    one = jax.eval_shape(lambda: model.init_decode_state(cfg, 1, max_len))
+
+    def axis(b, o):
+        diffs = [i for i, (db, do) in enumerate(zip(b.shape, o.shape)) if db != do]
+        if len(diffs) != 1 or b.shape[diffs[0]] != 2 or o.shape[diffs[0]] != 1:
+            raise ValueError(f"cannot infer slot axis: {b.shape} vs {o.shape}")
+        return diffs[0]
+
+    return jax.tree.map(axis, big, one)
+
+
+def _make_slot_insert(axes) -> Callable:
+    """jit-compiled splice of a batch-1 state into slot ``idx`` of the full
+    state; one dynamic_update_slice_in_dim per leaf, index traced so every
+    slot shares one executable."""
+
+    def insert(state, sub, idx):
+        return jax.tree.map(
+            lambda leaf, subleaf, ax: jax.lax.dynamic_update_slice_in_dim(
+                leaf, subleaf.astype(leaf.dtype), idx, axis=ax
+            ),
+            state, sub, axes,
+        )
+
+    return jax.jit(insert)
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+class ContinuousBatchingEngine:
+    """Continuous-batching server: a static batch of B independent slot
+    timelines, per-slot admission/eviction, per-request sampling, lock-step
+    decode (the TPU-efficient layout), and throughput accounting.
+
+    Note: prefill jit-specializes on prompt length — callers serving wildly
+    varied prompt lengths should bucket/pad prompts upstream.
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4, max_len: int = 128):
@@ -59,48 +144,145 @@ class Server:
         self.batch = batch_slots
         self.max_len = max_len
         self.state = self.model.init_decode_state(cfg, batch_slots, max_len)
+        # constant zero batch-1 state, built once: the splice source for every
+        # admission (prefill never donates/mutates its inputs)
+        self._sub_template = self.model.init_decode_state(cfg, 1, max_len)
         self.slots: list[Optional[Request]] = [None] * batch_slots
-        self._decode = jax.jit(
-            lambda p, st, t: self.model.decode_step(p, cfg, st, t)
-        )
+        self.queue: deque[Request] = deque()
+        self._insert = _make_slot_insert(_slot_axes(cfg, self.model, max_len))
+        self._decode = jax.jit(make_decode_step(cfg))
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self.stats = {
+            "prefill_tokens": 0, "prefill_s": 0.0,
+            "decode_tokens": 0, "decode_steps": 0, "decode_s": 0.0,
+            "requests_done": 0,
+        }
+
+    # -- admission ----------------------------------------------------------
 
     def submit(self, req: Request) -> bool:
-        """Admit into a free slot; prefill its prompt via per-slot decode."""
-        for i, s in enumerate(self.slots):
-            if s is None:
-                self.slots[i] = req
-                # feed the prompt token-by-token through the shared decode
-                # step (slot-local prefill; cache positions are global-step
-                # aligned, so prompts are left-padded into the timeline)
-                for t in range(req.prompt.shape[0]):
-                    tok = jnp.zeros((self.batch, 1), jnp.int32)
-                    tok = tok.at[i, 0].set(req.prompt[t])
-                    logits, self.state = self._decode(self.params, self.state, tok)
-                req._last_logits = logits[i, -1]
-                return True
-        return False
+        """Enqueue a request; admit immediately if a slot is free. Returns
+        True when the request went straight into a slot. Invalid requests
+        are rejected HERE, before touching queue or slot state, so one bad
+        request can never strand a batch mid-generation. Re-submitting a
+        request that is already queued or live is a no-op."""
+        if req.done:  # already served (e.g. admitted+finished inside one step)
+            return True
+        prompt = jnp.asarray(req.prompt)
+        if prompt.ndim != 1:
+            raise ValueError(f"prompt must be 1-D (S,), got shape {prompt.shape}")
+        n = int(prompt.shape[0])
+        if not 1 <= n < self.max_len:
+            raise ValueError(
+                f"prompt length {n} must be in [1, max_len={self.max_len})"
+            )
+        if any(s is req for s in self.slots) or any(q is req for q in self.queue):
+            return any(s is req for s in self.slots)
+        self.queue.append(req)
+        self._admit()
+        return any(s is req for s in self.slots)
+
+    def _admit(self) -> None:
+        for i in range(self.batch):
+            if not self.queue:
+                return
+            if self.slots[i] is not None:
+                continue
+            req = self.queue.popleft()
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            sub = self._sub_template  # fresh-state splice source (read-only)
+            t0 = time.monotonic()
+            logits, sub = self._prefill(self.params, prompt, sub, **req.frontend)
+            self.state = self._insert(self.state, sub, i)
+            last = np.asarray(logits[0, -1].astype(jnp.float32))  # sync point
+            self.stats["prefill_s"] += time.monotonic() - t0
+            self.stats["prefill_tokens"] += int(prompt.shape[1])
+            req._last_logits = last
+            req._rng = np.random.default_rng(req.sampling.seed)
+            self.slots[i] = req
+
+    # -- sampling -----------------------------------------------------------
+
+    def _sample(self, req: Request) -> int:
+        logits = req._last_logits[: self.cfg.vocab]
+        sp = req.sampling
+        if sp.temperature <= 0.0:
+            return int(np.argmax(logits))
+        scaled = logits / sp.temperature
+        if sp.top_k > 0 and sp.top_k < scaled.shape[0]:
+            kth = np.partition(scaled, -sp.top_k)[-sp.top_k]
+            scaled = np.where(scaled < kth, -np.inf, scaled)
+        p = np.exp(scaled - scaled.max())
+        p /= p.sum()
+        return int(req._rng.choice(p.shape[0], p=p))
+
+    # -- decode -------------------------------------------------------------
 
     def step(self) -> int:
-        """One lock-step decode for all active slots; returns #active."""
+        """Admit queued work, sample one token per active slot, then one
+        lock-step decode for the slots that still need logits. Returns the
+        number of slots that produced a token."""
+        self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return 0
-        tok = jnp.zeros((self.batch, 1), jnp.int32)
+        tok = np.zeros((self.batch, 1), np.int32)
+        pos = np.asarray(self.state["pos"])  # next write offset per slot
+        live = []
         for i in active:
             req = self.slots[i]
-            nxt = int(jnp.argmax(req._last_logits)) % self.cfg.vocab
+            nxt = self._sample(req)
             req.out.append(nxt)
-            tok = tok.at[i, 0].set(nxt)
-        logits, self.state = self._decode(self.params, self.state, tok)
-        for i in active:
-            req = self.slots[i]
-            req._last_logits = logits[i, -1]
-            if len(req.out) >= req.max_new or int(self.state["pos"]) >= self.max_len - 1:
+            tok[i, 0] = nxt
+            # a request whose quota is now filled (or whose token has no cache
+            # row left) is evicted BEFORE the decode — its final logits would
+            # be discarded anyway
+            if len(req.out) >= req.max_new or int(pos[i]) >= self.max_len:
                 req.done = True
                 self.slots[i] = None
+                self.stats["requests_done"] += 1
+            else:
+                live.append(i)
+        if live:
+            t0 = time.monotonic()
+            logits, self.state = self._decode(self.params, self.state, jnp.asarray(tok))
+            last = np.asarray(logits[:, -1].astype(jnp.float32))  # sync point
+            self.stats["decode_s"] += time.monotonic() - t0
+            self.stats["decode_steps"] += 1
+            self.stats["decode_tokens"] += len(live)
+            for i in live:
+                self.slots[i]._last_logits = last[i]
+        self._admit()
         return len(active)
 
-    def run_until_done(self, max_steps: int = 1000) -> None:
+    # -- drivers ------------------------------------------------------------
+
+    def run_until_done(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):
-            if self.step() == 0:
+            if self.step() == 0 and not self.queue:
                 return
+
+    def serve(self, requests: list[Request], max_steps: int = 100_000) -> list[Request]:
+        """Submit all requests and drive the loop to completion."""
+        for r in requests:
+            self.submit(r)
+        self.run_until_done(max_steps)
+        return requests
+
+    def reset_stats(self) -> None:
+        """Zero the accounting counters (e.g. after a warm-up pass)."""
+        self.stats = {k: type(v)() for k, v in self.stats.items()}
+
+    def throughput(self) -> dict:
+        """Tokens/s summary from the accounting counters."""
+        st = self.stats
+        return {
+            "decode_tok_s": st["decode_tokens"] / max(st["decode_s"], 1e-9),
+            "prefill_tok_s": st["prefill_tokens"] / max(st["prefill_s"], 1e-9),
+            "mean_batch_occupancy": st["decode_tokens"] / max(st["decode_steps"], 1),
+            **st,
+        }
+
+
+# Backwards-compatible name: the engine replaced the original demo Server.
+Server = ContinuousBatchingEngine

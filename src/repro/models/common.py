@@ -336,37 +336,59 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
     return {
         "k": jnp.zeros((n_layers, batch, max_len, kvh, hd), dtype),
         "v": jnp.zeros((n_layers, batch, max_len, kvh, hd), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 
-def attention_decode(p: dict, x: jax.Array, cfg: ModelConfig, k_cache, v_cache,
-                     pos: jax.Array):
-    """One-token decode: x (B, 1, D); cache (B, S_max, KV, hd); pos scalar.
+def slot_positions(pos: jax.Array, b: int, sq: int = 1) -> jax.Array:
+    """Per-slot decode positions (B, sq) from a per-slot ``pos`` vector (B,).
 
-    Returns (out, new_k, new_v)."""
-    out, kt, vt = attention_decode_ro(p, x, cfg, k_cache, v_cache, pos)
-    k_cache = jax.lax.dynamic_update_slice(k_cache, kt.astype(k_cache.dtype), (0, pos, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(v_cache, vt.astype(v_cache.dtype), (0, pos, 0, 0))
-    return out, k_cache, v_cache
+    A scalar ``pos`` (legacy single-sequence callers) broadcasts to all slots.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full((b,), pos, jnp.int32)
+    return pos[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+
+
+def update_cache_slot(cache: jax.Array, t: jax.Array, pos: jax.Array) -> jax.Array:
+    """Scatter a one-token slice at each slot's own offset.
+
+    cache (B, S, ...), t (B, 1, ...), pos (B,). Out-of-range positions
+    (a slot past its max_len) are dropped, not clamped, so an overflowing
+    slot can never corrupt row S-1."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), pos].set(t[:, 0].astype(cache.dtype), mode="drop")
+
+
+def update_cache_slot_stacked(cache: jax.Array, t: jax.Array, pos: jax.Array) -> jax.Array:
+    """Layer-stacked variant: cache (L, B, S, ...), t (L, B, 1, ...), pos (B,)."""
+    b = cache.shape[1]
+    return cache.at[:, jnp.arange(b), pos].set(t[:, :, 0].astype(cache.dtype), mode="drop")
 
 
 def attention_decode_ro(p: dict, x: jax.Array, cfg: ModelConfig, k_cache, v_cache,
                         pos: jax.Array):
     """Read-only-cache decode attention (§Perf optimization).
 
+    ``pos`` is a per-slot position vector (B,) — every batch slot carries its
+    own timeline, so sequences of different lengths (continuous batching)
+    decode in lock-step without sharing a global step counter. Each slot
+    attends over its own cache prefix [0, pos_b) plus the current token.
+
     The naive formulation updates the cache INSIDE the layer scan, which
     makes the scan write every layer's full (B, S, KV, hd) cache slice back
     per token (2 x cache bytes of HBM write traffic per step). Here the scan
     reads the cache read-only and attends over [cache(<pos), current token];
-    the caller batches ONE one-token dynamic-update-slice per layer after the
-    scan. Returns (out, k_t, v_t)."""
+    the caller batches ONE one-token scatter per layer after the scan.
+    Returns (out, k_t, v_t)."""
     b, sq, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = linear(p["q"], x).reshape(b, sq, h, hd)
     kt = linear(p["k"], x).reshape(b, sq, kvh, hd)
     vt = linear(p["v"], x).reshape(b, sq, kvh, hd)
-    positions = jnp.full((b, sq), pos, jnp.int32)
+    positions = slot_positions(pos, b, sq)
+    pos_v = positions[:, 0]  # (B,)
     tables = rope_tables(positions, hd, cfg.rope_fraction, cfg.rope_theta)
     q = apply_rope(q, tables)
     kt = apply_rope(kt, tables)
@@ -376,7 +398,8 @@ def attention_decode_ro(p: dict, x: jax.Array, cfg: ModelConfig, k_cache, v_cach
     s_max = k_cache.shape[1]
     logits_c = jnp.einsum("bskgh,btkh->bkgst", qg, k_cache).astype(jnp.float32)
     logits_c = logits_c / (hd**0.5)
-    mask = jnp.arange(s_max)[None, None, None, None, :] < pos  # strict: self handled below
+    # strict per-slot prefix mask: self handled below
+    mask = jnp.arange(s_max)[None, None, None, None, :] < pos_v[:, None, None, None, None]
     logits_c = jnp.where(mask, logits_c, -1e30)
     logit_s = jnp.einsum("bskgh,bskh->bkgs", qg, kt).astype(jnp.float32)[..., None] / (hd**0.5)
     m = jnp.maximum(jnp.max(logits_c, axis=-1, keepdims=True), logit_s)

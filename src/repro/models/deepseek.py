@@ -168,14 +168,14 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict):
         "krope": jax.lax.dynamic_update_slice(
             state["krope"], krope.astype(state["krope"].dtype), (0, 0, 0, 0)
         ),
-        "pos": jnp.asarray(s, jnp.int32),
+        "pos": jnp.full((b,), s, jnp.int32),
     }
     return _unembed(params, cfg, x[:, -1:]), state
 
 
 def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
     x = C.embed_lookup(params["embed"], tokens)
-    pos = state["pos"]
+    pos = C.slot_positions(state["pos"], tokens.shape[0])[:, 0]
     nd = cfg.first_k_dense
 
     def dbody(x, lp_cache):

@@ -153,25 +153,26 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict,
         return x, (k, v)
 
     x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
-    s_max = state["k"].shape[2]
     state = {
         "k": jax.lax.dynamic_update_slice(state["k"], ks.astype(state["k"].dtype), (0, 0, 0, 0, 0)),
         "v": jax.lax.dynamic_update_slice(state["v"], vs.astype(state["v"].dtype), (0, 0, 0, 0, 0)),
-        "pos": jnp.asarray(s, jnp.int32),
+        "pos": jnp.full((b,), s, jnp.int32),
     }
     return _unembed(params, cfg, x[:, -1:]), state
 
 
 def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
-    """tokens (B, 1) -> (logits (B, 1, V), new state). One new token with a
-    KV cache of max_len (the `decode_*` / `long_*` shapes lower THIS).
+    """tokens (B, 1) -> (logits (B, 1, V), new state). One new token per slot
+    with a KV cache of max_len (the `decode_*` / `long_*` shapes lower THIS).
+    state["pos"] is per-slot (B,): slots at different timeline offsets decode
+    in lock-step (continuous batching).
 
     The layer scan reads the cache READ-ONLY and emits each layer's one-token
-    (k_t, v_t); the cache is updated with a single batched one-token write
+    (k_t, v_t); the cache is updated with a single batched one-token scatter
     after the scan — per-step cache write traffic is O(L·B·KV·hd), not
     O(L·B·S·KV·hd) (§Perf cell C iteration 2)."""
     x = C.embed_lookup(params["embed"], tokens)
-    pos = state["pos"]
+    pos = C.slot_positions(state["pos"], tokens.shape[0])[:, 0]
 
     def body(x, lp_cache):
         lp, kc, vc = lp_cache
@@ -183,12 +184,8 @@ def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
 
     x, (kts, vts) = jax.lax.scan(body, x, (params["layers"], state["k"], state["v"]))
     new_state = {
-        "k": jax.lax.dynamic_update_slice(
-            state["k"], kts.astype(state["k"].dtype), (0, 0, pos, 0, 0)
-        ),
-        "v": jax.lax.dynamic_update_slice(
-            state["v"], vts.astype(state["v"].dtype), (0, 0, pos, 0, 0)
-        ),
+        "k": C.update_cache_slot_stacked(state["k"], kts, pos),
+        "v": C.update_cache_slot_stacked(state["v"], vts, pos),
         "pos": pos + 1,
     }
     return _unembed(params, cfg, x), new_state

@@ -166,7 +166,7 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=C.DTYPE)
         "v": jnp.zeros((cfg.n_layers, batch, max_len, h, hd), dtype),
         "xk": jnp.zeros((cfg.n_layers, batch, cfg.n_frames, h, hd), dtype),
         "xv": jnp.zeros((cfg.n_layers, batch, cfg.n_frames, h, hd), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -204,7 +204,7 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict,
         "v": jax.lax.dynamic_update_slice(state["v"], vs.astype(state["v"].dtype), (0, 0, 0, 0, 0)),
         "xk": xk.astype(state["xk"].dtype),
         "xv": xv.astype(state["xv"].dtype),
-        "pos": jnp.asarray(s, jnp.int32),
+        "pos": jnp.full((b,), s, jnp.int32),
     }
     x = _ln(params["ln_f"], x[:, -1:], cfg.norm_eps)
     return jnp.einsum("bsd,vd->bsv", x, C.embed_attend(params["embed"]).astype(x.dtype)), state
@@ -213,8 +213,8 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict,
 def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
     b = tokens.shape[0]
     h, hd = cfg.n_heads, cfg.head_dim
-    pos = state["pos"]
-    x = C.embed_lookup(params["embed"], tokens) + _sinusoid(jnp.full((1, 1), pos), cfg.d_model)
+    pos = C.slot_positions(state["pos"], b)[:, 0]  # (B,) per-slot positions
+    x = C.embed_lookup(params["embed"], tokens) + _sinusoid(pos[:, None], cfg.d_model)
 
     def body(x, lp_cache):
         lp, kc, vc, xk_l, xv_l = lp_cache
@@ -222,10 +222,10 @@ def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
         q = C.linear(lp["attn"]["q"], h_in).reshape(b, 1, h, hd)
         k = C.linear(lp["attn"]["k"], h_in).reshape(b, 1, h, hd)
         v = C.linear(lp["attn"]["v"], h_in).reshape(b, 1, h, hd)
-        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos, 0, 0))
+        kc = C.update_cache_slot(kc, k, pos)
+        vc = C.update_cache_slot(vc, v, pos)
         s_max = kc.shape[1]
-        mask = (jnp.arange(s_max)[None, None, :] <= pos) * jnp.ones((b, 1, 1), bool)
+        mask = jnp.arange(s_max)[None, None, :] <= pos[:, None, None]
         x = x + C.linear(lp["attn"]["o"], C._sdpa(q, kc, vc, mask).reshape(b, 1, h * hd))
         full = jnp.ones((b, 1, xk_l.shape[1]), bool)
         q2 = C.linear(lp["xattn"]["q"], _ln(lp["ln2"], x, cfg.norm_eps)).reshape(b, 1, h, hd)

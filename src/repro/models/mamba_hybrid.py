@@ -210,7 +210,7 @@ def _shared_attn(sp, adapter, x, emb0, cfg: ModelConfig, cache=None, pos=None):
     positions = (
         jnp.arange(s)[None, :] * jnp.ones((b, 1), jnp.int32)
         if pos is None
-        else jnp.full((b, s), pos, jnp.int32)
+        else C.slot_positions(pos, b, s)
     )
     tables = C.rope_tables(positions, hd, 1.0, 10000.0)
     q = C.apply_rope(q, tables)
@@ -220,9 +220,11 @@ def _shared_attn(sp, adapter, x, emb0, cfg: ModelConfig, cache=None, pos=None):
         new_kv = (k, v)
     else:
         kc, vc = cache
-        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos, 0, 0))
-        mask = (jnp.arange(kc.shape[1])[None, None, :] <= pos) * jnp.ones((b, s, 1), bool)
+        assert s == 1, f"cached _shared_attn is single-token decode only, got s={s}"
+        pos_v = positions[:, 0]  # (B,) per-slot write offsets
+        kc = C.update_cache_slot(kc, k, pos_v)
+        vc = C.update_cache_slot(vc, v, pos_v)
+        mask = jnp.arange(kc.shape[1])[None, None, :] <= pos_v[:, None, None]
         att = C._sdpa(q, kc, vc, mask)
         new_kv = (kc, vc)
     y = C.linear(sp["o"], att.reshape(b, s, h * hd))
@@ -323,7 +325,7 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=C.DTYPE)
     st = {
         "ssm": jnp.zeros((*mshape, batch, h_ssm, pdim, n), jnp.float32),
         "conv": jnp.zeros((*mshape, batch, kconv - 1, di + 2 * n), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
     if n_seg:
         h, hd = cfg.n_heads, cfg.head_dim
@@ -338,7 +340,7 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=C.DTYPE)
 def decode_step(params, cfg: ModelConfig, state, tokens):
     x = C.embed_lookup(params["embed"], tokens)
     emb0 = x
-    pos = state["pos"]
+    pos = C.slot_positions(state["pos"], tokens.shape[0])[:, 0]
     n_seg, every, rest = _segments(cfg)
 
     def m_body(x, lp_st):

@@ -70,7 +70,7 @@ def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int, dt
     return {
         "ckv": jnp.zeros((n_layers, batch, max_len, cfg.kv_lora_rank), dtype),
         "krope": jnp.zeros((n_layers, batch, max_len, cfg.qk_rope_dim), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -87,13 +87,15 @@ def mla_prefill_layer(p: dict, x: jax.Array, cfg: ModelConfig):
 def mla_decode(p: dict, x: jax.Array, cfg: ModelConfig, ckv_cache, krope_cache, pos):
     """Absorbed-form single-token decode over the latent cache.
 
-    x: (B, 1, D); ckv_cache: (B, S_max, kvr); krope_cache: (B, S_max, rope).
+    x: (B, 1, D); ckv_cache: (B, S_max, kvr); krope_cache: (B, S_max, rope);
+    pos: per-slot positions (B,) — each slot attends to its own prefix.
     """
     b, sq, d = x.shape
     h = cfg.n_heads
     nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
-    positions = jnp.full((b, sq), pos, jnp.int32)
+    positions = C.slot_positions(pos, b, sq)
+    pos_v = positions[:, 0]
 
     cq = C.rmsnorm(C.linear(p["wq_a"], x), p["q_norm"], cfg.norm_eps)
     q = C.linear(p["wq_b"], cq).reshape(b, sq, h, nope + rope)
@@ -101,14 +103,12 @@ def mla_decode(p: dict, x: jax.Array, cfg: ModelConfig, ckv_cache, krope_cache, 
     tables = C.rope_tables(positions, rope, 1.0, cfg.rope_theta)
     q_rope = C.apply_rope(q_rope, tables)
 
-    # update latent cache with this step's compressed kv
+    # update latent cache with this step's compressed kv (per-slot offsets)
     ckv_full = C.linear(p["wkv_a"], x)
     ckv_t = C.rmsnorm(ckv_full[..., :kvr], p["kv_norm"], cfg.norm_eps)
     krope_t = _rope_1head(ckv_full[..., kvr:], positions, cfg.rope_theta)
-    ckv_cache = jax.lax.dynamic_update_slice(ckv_cache, ckv_t.astype(ckv_cache.dtype), (0, pos, 0))
-    krope_cache = jax.lax.dynamic_update_slice(
-        krope_cache, krope_t.astype(krope_cache.dtype), (0, pos, 0)
-    )
+    ckv_cache = C.update_cache_slot(ckv_cache, ckv_t, pos_v)
+    krope_cache = C.update_cache_slot(krope_cache, krope_t, pos_v)
 
     # absorb W_uk into q: q_eff (B, 1, H, kvr)
     wkv_b = p["wkv_b"]["w"].reshape(kvr, h, nope + vd)
@@ -120,7 +120,7 @@ def mla_decode(p: dict, x: jax.Array, cfg: ModelConfig, ckv_cache, krope_cache, 
     logits = jnp.einsum("bqhk,btk->bhqt", q_eff, ckv_cache).astype(jnp.float32)
     logits = logits + jnp.einsum("bqhr,btr->bhqt", q_rope, krope_cache).astype(jnp.float32)
     logits = logits / ((nope + rope) ** 0.5)
-    mask = (jnp.arange(s_max)[None, None, None, :] <= pos)
+    mask = jnp.arange(s_max)[None, None, None, :] <= pos_v[:, None, None, None]
     logits = jnp.where(mask, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
     ctx = jnp.einsum("bhqt,btk->bqhk", probs, ckv_cache)

@@ -134,9 +134,9 @@ def _moe_local(p: dict, x: jax.Array, cfg: ModelConfig):
 
 
 def _moe_shard_body(x, router_w, gate, up, down, *, cfg: ModelConfig, ep_axis: str,
-                    fsdp_axes: tuple[str, ...], all_axes: tuple[str, ...]):
+                    ep_size: int, fsdp_axes: tuple[str, ...], all_axes: tuple[str, ...]):
     """Per-shard body. x: (T_loc, D); experts: (E_loc, ...) local slices."""
-    ep = jax.lax.axis_size(ep_axis)
+    ep = ep_size  # static mesh extent (jax.lax.axis_size is newer-jax-only)
     for ax in fsdp_axes:  # ZeRO-3: gather the fsdp-sharded expert dims
         gate = jax.lax.all_gather(gate, ax, axis=1, tiled=True)
         up = jax.lax.all_gather(up, ax, axis=1, tiled=True)
@@ -186,8 +186,8 @@ def _moe_ep(p: dict, x: jax.Array, cfg: ModelConfig):
     fs = fsdp if fsdp else None
 
     body = lambda xx, rw, g, u, dn: _moe_shard_body(
-        xx, rw, g, u, dn, cfg=cfg, ep_axis=ep_axis, fsdp_axes=fsdp,
-        all_axes=tok_axes or (ep_axis,)
+        xx, rw, g, u, dn, cfg=cfg, ep_axis=ep_axis, ep_size=mesh.shape[ep_axis],
+        fsdp_axes=fsdp, all_axes=tok_axes or (ep_axis,)
     )
     out, aux = shard_map(
         body,

@@ -86,14 +86,14 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict):
     state = {
         "k": jax.lax.dynamic_update_slice(state["k"], ks.astype(state["k"].dtype), (0, 0, 0, 0, 0)),
         "v": jax.lax.dynamic_update_slice(state["v"], vs.astype(state["v"].dtype), (0, 0, 0, 0, 0)),
-        "pos": jnp.asarray(s, jnp.int32),
+        "pos": jnp.full((b,), s, jnp.int32),
     }
     return D._unembed(params, cfg, x[:, -1:]), state
 
 
 def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
     x = C.embed_lookup(params["embed"], tokens)
-    pos = state["pos"]
+    pos = C.slot_positions(state["pos"], tokens.shape[0])[:, 0]
 
     def body(x, lp_cache):
         lp, kc, vc = lp_cache
@@ -105,12 +105,8 @@ def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
 
     x, (kts, vts) = jax.lax.scan(body, x, (params["layers"], state["k"], state["v"]))
     new_state = {
-        "k": jax.lax.dynamic_update_slice(
-            state["k"], kts.astype(state["k"].dtype), (0, 0, pos, 0, 0)
-        ),
-        "v": jax.lax.dynamic_update_slice(
-            state["v"], vts.astype(state["v"].dtype), (0, 0, pos, 0, 0)
-        ),
+        "k": C.update_cache_slot_stacked(state["k"], kts, pos),
+        "v": C.update_cache_slot_stacked(state["v"], vts, pos),
         "pos": pos + 1,
     }
     return D._unembed(params, cfg, x), new_state

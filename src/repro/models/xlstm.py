@@ -375,7 +375,7 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=C.DTYPE)
         "mn": jnp.zeros((*mshape, batch, h, dqk), jnp.float32),
         "mm": jnp.full((*mshape, batch, h), -1e30, jnp.float32),
         "conv": jnp.zeros((*mshape, batch, 3, d_inner), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
     if n_seg:
         st.update(

@@ -11,6 +11,9 @@ from repro.models.registry import get_model
 
 jax.config.update("jax_platform_name", "cpu")
 
+# full-arch sweeps take minutes on CPU; excluded from the fast CI lane
+pytestmark = pytest.mark.slow
+
 
 def _batch_for(cfg, key, b=2, s=32):
     toks = jax.random.randint(key, (b, s), 0, cfg.vocab)

@@ -93,6 +93,7 @@ def tiny_setup():
     return cfg, step_fn, params, opt_state, ds
 
 
+@pytest.mark.slow
 def test_train_loop_runs_and_checkpoints(tmp_path, tiny_setup):
     cfg, step_fn, params, opt_state, ds = tiny_setup
     mgr = CheckpointManager(tmp_path / "a", async_save=False)
@@ -104,6 +105,7 @@ def test_train_loop_runs_and_checkpoints(tmp_path, tiny_setup):
     assert mgr.list_steps()[-1] == 12
 
 
+@pytest.mark.slow
 def test_train_loop_recovers_from_failure(tmp_path, tiny_setup):
     cfg, step_fn, params, opt_state, ds = tiny_setup
     mgr = CheckpointManager(tmp_path / "b", async_save=False)

@@ -18,6 +18,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import get_config  # noqa: E402
 from repro.launch.hlo_cost import analyze_hlo  # noqa: E402
+from repro.launch.mesh import use_mesh  # noqa: E402
 from repro.launch.sharding import (  # noqa: E402
     batch_specs,
     decode_state_specs,
@@ -83,7 +84,7 @@ def test_train_step_compiles_sharded(mesh_ctx):
              "labels": jax.ShapeDtypeStruct((4, 64), jnp.int32)}
     bshard = make_shardings(mesh, batch_specs(cfg, batch, ctx))
     step = make_train_step(cfg, opt)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         compiled = jax.jit(
             step, in_shardings=(pshard, oshard, bshard),
             out_shardings=(pshard, oshard, NamedSharding(mesh, P())),
@@ -116,7 +117,7 @@ def test_ep_moe_collectives_present(mesh_ctx):
     batch = {"tokens": jax.ShapeDtypeStruct((4, 64), jnp.int32),
              "labels": jax.ShapeDtypeStruct((4, 64), jnp.int32)}
     bshard = make_shardings(mesh, batch_specs(cfg, batch, ctx))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         compiled = jax.jit(
             lambda p, b: model.loss_fn(p, cfg, b),
             in_shardings=(pshard, bshard),
