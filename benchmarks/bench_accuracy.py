@@ -32,7 +32,6 @@ def _spike(params):
     """Inject heavy input-channel outliers into every block linear — the
     LLM-scale weight statistics (Fig 2) that a 400-step 7M-param model has
     not yet developed. The benign-model eval is reported alongside."""
-    import jax
     import jax.numpy as jnp
 
     def visit(tree):

@@ -7,11 +7,9 @@ from __future__ import annotations
 import json
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import QuantSpec
 from repro.core.calibration import CalibConfig, calibrate_layer, layer_quant_configs
 from repro.core.decomposition import svd_decompose
 from repro.core.errors import eta_gain, groupwise_error_map, total_delta, zeta_gain

@@ -19,11 +19,9 @@ re-read. Roofline latency = bytes / HBM_BW vs flops / PEAK, take max.
 from __future__ import annotations
 
 import json
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 from benchmarks.common import ART, emit
@@ -68,46 +66,70 @@ def derived_latency(m, k, n, r, fused):
     return max(t_mem, t_cmp) + invocations * INVOKE_US * 1e-6
 
 
-def run() -> dict:
-    results = {}
-    t0 = time.monotonic()
-    for name, (k, n) in LAYERS.items():
-        for b in BATCHES:
-            for phase, m in (("prefill", b * PREFILL_TOKENS), ("decode", b)):
-                tf = derived_latency(m, k, n, RANK, fused=True)
-                tu = derived_latency(m, k, n, RANK, fused=False)
-                results[f"{name}/b{b}/{phase}"] = {
-                    "fused_us": tf * 1e6, "unfused_us": tu * 1e6,
-                    "speedup": tu / tf,
-                }
-    # interpret-mode exactness spot-check: fused kernel == two-pass reference
+def _interpret_exactness() -> dict:
+    """Small-shape interpret-mode agreement: both kernel schedules, routed
+    through the dispatch layer, against the jnp oracle."""
+    from repro.kernels.dispatch import quant_linear
     from repro.kernels.ops import pack_twinquant_weights
     from repro.kernels.ref import dual_gemm_ref
-    from repro.kernels.twinquant_dual_gemm import dual_gemm
 
     key = jax.random.PRNGKey(0)
     k1, k2, k3, k4 = jax.random.split(key, 4)
-    K, N, r, M = 512, 256, 64, 64
+    K, N, r = 512, 256, 64
     w = pack_twinquant_weights(
         jax.random.normal(k1, (K, r)) * 0.1,
         jax.random.normal(k2, (r, N)) * 0.1,
         jax.random.normal(k3, (K, N)) * 0.05,
     )
-    x = jax.random.normal(k4, (M, K)).astype(jnp.bfloat16)
-    y_k = dual_gemm(x, w, block_m=64, block_n=128, block_k=256, interpret=True)
-    y_r = dual_gemm_ref(x, w)
-    exact = bool(jnp.all(y_k == y_r))
-    dt = time.monotonic() - t0
+    out = {}
+    for phase, m in (("prefill", 64), ("decode", 4)):
+        x = jax.random.normal(k4, (m, K)).astype(jnp.bfloat16)
+        y_k = quant_linear(x, w, impl="kernel", interpret=True)
+        y_r = dual_gemm_ref(x, w)
+        # the prefill epilogue reassociates f32 adds (<=2 bf16 ULP); the
+        # decode schedule matches the oracle's accumulation order exactly
+        tol = 0.0 if phase == "decode" else 0.05
+        close = bool(
+            jnp.max(jnp.abs(y_k.astype(jnp.float32) - y_r.astype(jnp.float32))) <= tol
+        )
+        out[f"{phase}_matches_ref_interpret"] = close
+    return out
 
+
+def run(quick: bool = False) -> dict:
+    """``quick=True`` (the CI bench lane) runs only the interpret-mode
+    exactness checks; the full run adds the derived fusion-speedup grid."""
+    results = {}
+    if not quick:
+        for name, (k, n) in LAYERS.items():
+            for b in BATCHES:
+                for phase, m in (("prefill", b * PREFILL_TOKENS), ("decode", b)):
+                    tf = derived_latency(m, k, n, RANK, fused=True)
+                    tu = derived_latency(m, k, n, RANK, fused=False)
+                    results[f"{name}/b{b}/{phase}"] = {
+                        "fused_us": tf * 1e6, "unfused_us": tu * 1e6,
+                        "speedup": tu / tf,
+                    }
+    exact = _interpret_exactness()
+    results["exactness"] = exact
+
+    ART.mkdir(parents=True, exist_ok=True)
     (ART / "bench_kernels.json").write_text(json.dumps(results, indent=2))
     for key_, v in results.items():
-        if "/decode" in key_ and "/b1/" in key_ or "/b8/" in key_:
+        if not isinstance(v, dict) or "fused_us" not in v:
+            continue
+        if "/decode" in key_ and ("/b1/" in key_ or "/b8/" in key_):
             emit(f"kernel_fusion/{key_}", v["fused_us"],
                  f"speedup={v['speedup']:.2f}x(derived)")
-    sp = [v["speedup"] for kk, v in results.items() if "decode" in kk]
-    emit("kernel_fusion/decode_speedup_range", 0.0,
-         f"{min(sp):.2f}x-{max(sp):.2f}x(derived;paper:1.4-2.2x)")
-    emit("kernel_fusion/fused_equals_ref_interpret", 0.0, str(exact))
+    sp = [v["speedup"] for kk, v in results.items()
+          if isinstance(v, dict) and "decode" in kk and "speedup" in v]
+    if sp:
+        emit("kernel_fusion/decode_speedup_range", 0.0,
+             f"{min(sp):.2f}x-{max(sp):.2f}x(derived;paper:1.4-2.2x)")
+    for kk, ok in exact.items():
+        emit(f"kernel_fusion/{kk}", 0.0, str(ok))
+    if not all(exact.values()):
+        raise RuntimeError(f"kernel/oracle mismatch: {exact}")
     return results
 
 

@@ -6,7 +6,7 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from benchmarks.common import ART, emit
+from benchmarks.common import emit
 
 DRYRUN = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
 

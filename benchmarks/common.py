@@ -8,8 +8,6 @@ EXPERIMENTS.md); the reproduced CLAIMS are the orderings and trends.
 
 from __future__ import annotations
 
-import json
-import time
 from pathlib import Path
 
 import jax

@@ -1,0 +1,95 @@
+"""CI benchmark gate: fail when serving throughput regresses vs the baseline.
+
+Usage::
+
+    python benchmarks/compare.py benchmarks/baseline.json BENCH_PR.json \
+        --max-regress 0.25
+
+Both files are ``benchmarks/run.py --quick --out`` outputs (schema 1). Gated
+metrics are the measured continuous-batching engine decode tokens/s at each
+batch size; the PR fails when any drops more than ``--max-regress`` (fraction)
+below the committed baseline. The candidate's dispatch routing is also
+checked: every engine decode sweep must have routed the decode-shaped kernel.
+
+Baseline refresh procedure (DESIGN.md §12): download the ``BENCH_PR.json``
+artifact from a green run ON THE CI RUNNER CLASS and commit it as
+``benchmarks/baseline.json`` — never regenerate it on a dev machine, since
+the gate compares absolute tokens/s.
+
+A baseline carrying ``"bootstrap": true`` (the initial dev-machine seed,
+whose absolute numbers don't transfer to the CI runner class) downgrades
+throughput regressions to warnings; the machine-independent routing check
+still fails hard. Promoting a CI-produced ``BENCH_PR.json`` (which never
+carries the flag) arms the full gate automatically.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def engine_metrics(doc: dict) -> dict[str, float]:
+    eng = doc["results"]["throughput"]["engine_measured"]
+    return {f"decode_tok_s/{b}": v["decode_tok_s"] for b, v in sorted(eng.items())}
+
+
+def check_routing(doc: dict) -> list[str]:
+    errors = []
+    eng = doc["results"]["throughput"]["engine_measured"]
+    for b, v in sorted(eng.items()):
+        if v.get("routing", {}).get("dual/decode", 0) == 0:
+            errors.append(f"{b}: decode sweep did not route the decode-shaped kernel")
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="allowed fractional tokens/s drop (default 0.25)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.candidate) as f:
+        cand = json.load(f)
+
+    bootstrap = bool(base.get("bootstrap"))
+    base_m = engine_metrics(base)
+    cand_m = engine_metrics(cand)
+    failures = check_routing(cand)  # machine-independent: always hard
+    warnings = []
+
+    print(f"{'metric':<24} {'baseline':>12} {'candidate':>12} {'ratio':>8}  gate")
+    for name, bv in base_m.items():
+        cv = cand_m.get(name)
+        if cv is None:
+            failures.append(f"{name}: missing from candidate")
+            print(f"{name:<24} {bv:>12.1f} {'MISSING':>12}")
+            continue
+        ratio = cv / bv if bv > 0 else float("inf")
+        ok = cv >= bv * (1.0 - args.max_regress)
+        verdict = "ok" if ok else ("WARN(bootstrap)" if bootstrap else "FAIL")
+        print(f"{name:<24} {bv:>12.1f} {cv:>12.1f} {ratio:>7.2f}x  {verdict}")
+        if not ok:
+            msg = f"{name}: {cv:.1f} < {bv:.1f} * (1 - {args.max_regress:.2f})"
+            (warnings if bootstrap else failures).append(msg)
+    for name in cand_m:
+        if name not in base_m:
+            print(f"{name:<24} {'(new)':>12} {cand_m[name]:>12.1f}")
+
+    for msg in warnings:
+        print(f"WARN (bootstrap baseline, not gating): {msg}", file=sys.stderr)
+    if failures:
+        print("\nBENCH GATE FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        raise SystemExit(1)
+    print("\nbench gate: ok" + (" (bootstrap baseline)" if bootstrap else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -9,15 +9,33 @@ artifacts land in artifacts/ for EXPERIMENTS.md.
   bench_throughput — Figure 5: end-to-end W4A4 vs FP16 speedup (derived)
   bench_error_analysis — Figs 1/2/7 + Thm 4.1 gains
   bench_roofline   — §Roofline table from dry-run artifacts
+
+``--quick`` is the CI bench lane: the small-shape interpret-mode kernel
+checks plus the measured serving-engine throughput sweep (no model
+training), with the combined results written to ``--out`` (BENCH_PR.json)
+for benchmarks/compare.py to gate against benchmarks/baseline.json.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
+QUICK_MODULES = ("kernels", "throughput")
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("modules", nargs="*", help="subset of benchmark modules to run")
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="CI bench lane: kernels + serving-engine throughput only",
+    )
+    ap.add_argument("--out", default=None, help="write combined results JSON here")
+    args = ap.parse_args()
+
     from benchmarks import (
         bench_accuracy,
         bench_error_analysis,
@@ -35,15 +53,26 @@ def main() -> None:
         "rank": bench_rank,
         "roofline": bench_roofline,
     }
-    selected = sys.argv[1:] or list(mods)
+    if args.quick:
+        selected = list(QUICK_MODULES)
+    else:
+        selected = args.modules or list(mods)
     print("name,us_per_call,derived")
-    failed = []
+    results, failed = {}, []
     for name in selected:
         try:
-            mods[name].run()
+            if name in QUICK_MODULES:
+                results[name] = mods[name].run(quick=args.quick)
+            else:
+                results[name] = mods[name].run()
         except Exception:
             traceback.print_exc()
             failed.append(name)
+    if args.out:
+        doc = {"schema": 1, "quick": args.quick, "results": results}
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.out}", file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -56,7 +56,13 @@ def main():
     print(f" served {len(requests)} requests, {total_new} tokens in {dt:.1f}s: "
           f"decode {th['decode_tok_s']:.1f} tok/s, prefill {th['prefill_tok_s']:.1f} tok/s, "
           f"mean occupancy {th['mean_batch_occupancy']:.2f}/{engine.batch} slots "
-          f"(1 CPU core, ref path)")
+          f"(1 CPU core, oracle numerics)")
+    # which kernel schedule each quantized linear routed to, per trace:
+    # decode steps (M=slots<=8) must hit the decode-shaped schedule, the
+    # prompt prefill (M=prompt length) the prefill one
+    routes = ", ".join(f"{k}:{v}" for k, v in sorted(th["routing"].items()))
+    print(f" dispatch routes: {routes}")
+    assert th["routing"].get("dual/decode", 0) > 0, "decode steps must route decode"
     print("serve_quantized OK")
 
 

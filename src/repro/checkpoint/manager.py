@@ -14,7 +14,6 @@ import json
 import re
 import shutil
 import threading
-import time
 from pathlib import Path
 from typing import Any, Optional
 

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional
 
 __all__ = ["ModelConfig", "QuantSpec", "register", "get_config", "list_configs", "ARCH_IDS"]
 

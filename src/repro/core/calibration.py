@@ -20,13 +20,13 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.decomposition import Decomposition, decompose, search_alpha
-from repro.core.manifold import HybridOpt, HybridState
+from repro.core.manifold import HybridOpt
 from repro.core.quantization import QuantConfig, fake_quant
 from repro.core.transforms import (
     GLParams,
@@ -120,10 +120,9 @@ def calibrate_layer(
     # 1) smoothing (alpha grid-search) + SVD decomposition
     aq_s, uq, vq, rq = layer_quant_configs(m, cfg.rank, cfg)
     if cfg.smooth_alpha is None:
-        alpha, lam = search_alpha(x, w, cfg.rank, rq, aq_s)
+        alpha, _ = search_alpha(x, w, cfg.rank, rq, aq_s)
     else:
         alpha = cfg.smooth_alpha
-        lam = None
     decomp = decompose(w, cfg.rank, act_absmax=jnp.max(jnp.abs(x), axis=0), alpha=alpha)
     x_hat = x / decomp.lam[None, :]
     U, V, R = decomp.U, decomp.V, decomp.R

@@ -26,7 +26,7 @@ zeroing the learning rate per parameter group — see
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

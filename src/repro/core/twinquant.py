@@ -24,7 +24,7 @@ einsum operand, not a plain linear).
 from __future__ import annotations
 
 import re
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -86,10 +86,10 @@ def quantize_params(params: Any, cfg: ModelConfig, spec: QuantSpec) -> Any:
     usable under jax.eval_shape for the dry-run."""
     if spec.mode == "bf16":
         return params
-    if spec.mode == "w4a16":
-        pack = lambda w: _pack_one_w4a16(w, spec)
-    else:
-        pack = lambda w: _pack_one(w, spec)
+    pack_one = _pack_one_w4a16 if spec.mode == "w4a16" else _pack_one
+
+    def pack(w):
+        return pack_one(w, spec)
 
     def visit(tree, path=""):
         if isinstance(tree, dict):

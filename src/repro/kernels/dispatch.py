@@ -1,0 +1,281 @@
+"""Unified quantized-linear dispatch: one entry point, three schedules.
+
+Every quantized matmul in the system — model forward passes, the serving
+engine, the benchmarks — funnels through :func:`quant_linear` (dual
+component) or :func:`w4a16_linear` (weight-only), which route each call by
+**shape regime** at trace time:
+
+  * ``prefill`` — M >= 128-panel schedule: the (M/bm, N/bn, K/bk) fused
+    kernel in twinquant_dual_gemm.py, blocks from the persisted autotuner
+    (kernels/autotune.py) with a deterministic heuristic fallback;
+  * ``decode``  — M <= DECODE_M_MAX (the continuous-batching slot count):
+    the resident-panel kernel in twinquant_dual_gemv.py, which pins the
+    activation panel and both low-rank factors whole in VMEM;
+  * ``ref``     — untileable shapes (K not a multiple of the scale group,
+    N not 128-aligned, ...) run the exact jnp oracle in kernels/ref.py.
+    This replaces the old hard asserts: an odd shape is a routing decision,
+    not a crash.
+
+Routing is a trace-time (static-shape) decision, so under ``jax.jit`` it
+costs nothing on the execution path. Each decision increments a **dispatch
+counter** keyed ``<kind>/<path>``: under jit that means one bump per
+compiled route (per executable, not per step); for eager callers it is one
+bump per call. The counters are process-global — the routing tests and the
+benchmark gate read them around sequentially-driven engines.
+
+Execution backend is orthogonal to routing (``impl`` argument):
+
+  * ``"auto"``   — Pallas kernel on TPU; on CPU the routed schedule is
+    *recorded* but executed with the oracle's exact numerics (interpret-mode
+    Pallas is orders of magnitude too slow for the serving engine);
+  * ``"kernel"`` — force the routed Pallas kernel (interpret mode on CPU) —
+    what the kernel-agreement tests use;
+  * ``"ref"``    — force the oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.autotune import DECODE_M_MAX, get_blocks
+from repro.kernels.ref import TwinQuantWeights
+from repro.kernels.twinquant_dual_gemm import dual_gemm
+from repro.kernels.twinquant_dual_gemv import dual_gemv
+from repro.kernels.w4a16_gemm import w4a16_gemm
+
+__all__ = [
+    "DECODE_M_MAX",
+    "QuantLinear",
+    "Route",
+    "classify_dual",
+    "classify_w4a16",
+    "default_interpret",
+    "dispatch_counters",
+    "quant_linear",
+    "reset_dispatch_counters",
+    "w4a16_linear",
+]
+
+PATH_PREFILL = "prefill"
+PATH_DECODE = "decode"
+PATH_REF = "ref"
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    """A routing decision: which schedule, which blocks, and why."""
+
+    path: str  # "prefill" | "decode" | "ref"
+    blocks: Optional[tuple[int, int, int]]  # (bm, bn, bk); None for ref
+    reason: str
+
+
+# ---------------------------------------------------------------------------
+# dispatch counters (trace-time)
+# ---------------------------------------------------------------------------
+
+_counters: dict[str, int] = {}
+
+
+def dispatch_counters() -> dict[str, int]:
+    """Snapshot of per-(kind, path) routing decision counts."""
+    return dict(_counters)
+
+
+def reset_dispatch_counters() -> None:
+    _counters.clear()
+
+
+def _record(kind: str, path: str) -> None:
+    key = f"{kind}/{path}"
+    _counters[key] = _counters.get(key, 0) + 1
+
+
+# ---------------------------------------------------------------------------
+# classification
+# ---------------------------------------------------------------------------
+
+
+def classify_dual(
+    m: int, n: int, k: int, group: int, rgroup: int, rank: int
+) -> Route:
+    """Route a dual-component (M, K) x (K, N) call by shape regime."""
+    if k % group != 0 or group % 2 != 0:
+        return Route(PATH_REF, None, f"K={k} not tileable by group={group}")
+    if rank % rgroup != 0 or rgroup % 2 != 0:
+        return Route(PATH_REF, None, f"rank={rank} not tileable by rgroup={rgroup}")
+    if m <= DECODE_M_MAX:
+        blocks = get_blocks("dual_decode", m, n, k, group, rank)
+        if blocks is None:
+            return Route(PATH_REF, None, f"N={n} not 128-aligned")
+        return Route(PATH_DECODE, blocks, f"M={m}<={DECODE_M_MAX}")
+    blocks = get_blocks("dual_prefill", m, n, k, group, rank)
+    if blocks is None:
+        return Route(PATH_REF, None, f"(N={n}, K={k}) not tileable")
+    return Route(PATH_PREFILL, blocks, f"M={m}>{DECODE_M_MAX}")
+
+
+def classify_w4a16(m: int, n: int, k: int, group: int) -> Route:
+    """Route a weight-only call: the prefill-style kernel or the oracle."""
+    if k % group != 0 or group % 2 != 0:
+        return Route(PATH_REF, None, f"K={k} not tileable by group={group}")
+    blocks = get_blocks("w4a16", m, n, k, group)
+    if blocks is None:
+        return Route(PATH_REF, None, f"(N={n}, K={k}) not tileable")
+    return Route(PATH_PREFILL, blocks, "weight-only kernel schedule")
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+
+def _flatten(x: jax.Array) -> tuple[jax.Array, tuple[int, ...], int]:
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    return x2, batch_shape, x2.shape[0]
+
+
+def _pad_m(x2: jax.Array, bm: int) -> jax.Array:
+    pad = (-x2.shape[0]) % bm
+    return jnp.pad(x2, ((0, pad), (0, 0))) if pad else x2
+
+
+def _finish(y, m, batch_shape, n, bias):
+    y = y[:m].reshape(*batch_shape, n)
+    if bias is not None:
+        y = (y.astype(jnp.float32) + bias.astype(jnp.float32)).astype(y.dtype)
+    return y
+
+
+def quant_linear(
+    x: jax.Array,
+    w: TwinQuantWeights,
+    bias: Optional[jax.Array] = None,
+    *,
+    impl: str = "auto",
+    interpret: Optional[bool] = None,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+) -> jax.Array:
+    """Dual-component quantized linear: (..., K) -> (..., N) bf16, routed.
+
+    Explicit block sizes pin the prefill schedule (legacy kernel-test hook)
+    and default ``impl`` to ``"kernel"``.
+    """
+    k = x.shape[-1]
+    n = w.ndim_out
+    x2, batch_shape, m = _flatten(x)
+    explicit = block_m is not None or block_n is not None or block_k is not None
+    if impl == "ref":
+        route = Route(PATH_REF, None, "forced impl=ref")
+    elif explicit:
+        base = get_blocks("dual_prefill", m, n, k, w.group, w.rank) or (
+            min(128, m), 128, w.group,
+        )
+        blocks = (block_m or base[0], block_n or base[1], block_k or base[2])
+        route = Route(PATH_PREFILL, blocks, "explicit blocks")
+        if impl == "auto":
+            impl = "kernel"
+    else:
+        route = classify_dual(m, n, k, w.group, w.rgroup, w.rank)
+    _record("dual", route.path)
+
+    if interpret is None:
+        interpret = default_interpret()
+    run_kernel = route.path != PATH_REF and (
+        impl == "kernel" or (impl == "auto" and not interpret)
+    )
+    if not run_kernel:
+        y = _ref.dual_gemm_ref(x2, w)
+    elif route.path == PATH_DECODE:
+        y = dual_gemv(x2, w, block_n=route.blocks[1], interpret=interpret)
+    else:
+        bm, bn, bk = route.blocks
+        y = dual_gemm(
+            _pad_m(x2, bm), w, block_m=bm, block_n=bn, block_k=bk, interpret=interpret
+        )
+    return _finish(y, m, batch_shape, n, bias)
+
+
+def w4a16_linear(
+    x: jax.Array,
+    wp: jax.Array,
+    ws: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    group: int = 128,
+    impl: str = "auto",
+    interpret: Optional[bool] = None,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+) -> jax.Array:
+    """Weight-only quantized linear: (..., K) -> (..., N) bf16, routed."""
+    k = x.shape[-1]
+    n = wp.shape[-1]
+    x2, batch_shape, m = _flatten(x)
+    explicit = block_m is not None or block_n is not None or block_k is not None
+    if impl == "ref":
+        route = Route(PATH_REF, None, "forced impl=ref")
+    elif explicit:
+        base = get_blocks("w4a16", m, n, k, group) or (min(128, m), 128, group)
+        blocks = (block_m or base[0], block_n or base[1], block_k or base[2])
+        route = Route(PATH_PREFILL, blocks, "explicit blocks")
+        if impl == "auto":
+            impl = "kernel"
+    else:
+        route = classify_w4a16(m, n, k, group)
+    _record("w4a16", route.path)
+
+    if interpret is None:
+        interpret = default_interpret()
+    run_kernel = route.path != PATH_REF and (
+        impl == "kernel" or (impl == "auto" and not interpret)
+    )
+    if not run_kernel:
+        y = _ref.w4a16_gemm_ref(x2, wp, ws, group=group)
+    else:
+        bm, bn, bk = route.blocks
+        y = w4a16_gemm(
+            _pad_m(x2, bm), wp, ws,
+            group=group, block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
+        )
+    return _finish(y, m, batch_shape, n, bias)
+
+
+class QuantLinear:
+    """A routed quantized linear layer bound to one weight pack.
+
+    Thin convenience wrapper over :func:`quant_linear` for callers that hold
+    a :class:`TwinQuantWeights` (offline quantization pipelines, notebooks):
+
+        layer = QuantLinear(weights, bias)
+        y = layer(x)              # routed by x's shape regime
+        layer.route_for(x.shape)  # inspect the decision without running
+    """
+
+    def __init__(self, w: TwinQuantWeights, bias: Optional[jax.Array] = None):
+        self.w = w
+        self.bias = bias
+
+    def __call__(self, x: jax.Array, *, impl: str = "auto") -> jax.Array:
+        return quant_linear(x, self.w, self.bias, impl=impl)
+
+    def route_for(self, shape: tuple[int, ...]) -> Route:
+        m = 1
+        for d in shape[:-1]:
+            m *= d
+        return classify_dual(
+            m, self.w.ndim_out, shape[-1], self.w.group, self.w.rgroup, self.w.rank
+        )

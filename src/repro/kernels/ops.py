@@ -1,22 +1,27 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public wrappers around the Pallas kernels (back-compat surface).
 
-Handles: leading batch dims, M-padding to the block size, interpret-mode
-selection (automatic on CPU — the kernels TARGET TPU and are validated in
-interpret mode per DESIGN.md), bias addition, and block-size heuristics.
+The routing brain lives in kernels/dispatch.py — :func:`twinquant_matmul`
+and :func:`w4a16_matmul` are kept as the stable API used by the kernel tests
+and examples, and delegate to the dispatch layer. Explicit block sizes force
+the prefill-kernel schedule (the legacy behavior the block-sweep tests rely
+on); ``use_ref=True`` forces the jnp oracle.
+
+``pick_blocks`` survives as a fixed, non-asserting heuristic: it now returns
+``None`` for untileable shapes (the old version fell back to ``bn = n`` —
+VMEM blow-up for wide non-128-multiple N — and ``bk = max(bk, group)``,
+which can violate ``k % block_k == 0``). Callers must treat ``None`` as
+"route to the ref path".
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import ref as _ref
+from repro.kernels.autotune import heuristic_blocks
+from repro.kernels.dispatch import default_interpret, quant_linear, w4a16_linear
 from repro.kernels.ref import TwinQuantWeights, pack_twinquant_weights  # re-export
-from repro.kernels.twinquant_dual_gemm import dual_gemm
-from repro.kernels.w4a16_gemm import w4a16_gemm
 
 __all__ = [
     "TwinQuantWeights",
@@ -28,39 +33,11 @@ __all__ = [
 ]
 
 
-def default_interpret() -> bool:
-    return jax.default_backend() == "cpu"
+def pick_blocks(m: int, n: int, k: int, group: int) -> Optional[tuple[int, int, int]]:
+    """Deterministic block heuristic; ``None`` when the shape is untileable."""
+    return heuristic_blocks("dual_prefill", m, n, k, group)
 
 
-def pick_blocks(m: int, n: int, k: int, group: int):
-    """Block-size heuristic: MXU-aligned, VMEM-bounded, shape-capped."""
-    bm = min(128, _round_up_pow2(m))
-    bn = 256 if n % 256 == 0 else (128 if n % 128 == 0 else n)
-    bk = 512 if k % 512 == 0 else (256 if k % 256 == 0 else (128 if k % 128 == 0 else k))
-    bk = max(bk, group)
-    return bm, bn, bk
-
-
-def _round_up_pow2(x: int) -> int:
-    p = 8
-    while p < x and p < 128:
-        p *= 2
-    return p
-
-
-def _flatten_pad(x: jax.Array, bm: int):
-    """(..., K) -> padded (M', K); returns (x2d, batch_shape, m)."""
-    batch_shape = x.shape[:-1]
-    k = x.shape[-1]
-    x2 = x.reshape(-1, k)
-    m = x2.shape[0]
-    pad = (-m) % bm
-    if pad:
-        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
-    return x2, batch_shape, m
-
-
-@functools.partial(jax.jit, static_argnames=("interpret", "block_m", "block_n", "block_k", "use_ref"))
 def twinquant_matmul(
     x: jax.Array,
     w: TwinQuantWeights,
@@ -75,30 +52,17 @@ def twinquant_matmul(
     """y = TwinQuant(x) for x of shape (..., K); returns (..., N) bf16.
 
     ``use_ref=True`` routes through the pure-jnp oracle — the production
-    fallback for shapes the kernel doesn't tile (and for CPU speed in smoke
+    fallback for shapes the kernels don't tile (and for CPU speed in smoke
     tests; interpret-mode Pallas is exact but slow).
     """
-    if interpret is None:
-        interpret = default_interpret()
-    k = x.shape[-1]
-    n = w.ndim_out
-    if use_ref:
-        x2, batch_shape, m = _flatten_pad(x, 1)
-        y = _ref.dual_gemm_ref(x2, w)
-    else:
-        bm, bn, bk = pick_blocks(x.size // k, n, k, w.group)
-        bm = block_m or bm
-        bn = block_n or bn
-        bk = block_k or bk
-        x2, batch_shape, m = _flatten_pad(x, bm)
-        y = dual_gemm(x2, w, block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
-    y = y[:m].reshape(*batch_shape, n)
-    if bias is not None:
-        y = (y.astype(jnp.float32) + bias.astype(jnp.float32)).astype(y.dtype)
-    return y
+    return quant_linear(
+        x, w, bias,
+        impl="ref" if use_ref else "auto",
+        interpret=interpret,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("group", "interpret", "block_m", "block_n", "block_k", "use_ref"))
 def w4a16_matmul(
     x: jax.Array,
     wp: jax.Array,
@@ -112,23 +76,10 @@ def w4a16_matmul(
     block_k: Optional[int] = None,
     use_ref: bool = False,
 ) -> jax.Array:
-    if interpret is None:
-        interpret = default_interpret()
-    k = x.shape[-1]
-    n = wp.shape[1]
-    if use_ref:
-        x2, batch_shape, m = _flatten_pad(x, 1)
-        y = _ref.w4a16_gemm_ref(x2, wp, ws, group=group)
-    else:
-        bm, bn, bk = pick_blocks(x.size // k, n, k, group)
-        bm = block_m or bm
-        bn = block_n or bn
-        bk = block_k or bk
-        x2, batch_shape, m = _flatten_pad(x, bm)
-        y = w4a16_gemm(
-            x2, wp, ws, group=group, block_m=bm, block_n=bn, block_k=bk, interpret=interpret
-        )
-    y = y[:m].reshape(*batch_shape, n)
-    if bias is not None:
-        y = (y.astype(jnp.float32) + bias.astype(jnp.float32)).astype(y.dtype)
-    return y
+    return w4a16_linear(
+        x, wp, ws, bias,
+        group=group,
+        impl="ref" if use_ref else "auto",
+        interpret=interpret,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+    )

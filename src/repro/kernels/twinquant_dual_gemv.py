@@ -1,0 +1,190 @@
+"""Decode-shaped fused dual-component GEMM — the M=B<=8 regime of §4.3.
+
+The prefill kernel (twinquant_dual_gemm.py) is scheduled for M>=128 panels:
+it sweeps N blocks while re-reading the quantized activation panel from a
+VMEM scratch and pays a (M/bm, N/bn, K/bk) grid's worth of index arithmetic.
+In the serving engine's decode steps M is the slot count (1..8), so that
+schedule wastes almost the entire MXU tile on padding and re-walks K once
+per N block for the low-rank path bookkeeping.
+
+This kernel is the decode-matched schedule:
+
+* the whole activation panel ``X (m<=8, K)`` is **resident in VMEM** for the
+  kernel's lifetime (constant-index BlockSpec) — quantized exactly once, at
+  the first grid step, into int8 scratch; no N-sweep requantization logic;
+* **both low-rank factors are pinned whole in VMEM** (``U``: K*r/2 bytes,
+  ``V``: r*N/2 bytes — a few hundred KB at LLaMA3-8B shapes), so the
+  low-rank intermediate ``H = requant(dq(Xq @ Uq))`` is computed and
+  requantized once, at the first grid step, and every N block only pays the
+  tiny (m, r) x (r, bn) second GEMM in its epilogue;
+* the grid is **one-dimensional over N** (``(N/bn,)``): each step streams a
+  whole-K ``(K/2, bn)`` packed residual tile — the only HBM traffic that
+  scales with N — computes the residual component with a fori_loop over
+  scale groups (bounded unroll), adds the low-rank epilogue, and writes the
+  (m, bn) output tile once.
+
+Numerics are identical to kernels/ref.dual_gemm_ref: same group structure,
+same rounding, same ascending-group f32 accumulation order.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quantization import qmax_for_bits
+from repro.kernels.autotune import DECODE_M_MAX
+from repro.kernels.ref import TwinQuantWeights
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both vintages
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["dual_gemv", "DECODE_M_MAX"]
+
+
+def _unpack_rows(p: jax.Array) -> jax.Array:
+    """(G/2, w) packed int8 -> (G, w) int8 (group-split layout)."""
+    p32 = p.astype(jnp.int32)
+    lo = jnp.right_shift(jnp.left_shift(p32, 28), 28)
+    hi = jnp.right_shift(jnp.left_shift(p32, 24), 28)
+    return jnp.concatenate([lo, hi], axis=0).astype(jnp.int8)
+
+
+def _int8_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def _dual_gemv_kernel(
+    # inputs
+    x_ref,  # (m, K)     bf16 — whole panel, resident
+    up_ref,  # (K/2, r)  int8 packed — whole, resident
+    us_ref,  # (K/G, r)  f32
+    vp_ref,  # (r/2, N)  int8 packed — whole, resident
+    vs_ref,  # (r/gr, N) f32
+    rp_ref,  # (K/2, bn) int8 packed — streamed per N block
+    rs_ref,  # (K/G, bn) f32
+    # output
+    o_ref,  # (m, bn)    bf16
+    # scratch (persist across the sequential N grid)
+    xq_s,  # (m, K)      int8 — quantized activation panel
+    xs_s,  # (m, K/G)    f32  — its per-group scales
+    hq_s,  # (m, r)      int8 — requantized low-rank intermediate
+    hs_s,  # (m, r/gr)   f32  — its scales
+    *,
+    bn: int,
+    G: int,
+    gr: int,
+    r: int,
+    a_bits: int,
+    n_groups: int,
+):
+    ni = pl.program_id(0)
+    a_qmax = qmax_for_bits(a_bits)
+    m = xq_s.shape[0]
+
+    # ---- first grid step only: quantize the whole X panel and build H.
+    # No per-N-block requantization state machine — X and U are resident, so
+    # one ascending fori_loop over scale groups does the entire low-rank
+    # front half of the dual GEMM.
+    @pl.when(ni == 0)
+    def _quantize_panel_and_h():
+        def body(g, h):
+            xg = x_ref[:, pl.ds(g * G, G)].astype(jnp.float32)  # (m, G)
+            amax = jnp.max(jnp.abs(xg), axis=1, keepdims=True)  # (m, 1)
+            scale = jnp.where(amax > 0, amax / a_qmax, 1.0)
+            q = jnp.clip(jnp.round(xg / scale), -a_qmax, a_qmax).astype(jnp.int8)
+            xq_s[:, pl.ds(g * G, G)] = q
+            xs_s[:, pl.ds(g, 1)] = scale
+            ug = _unpack_rows(up_ref[pl.ds(g * (G // 2), G // 2), :])  # (G, r)
+            us = us_ref[pl.ds(g, 1), :]  # (1, r)
+            return h + _int8_dot(q, ug).astype(jnp.float32) * scale * us
+
+        h = jax.lax.fori_loop(0, n_groups, body, jnp.zeros((m, r), jnp.float32))
+        for gg in range(r // gr):  # requantize H at a_bits (r/gr is 1-2)
+            hg = h[:, gg * gr : (gg + 1) * gr]
+            amax = jnp.max(jnp.abs(hg), axis=1, keepdims=True)
+            scale = jnp.where(amax > 0, amax / a_qmax, 1.0)
+            hq_s[:, gg * gr : (gg + 1) * gr] = jnp.clip(
+                jnp.round(hg / scale), -a_qmax, a_qmax
+            ).astype(jnp.int8)
+            hs_s[:, gg : gg + 1] = scale
+
+    # ---- every grid step: whole-K residual component for this N block
+    def resid(g, acc):
+        xg = xq_s[:, pl.ds(g * G, G)]  # (m, G) int8
+        sg = xs_s[:, pl.ds(g, 1)]  # (m, 1)
+        rg = _unpack_rows(rp_ref[pl.ds(g * (G // 2), G // 2), :])  # (G, bn)
+        rs = rs_ref[pl.ds(g, 1), :]  # (1, bn)
+        return acc + _int8_dot(xg, rg).astype(jnp.float32) * sg * rs
+
+    out = jax.lax.fori_loop(0, n_groups, resid, jnp.zeros((m, bn), jnp.float32))
+
+    # ---- epilogue: second low-rank GEMM from the resident V + one write-back
+    for gg in range(r // gr):
+        hqg = hq_s[:, gg * gr : (gg + 1) * gr]  # (m, gr)
+        vg = _unpack_rows(vp_ref[gg * (gr // 2) : (gg + 1) * (gr // 2), pl.ds(ni * bn, bn)])
+        pv = _int8_dot(hqg, vg).astype(jnp.float32)
+        out = out + pv * hs_s[:, gg : gg + 1] * vs_ref[gg : gg + 1, pl.ds(ni * bn, bn)]
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def dual_gemv(
+    x: jax.Array,
+    w: TwinQuantWeights,
+    *,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode-shaped fused dual-component matmul. x: (M<=8, K) -> (M, N) bf16.
+
+    N must be a multiple of ``block_n`` and K a multiple of ``w.group``; the
+    dispatch layer routes anything else to the jnp oracle.
+    """
+    m, k = x.shape
+    n = w.ndim_out
+    r = w.rank
+    G, gr = w.group, w.rgroup
+    assert m <= DECODE_M_MAX, (m, DECODE_M_MAX)
+    assert n % block_n == 0 and k % G == 0, (m, n, k)
+    assert r % gr == 0 and gr % 2 == 0
+
+    kernel = functools.partial(
+        _dual_gemv_kernel,
+        bn=block_n, G=G, gr=gr, r=r, a_bits=w.a_bits, n_groups=k // G,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            # resident operands: constant index maps, fetched exactly once
+            pl.BlockSpec((m, k), lambda ni: (0, 0)),
+            pl.BlockSpec((k // 2, r), lambda ni: (0, 0)),
+            pl.BlockSpec((k // G, r), lambda ni: (0, 0)),
+            pl.BlockSpec((r // 2, n), lambda ni: (0, 0)),
+            pl.BlockSpec((r // gr, n), lambda ni: (0, 0)),
+            # streamed residual tile: whole K, one N block per grid step
+            pl.BlockSpec((k // 2, block_n), lambda ni: (0, ni)),
+            pl.BlockSpec((k // G, block_n), lambda ni: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda ni: (0, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.bfloat16),
+        scratch_shapes=[
+            pltpu.VMEM((m, k), jnp.int8),
+            pltpu.VMEM((m, k // G), jnp.float32),
+            pltpu.VMEM((m, r), jnp.int8),
+            pltpu.VMEM((m, r // gr), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            # sequential N sweep: scratch (Xq, H) persists across grid steps
+            dimension_semantics=(pltpu.ARBITRARY,),
+        ),
+        interpret=interpret,
+    )(x, w.up, w.us, w.vp, w.vs, w.rp, w.rs)

@@ -19,7 +19,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ARCH_IDS, ModelConfig, QuantSpec, get_config
 from repro.core.twinquant import quantize_params
 from repro.launch.mesh import dp_axes, make_production_mesh, use_mesh
-from repro.launch.roofline import Roofline, collective_bytes, from_compiled
+from repro.launch.roofline import Roofline
 from repro.launch.sharding import batch_specs, decode_state_specs, make_shardings, param_specs
 from repro.launch.train import make_train_step
 from repro.models.context import MeshContext, set_mesh_context

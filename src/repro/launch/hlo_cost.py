@@ -109,7 +109,6 @@ class HloCost:
 
     def _parse(self, text: str) -> None:
         cur = None
-        is_entry = False
         for line in text.splitlines():
             hdr = _COMP_HDR.match(line)
             if hdr and ("->" in line):

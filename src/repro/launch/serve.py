@@ -157,6 +157,11 @@ class ContinuousBatchingEngine:
             "decode_tokens": 0, "decode_steps": 0, "decode_s": 0.0,
             "requests_done": 0,
         }
+        # dispatch-counter baseline: routing() reports the delta, i.e. the
+        # kernel routes this engine's traces took (quantized params only)
+        from repro.kernels.dispatch import dispatch_counters
+
+        self._dispatch0 = dispatch_counters()
 
     # -- admission ----------------------------------------------------------
 
@@ -270,8 +275,34 @@ class ContinuousBatchingEngine:
         return requests
 
     def reset_stats(self) -> None:
-        """Zero the accounting counters (e.g. after a warm-up pass)."""
+        """Zero the timing counters (e.g. after a warm-up pass).
+
+        The dispatch-routing baseline is NOT reset: routing decisions happen
+        at trace time, so a warm executable would otherwise report an empty
+        route table."""
         self.stats = {k: type(v)() for k, v in self.stats.items()}
+
+    def routing(self) -> dict:
+        """Kernel routes taken by this engine's traces: {kind/path: count}.
+
+        Counts compiled routes (trace-time dispatch decisions) for the
+        quantized linears in this engine's prefill/decode executables —
+        the end-to-end evidence that decode steps hit the decode-shaped
+        kernel schedule and prefill steps hit the prefill one.
+
+        Attribution caveat: the underlying counters are process-global, so
+        the delta also includes routes traced by OTHER engines (or eager
+        quant_linear calls) between this engine's construction and now.
+        Reliable per-engine attribution requires constructing and driving
+        engines sequentially, as the benchmarks do."""
+        from repro.kernels.dispatch import dispatch_counters
+
+        now = dispatch_counters()
+        return {
+            k: v - self._dispatch0.get(k, 0)
+            for k, v in now.items()
+            if v - self._dispatch0.get(k, 0) > 0
+        }
 
     def throughput(self) -> dict:
         """Tokens/s summary from the accounting counters."""
@@ -280,6 +311,7 @@ class ContinuousBatchingEngine:
             "decode_tok_s": st["decode_tokens"] / max(st["decode_s"], 1e-9),
             "prefill_tok_s": st["prefill_tokens"] / max(st["prefill_s"], 1e-9),
             "mean_batch_occupancy": st["decode_tokens"] / max(st["decode_steps"], 1),
+            "routing": self.routing(),
             **st,
         }
 

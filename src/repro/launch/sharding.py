@@ -18,7 +18,6 @@ framework — the dry-run and the real launcher share it.
 from __future__ import annotations
 
 import re
-from typing import Optional
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -229,7 +228,6 @@ def decode_state_specs(cfg: ModelConfig, state_tree, ctx: MeshContext, *,
             return _fit(P(None, dp, m, None), shape, ctx)
         if s.endswith(("mC", "mn", "mm")):
             # xlstm matrix state (..., B, H, dh[, dh]): batch dp, value dim model
-            lead = (None,) * (len(shape) - 1)
             idx = len(shape) - (4 if s.endswith("mC") else (3 if s.endswith("mn") else 2))
             spec = [None] * len(shape)
             spec[idx] = dp

@@ -10,14 +10,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import ModelConfig
 from repro.models.registry import get_model
-from repro.optim import AdamW, AdamWState
+from repro.optim import AdamW
 from repro.optim.grad_compression import compress_grads_int8, decompress_grads_int8
 
 

@@ -115,7 +115,8 @@ def linear(p: dict, x: jax.Array) -> jax.Array:
             y = y + p["b"].astype(y.dtype)
         return y
     if "rp" in p:  # TwinQuant dual-component pack
-        from repro.kernels.ops import TwinQuantWeights, twinquant_matmul
+        from repro.kernels.dispatch import quant_linear
+        from repro.kernels.ref import TwinQuantWeights
 
         # static metadata is encoded in (static) shapes: scale-group sizes
         # from packed-vs-scale row ratios, activation bits from the `abits`
@@ -126,14 +127,15 @@ def linear(p: dict, x: jax.Array) -> jax.Array:
             rgroup=p["vp"].shape[-2] * 2 // p["vs"].shape[-2],
             a_bits=p["abits"].shape[-1],
         )
-        return twinquant_matmul(x, w, p.get("b"), use_ref=jax.default_backend() == "cpu").astype(x.dtype)
+        # routed by shape regime (prefill / decode / ref) at trace time; on
+        # CPU the routed schedule executes with oracle numerics (dispatch.py)
+        return quant_linear(x, w, p.get("b")).astype(x.dtype)
     if "wp" in p:  # W4A16 weight-only pack
-        from repro.kernels.ops import w4a16_matmul
+        from repro.kernels.dispatch import w4a16_linear
 
-        return w4a16_matmul(
+        return w4a16_linear(
             x, p["wp"], p["ws"], p.get("b"),
             group=p["wp"].shape[-2] * 2 // p["ws"].shape[-2],
-            use_ref=jax.default_backend() == "cpu",
         ).astype(x.dtype)
     raise KeyError(f"unrecognized linear params: {sorted(p)}")
 

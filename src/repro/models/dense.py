@@ -9,9 +9,6 @@ size and SPMD-partitioning time flat in depth for the 512-device dry-run.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

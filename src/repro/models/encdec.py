@@ -150,7 +150,10 @@ def _hidden(params: dict, cfg: ModelConfig, tokens: jax.Array, frames: jax.Array
 
 def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
     h = _hidden(params, cfg, batch["tokens"], batch["frames"])
-    head = lambda xc: jnp.einsum("bsd,vd->bsv", xc, C.embed_attend(params["embed"]).astype(xc.dtype))
+
+    def head(xc):
+        return jnp.einsum("bsd,vd->bsv", xc, C.embed_attend(params["embed"]).astype(xc.dtype))
+
     return C.cross_entropy_chunked(h[:, :-1], batch["labels"][:, 1:], head)
 
 

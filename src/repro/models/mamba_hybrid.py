@@ -377,7 +377,6 @@ def decode_step(params, cfg: ModelConfig, state, tokens):
 
 
 def prefill(params, cfg: ModelConfig, tokens, state):
-    x = C.embed_lookup(params["embed"], tokens)
     h = forward(params, cfg, tokens)
     logits = h[:, -1:]
 

@@ -185,10 +185,11 @@ def _moe_ep(p: dict, x: jax.Array, cfg: ModelConfig):
     fsdp = tuple(ax for ax in ctx.fsdp_axes if ax != ep_axis)
     fs = fsdp if fsdp else None
 
-    body = lambda xx, rw, g, u, dn: _moe_shard_body(
-        xx, rw, g, u, dn, cfg=cfg, ep_axis=ep_axis, ep_size=mesh.shape[ep_axis],
-        fsdp_axes=fsdp, all_axes=tok_axes or (ep_axis,)
-    )
+    def body(xx, rw, g, u, dn):
+        return _moe_shard_body(
+            xx, rw, g, u, dn, cfg=cfg, ep_axis=ep_axis, ep_size=mesh.shape[ep_axis],
+            fsdp_axes=fsdp, all_axes=tok_axes or (ep_axis,)
+        )
     out, aux = shard_map(
         body,
         mesh=mesh,

@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ModelConfig
-from repro.models import common as C
 from repro.models import dense, deepseek, encdec, mamba_hybrid, olmoe, xlstm
 
 

@@ -12,8 +12,6 @@ scans over time, which is why the architecture uses it sparsely
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

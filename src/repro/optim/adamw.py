@@ -32,7 +32,9 @@ class AdamW:
     clip_norm: Optional[float] = 1.0
 
     def init(self, params: Any) -> AdamWState:
-        z = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        def z(p):
+            return jnp.zeros(p.shape, self.moment_dtype)
+
         return AdamWState(
             mu=jax.tree.map(z, params),
             nu=jax.tree.map(z, params),

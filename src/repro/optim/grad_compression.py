@@ -34,7 +34,10 @@ def compress_grads_int8(grads: Any, ef: Optional[Any] = None):
         return q, scale, resid.astype(g.dtype)
 
     out = jax.tree.map(comp, grads, ef)
-    is3 = lambda x: isinstance(x, tuple)
+
+    def is3(x):
+        return isinstance(x, tuple)
+
     q = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
     s = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
     new_ef = jax.tree.map(lambda t: t[2], out, is_leaf=is3)

@@ -12,7 +12,7 @@ import pytest
 from repro.core.calibration import CalibConfig, calibrate_layer, layer_quant_configs
 from repro.core.decomposition import decompose, search_alpha, svd_decompose
 from repro.core.errors import total_delta, zeta_gain
-from repro.core.quantization import QuantConfig, dequantize, quantize
+from repro.core.quantization import QuantConfig
 from repro.core.transforms import hadamard_matrix, orthogonality_error
 
 

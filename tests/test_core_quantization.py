@@ -1,7 +1,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ModuleNotFoundError:  # degrade property tests to fixed-seed cases
@@ -10,7 +9,6 @@ except ModuleNotFoundError:  # degrade property tests to fixed-seed cases
 from repro.core.quantization import (
     QuantConfig,
     QTensor,
-    compute_scales,
     dequantize,
     fake_quant,
     pack_int4,
@@ -28,7 +26,6 @@ def test_quantize_roundtrip_error_bound():
     qt = quantize(x, cfg)
     xr = dequantize(qt)
     # max error per element <= scale/2 within the group
-    g = x.reshape(64, 2, 128)
     s = qt.scale[..., None]
     err = jnp.abs((xr - x).reshape(64, 2, 128))
     assert bool(jnp.all(err <= s / 2 + 1e-6))

@@ -10,7 +10,6 @@ try:
 except ModuleNotFoundError:  # degrade property tests to fixed-seed cases
     from hypothesis_fallback import given, settings, strategies as st
 
-from repro.core.quantization import qmax_for_bits
 from repro.kernels.ops import (
     pack_twinquant_weights,
     twinquant_matmul,

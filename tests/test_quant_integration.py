@@ -3,7 +3,6 @@ path, sharding-spec coverage of quantized pytrees, MoE quantized experts."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ModelConfig, QuantSpec, get_config
@@ -69,7 +68,6 @@ def test_sim_variants_ordering(model_and_batch):
     help, consistent with Observation 1), lowrank beats naive."""
     params, toks = model_and_batch
     # inject heavy input-channel outliers into every block linear
-    import copy
 
     def spike(tree):
         if isinstance(tree, dict):
@@ -126,7 +124,6 @@ def test_sharding_specs_cover_quantized_tree():
     """Every quantized leaf gets a valid PartitionSpec (dry-run contract)."""
     from jax.sharding import PartitionSpec as P
 
-    from repro.launch.mesh import make_debug_mesh
     from repro.launch.sharding import param_specs
     from repro.models.context import MeshContext
 

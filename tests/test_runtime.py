@@ -2,7 +2,6 @@
 elastic restore, fault-tolerant train loop (injected failures), straggler
 monitor, data determinism/resume, optimizer, gradient compression."""
 
-import time
 
 import jax
 import jax.numpy as jnp
