@@ -49,58 +49,83 @@ def _step_time(cfg, m_tokens: int, w_bits: int, kv_len: int, batch: int) -> floa
     return max(t_cmp, t_mem)
 
 
-def run_engine() -> dict:
+def run_engine(fused: bool = True) -> dict:
     """Measured batched-decode tokens/s through the continuous-batching
     engine serving the PACKED W4A4 bench model — the full quantized serving
     path (per-slot caches, admission, sampling, dispatch-routed linears).
     Weights are random — throughput is shape-, not value-, bound.
 
+    ``fused=True`` (the default serving configuration) pre-merges sibling
+    packs (q/k/v, gate/up) with ``fuse_params`` and leaves trace-time fusion
+    on; ``fused=False`` is the A/B lane: unfused packs, fusion disabled.
+
     Every decode trace must route its quantized linears through the
-    decode-shaped kernel schedule; the dispatch counters are the proof and
-    a hard failure here, not a metric."""
+    decode-shaped kernel schedules — and, when fused, through the FUSED
+    decode kind; the dispatch counters are the proof and a hard failure
+    here, not a metric. The per-path counter deltas double as the
+    kernel-launches-per-traced-step evidence compare.py reports."""
     from repro.configs import QuantSpec
-    from repro.core.twinquant import quantize_params
+    from repro.core.twinquant import fuse_params, quantize_params
+    from repro.kernels.dispatch import set_fusion
     from repro.launch.serve import ContinuousBatchingEngine, Request
     from repro.models import dense
 
     cfg = BENCH_CFG
     params = dense.init_params(cfg, jax.random.PRNGKey(0))
     qparams = quantize_params(params, cfg, QuantSpec(mode="w4a4", rank=32))
+    if fused:
+        qparams = fuse_params(qparams)
     prompt = jnp.arange(ENGINE_PROMPT, dtype=jnp.int32) % cfg.vocab
     results = {}
-    for b in ENGINE_BATCHES:
-        eng = ContinuousBatchingEngine(cfg, qparams, batch_slots=b,
-                                       max_len=ENGINE_PROMPT + ENGINE_NEW + 8)
-        # warm the prefill/decode executables, then reset the timing counters
-        # (routing counters persist — they are trace-time)
-        eng.serve([Request(prompt, max_new=2)])
-        eng.reset_stats()
-        reqs = [Request(prompt, max_new=ENGINE_NEW) for _ in range(2 * b)]
-        eng.serve(reqs)
-        th = eng.throughput()
-        routing = th["routing"]
-        if routing.get("dual/decode", 0) == 0:
-            raise RuntimeError(
-                f"b={b}: decode trace did not route the decode-shaped kernel "
-                f"(routes: {routing})"
+    prev = set_fusion(fused)
+    try:
+        for b in ENGINE_BATCHES:
+            eng = ContinuousBatchingEngine(cfg, qparams, batch_slots=b,
+                                           max_len=ENGINE_PROMPT + ENGINE_NEW + 8)
+            # warm the prefill/decode executables, then reset the timing
+            # counters (routing counters persist — they are trace-time)
+            eng.serve([Request(prompt, max_new=2)])
+            eng.reset_stats()
+            reqs = [Request(prompt, max_new=ENGINE_NEW) for _ in range(2 * b)]
+            eng.serve(reqs)
+            th = eng.throughput()
+            routing = th["routing"]
+            if routing.get("dual/decode", 0) == 0:
+                raise RuntimeError(
+                    f"b={b}: decode trace did not route the decode-shaped kernel "
+                    f"(routes: {routing})"
+                )
+            if fused and routing.get("dual_fused/decode", 0) == 0:
+                raise RuntimeError(
+                    f"b={b}: fused serving did not route the fused decode kind "
+                    f"(routes: {routing})"
+                )
+            decode_launches = sum(
+                v for k, v in routing.items() if k.endswith("/decode")
             )
-        results[f"b{b}"] = {
-            "decode_tok_s": th["decode_tok_s"],
-            "prefill_tok_s": th["prefill_tok_s"],
-            "occupancy": th["mean_batch_occupancy"],
-            "routing": routing,
-        }
-        emit(f"throughput/engine_b{b}", 1e6 / max(th["decode_tok_s"], 1e-9),
-             f"decode={th['decode_tok_s']:.1f}tok/s occ={th['mean_batch_occupancy']:.2f}/{b} "
-             f"routes=dual/decode:{routing.get('dual/decode', 0)}")
+            results[f"b{b}"] = {
+                "decode_tok_s": th["decode_tok_s"],
+                "prefill_tok_s": th["prefill_tok_s"],
+                "occupancy": th["mean_batch_occupancy"],
+                "routing": routing,
+                "decode_launches": decode_launches,
+            }
+            emit(f"throughput/engine_b{b}", 1e6 / max(th["decode_tok_s"], 1e-9),
+                 f"decode={th['decode_tok_s']:.1f}tok/s occ={th['mean_batch_occupancy']:.2f}/{b} "
+                 f"launches/step={decode_launches} "
+                 f"routes=dual/decode:{routing.get('dual/decode', 0)}"
+                 f"+dual_fused/decode:{routing.get('dual_fused/decode', 0)}")
+    finally:
+        set_fusion(prev)
     return results
 
 
-def run(quick: bool = False) -> dict:
+def run(quick: bool = False, fused: bool = True) -> dict:
     """``quick=True`` (the CI bench lane) runs only the measured engine
-    sweep — the gated metrics; the full run adds the derived roofline grid."""
+    sweep — the gated metrics; the full run adds the derived roofline grid.
+    ``fused`` toggles horizontal projection fusion for the engine sweep."""
     if quick:
-        return {"engine_measured": run_engine()}
+        return {"engine_measured": run_engine(fused=fused), "fused": fused}
     cfg = get_config("llama3-8b")
     results = {}
     t0 = time.monotonic()
@@ -124,8 +149,8 @@ def run(quick: bool = False) -> dict:
             "speedup": adj,
         }
     dt = time.monotonic() - t0
-    engine = run_engine()
-    out = {"roofline": results, "engine_measured": engine}
+    engine = run_engine(fused=fused)
+    out = {"roofline": results, "engine_measured": engine, "fused": fused}
     ART.mkdir(parents=True, exist_ok=True)
     (ART / "bench_throughput.json").write_text(json.dumps(out, indent=2))
     for k, v in results.items():

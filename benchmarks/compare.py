@@ -6,21 +6,33 @@ Usage::
         --max-regress 0.25
 
 Both files are ``benchmarks/run.py --quick --out`` outputs (schema 1). Gated
-metrics are the measured continuous-batching engine decode tokens/s at each
-batch size; the PR fails when any drops more than ``--max-regress`` (fraction)
-below the committed baseline. The candidate's dispatch routing is also
-checked: every engine decode sweep must have routed the decode-shaped kernel.
+metrics are the measured continuous-batching engine decode AND prefill
+tokens/s at each batch size; the PR fails when any drops more than
+``--max-regress`` (fraction) below the committed baseline. Two
+machine-independent checks always fail hard:
+
+* **routing** — every engine decode sweep must have routed the decode-shaped
+  kernel, and (when the candidate ran fused, the default) the FUSED decode
+  kind ``dual_fused/decode``;
+* **kernel launches** — the candidate's decode-trace launch count (sum of
+  ``*/decode`` dispatch counters: quantized-linear calls per traced decode
+  step) must not exceed the baseline's. This is the fusion ratchet: q/k/v
+  and gate/up stay one launch each.
+
+The per-path launch counts (fused vs unfused kinds) are printed for every
+batch size, so the artifact trail shows where each launch went, not just the
+tokens/s number.
 
 Baseline refresh procedure (DESIGN.md §12): download the ``BENCH_PR.json``
 artifact from a green run ON THE CI RUNNER CLASS and commit it as
 ``benchmarks/baseline.json`` — never regenerate it on a dev machine, since
 the gate compares absolute tokens/s.
 
-A baseline carrying ``"bootstrap": true`` (the initial dev-machine seed,
-whose absolute numbers don't transfer to the CI runner class) downgrades
-throughput regressions to warnings; the machine-independent routing check
-still fails hard. Promoting a CI-produced ``BENCH_PR.json`` (which never
-carries the flag) arms the full gate automatically.
+A baseline carrying ``"bootstrap": true`` (a dev-machine seed, whose absolute
+numbers don't transfer to the CI runner class) downgrades throughput
+regressions to warnings; the machine-independent routing and launch-count
+checks still fail hard. Promoting a CI-produced ``BENCH_PR.json`` (which
+never carries the flag) arms the full gate automatically.
 """
 
 from __future__ import annotations
@@ -30,17 +42,60 @@ import json
 import sys
 
 
+def _engine(doc: dict) -> dict:
+    return doc["results"]["throughput"]["engine_measured"]
+
+
 def engine_metrics(doc: dict) -> dict[str, float]:
-    eng = doc["results"]["throughput"]["engine_measured"]
-    return {f"decode_tok_s/{b}": v["decode_tok_s"] for b, v in sorted(eng.items())}
+    out = {}
+    for b, v in sorted(_engine(doc).items()):
+        out[f"decode_tok_s/{b}"] = v["decode_tok_s"]
+        if "prefill_tok_s" in v:
+            out[f"prefill_tok_s/{b}"] = v["prefill_tok_s"]
+    return out
+
+
+def decode_launches(v: dict) -> int:
+    """Quantized-linear launches in the decode trace(s) of one engine sweep."""
+    if "decode_launches" in v:
+        return int(v["decode_launches"])
+    return sum(n for k, n in v.get("routing", {}).items() if k.endswith("/decode"))
 
 
 def check_routing(doc: dict) -> list[str]:
     errors = []
-    eng = doc["results"]["throughput"]["engine_measured"]
-    for b, v in sorted(eng.items()):
-        if v.get("routing", {}).get("dual/decode", 0) == 0:
+    fused = doc.get("fused", doc["results"]["throughput"].get("fused", False))
+    for b, v in sorted(_engine(doc).items()):
+        routing = v.get("routing", {})
+        if routing.get("dual/decode", 0) == 0:
             errors.append(f"{b}: decode sweep did not route the decode-shaped kernel")
+        if fused and routing.get("dual_fused/decode", 0) == 0:
+            errors.append(f"{b}: fused candidate did not route dual_fused/decode")
+    return errors
+
+
+def check_launches(base: dict, cand: dict) -> list[str]:
+    """Launch-count ratchet: decode launches per traced step must not grow."""
+    errors = []
+    base_eng, cand_eng = _engine(base), _engine(cand)
+    print(f"\n{'decode launches':<24} {'baseline':>12} {'candidate':>12}  per-path (candidate)")
+    for b in sorted(cand_eng):
+        cl = decode_launches(cand_eng[b])
+        paths = {
+            k: n for k, n in sorted(cand_eng[b].get("routing", {}).items())
+            if k.endswith("/decode")
+        }
+        detail = " ".join(f"{k}:{n}" for k, n in paths.items()) or "n/a"
+        if b in base_eng:
+            bl = decode_launches(base_eng[b])
+            print(f"{b:<24} {bl:>12d} {cl:>12d}  {detail}")
+            if bl and cl > bl:
+                errors.append(
+                    f"{b}: {cl} decode launches/traced step > baseline {bl} "
+                    "(horizontal fusion regressed?)"
+                )
+        else:
+            print(f"{b:<24} {'(new)':>12} {cl:>12d}  {detail}")
     return errors
 
 
@@ -60,7 +115,8 @@ def main() -> None:
     bootstrap = bool(base.get("bootstrap"))
     base_m = engine_metrics(base)
     cand_m = engine_metrics(cand)
-    failures = check_routing(cand)  # machine-independent: always hard
+    # machine-independent checks: always hard
+    failures = check_routing(cand)
     warnings = []
 
     print(f"{'metric':<24} {'baseline':>12} {'candidate':>12} {'ratio':>8}  gate")
@@ -80,6 +136,8 @@ def main() -> None:
     for name in cand_m:
         if name not in base_m:
             print(f"{name:<24} {'(new)':>12} {cand_m[name]:>12.1f}")
+
+    failures += check_launches(base, cand)
 
     for msg in warnings:
         print(f"WARN (bootstrap baseline, not gating): {msg}", file=sys.stderr)

@@ -14,6 +14,10 @@ artifacts land in artifacts/ for EXPERIMENTS.md.
 checks plus the measured serving-engine throughput sweep (no model
 training), with the combined results written to ``--out`` (BENCH_PR.json)
 for benchmarks/compare.py to gate against benchmarks/baseline.json.
+
+``--fused`` (default) / ``--no-fused`` toggles horizontal projection fusion
+(q/k/v and gate/up as one launch) for the throughput sweep; CI uploads one
+artifact per setting so the fusion speedup is visible in the artifact trail.
 """
 
 from __future__ import annotations
@@ -32,6 +36,14 @@ def main() -> None:
     ap.add_argument(
         "--quick", action="store_true",
         help="CI bench lane: kernels + serving-engine throughput only",
+    )
+    ap.add_argument(
+        "--fused", dest="fused", action="store_true", default=True,
+        help="fuse sibling projections (q/k/v, gate/up) into one launch (default)",
+    )
+    ap.add_argument(
+        "--no-fused", dest="fused", action="store_false",
+        help="A/B lane: per-sibling launches (the pre-fusion serving path)",
     )
     ap.add_argument("--out", default=None, help="write combined results JSON here")
     args = ap.parse_args()
@@ -61,7 +73,9 @@ def main() -> None:
     results, failed = {}, []
     for name in selected:
         try:
-            if name in QUICK_MODULES:
+            if name == "throughput":
+                results[name] = mods[name].run(quick=args.quick, fused=args.fused)
+            elif name in QUICK_MODULES:
                 results[name] = mods[name].run(quick=args.quick)
             else:
                 results[name] = mods[name].run()
@@ -69,7 +83,7 @@ def main() -> None:
             traceback.print_exc()
             failed.append(name)
     if args.out:
-        doc = {"schema": 1, "quick": args.quick, "results": results}
+        doc = {"schema": 1, "quick": args.quick, "fused": args.fused, "results": results}
         with open(args.out, "w") as f:
             json.dump(doc, f, indent=2, sort_keys=True)
         print(f"# wrote {args.out}", file=sys.stderr)

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import QuantSpec
-from repro.core.twinquant import quantize_params
+from repro.core.twinquant import fuse_params, quantize_params
 from repro.launch.serve import ContinuousBatchingEngine, Request, SamplingParams
 from benchmarks.common import get_trained_model
 
@@ -26,6 +26,9 @@ def main():
 
     n_quant = sum(1 for p in jax.tree_util.tree_leaves_with_path(qparams)
                   if getattr(p[0][-1], "key", None) == "rp")
+    # default serving config: merge sibling packs (q/k/v, gate/up) so each
+    # group runs as ONE fused launch (checkpoints stay unfused on disk)
+    qparams = fuse_params(qparams)
     pb = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params)) / 1e6
     qb = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(qparams)) / 1e6
     print(f" {n_quant} linears packed; params {pb:.1f}MB -> {qb:.1f}MB")
@@ -63,6 +66,8 @@ def main():
     routes = ", ".join(f"{k}:{v}" for k, v in sorted(th["routing"].items()))
     print(f" dispatch routes: {routes}")
     assert th["routing"].get("dual/decode", 0) > 0, "decode steps must route decode"
+    assert th["routing"].get("dual_fused/decode", 0) > 0, \
+        "fused serving must route the fused decode kind (q/k/v, gate/up)"
     print("serve_quantized OK")
 
 

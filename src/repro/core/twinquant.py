@@ -15,6 +15,15 @@ Two products, one algorithm:
   benchmarks (paper Tables 2/3 reproduction) where we need model-level PPL
   under naive / +lowrank / +hadamard / TwinQuant variants on CPU.
 
+* :func:`fuse_params` — the optional **horizontal-fusion** post-pass for
+  serving: sibling packs that consume the same activation (q/k/v, gate/up,
+  wq_a/wkv_a) are merged into one fused group pack
+  (``models.common.linear_group`` -> ``kernels.dispatch.fused_linear``: one
+  launch, one activation quantization per group). Applied to the in-memory
+  tree only — checkpoints stay unfused on disk, and ``linear_group`` also
+  fuses unmerged sibling packs at trace time, so the pass is an HBM-traffic
+  optimization (no per-step weight concatenation), not a requirement.
+
 Exclusions (kept high-precision, documented in DESIGN.md): embeddings, lm
 head, MoE routers, norms/biases/convs/recurrences (not matmul weights), and
 DeepSeek's ``wkv_b`` (it participates in the absorbed decode path as an
@@ -105,6 +114,101 @@ def quantize_params(params: Any, cfg: ModelConfig, spec: QuantSpec) -> Any:
                     return out
                 return tree
             return {k: visit(v, f"{path}/{k}") for k, v in tree.items()}
+        return tree
+
+    return visit(params)
+
+
+# ---------------------------------------------------------------------------
+# serving path: horizontal fusion of sibling packs (one launch per group)
+# ---------------------------------------------------------------------------
+
+# (sibling keys, fused key, parent-dict keys that may fuse them — None = any).
+# "qkv" is restricted to dicts literally named "attn": encdec cross-attention
+# ("xattn") projects q from the decoder stream but k/v from the encoder
+# states, so its siblings do NOT share an activation and must stay separate
+# (models/encdec._mha fuses its k/v pair at trace time instead).
+FUSE_GROUPS = (
+    (("q", "k", "v"), "qkv", ("attn",)),
+    (("gate", "up"), "gate_up", None),
+    (("wq_a", "wkv_a"), "wqkv_a", None),
+)
+
+
+def _is_pack(d) -> bool:
+    return isinstance(d, dict) and "rp" in d
+
+
+def _packs_fusable(packs: list) -> bool:
+    """Sibling packs mergeable along N: all dual-component, same K (and any
+    stacked leading dims), same scale group and activation bits."""
+    if not all(_is_pack(d) for d in packs):
+        return False
+    base = packs[0]
+    group = base["rp"].shape[-2] * 2 // base["rs"].shape[-2]
+    return all(
+        d["rp"].shape[:-1] == base["rp"].shape[:-1]
+        and d["rp"].shape[-2] * 2 // d["rs"].shape[-2] == group
+        and d["abits"].shape == base["abits"].shape
+        for d in packs
+    )
+
+
+def fuse_linear_packs(packs: list) -> dict:
+    """Merge sibling pack dicts into one fused group pack dict.
+
+    Pure concatenation of already-quantized arrays (R/U factors and their
+    scales are column-independent, so concat IS the per-segment quantization;
+    V stays per segment as ``vp{j}``/``vs{j}`` to preserve each segment's own
+    rank-group structure). Works on scan/expert-stacked packs too (all axes
+    are trailing). Biases concatenate into one ``b``.
+    """
+    out = {
+        "up": jnp.concatenate([d["up"] for d in packs], axis=-1),
+        "us": jnp.concatenate([d["us"] for d in packs], axis=-1),
+        "rp": jnp.concatenate([d["rp"] for d in packs], axis=-1),
+        "rs": jnp.concatenate([d["rs"] for d in packs], axis=-1),
+        "abits": packs[0]["abits"],
+    }
+    for j, d in enumerate(packs):
+        out[f"vp{j}"] = d["vp"]
+        out[f"vs{j}"] = d["vs"]
+    if any("b" in d for d in packs):
+        out["b"] = jnp.concatenate(
+            [
+                d["b"] if "b" in d
+                else jnp.zeros(d["rp"].shape[:-2] + (d["rp"].shape[-1],), jnp.float32)
+                for d in packs
+            ],
+            axis=-1,
+        )
+    return out
+
+
+def fuse_params(params: Any) -> Any:
+    """Merge sibling quantized packs that share an input into fused groups.
+
+    In-memory rewrite for serving (run after :func:`quantize_params` or after
+    restoring a quantized checkpoint): ``{"q":pack,"k":pack,"v":pack}``
+    becomes ``{"qkv": fused_pack}`` (same for gate/up -> ``gate_up`` and
+    MLA's wq_a/wkv_a -> ``wqkv_a``), which ``models.common.linear_group``
+    executes as ONE kernel launch. Checkpoints are saved from the unfused
+    tree, so the on-disk format is unchanged. Non-pack siblings (bf16,
+    w4a16, sim dicts, partially quantized groups) are left untouched.
+    """
+
+    def visit(tree, key=""):
+        if not isinstance(tree, dict):
+            return tree
+        tree = {k: visit(v, k) for k, v in tree.items()}
+        for names, fused_key, parents in FUSE_GROUPS:
+            if parents is not None and key not in parents:
+                continue
+            if all(n in tree for n in names) and _packs_fusable(
+                [tree[n] for n in names]
+            ):
+                packs = [tree.pop(n) for n in names]
+                tree[fused_key] = fuse_linear_packs(packs)
         return tree
 
     return visit(params)

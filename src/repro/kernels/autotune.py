@@ -18,6 +18,13 @@ kernel's tiling assert. Here the contract is explicit:
 * :func:`get_blocks` is what the dispatch layer calls on the hot path:
   cache hit -> tuned blocks; miss -> heuristic. Never measures implicitly.
 
+Kinds: ``dual_prefill`` / ``dual_decode`` / ``w4a16`` for single packs, plus
+``dual_prefill_fused`` / ``dual_decode_fused`` for horizontally fused
+projection groups (q/k/v, gate/up). The fused kinds use the same schedules;
+the dispatch layer passes ``n = gcd(segment widths)`` so every candidate
+``block_n`` tiles every segment (N blocks never straddle a segment
+boundary), and ``rank = sum(segment ranks)`` (the stacked-U rank axis).
+
 Cache file format (schema 1)::
 
     {
@@ -101,9 +108,10 @@ def heuristic_blocks(
     bn = next((c for c in _BN_CANDIDATES if n % c == 0), None)
     if bn is None:
         return None
-    if kind == "dual_decode":
+    if kind in ("dual_decode", "dual_decode_fused"):
         # whole-K schedule: block_k is unused by the gemv grid but recorded
-        # as K so cache entries stay self-describing
+        # as K so cache entries stay self-describing. For the fused kind the
+        # caller passes n = gcd over segment widths, so bn | every segment.
         return (DECODE_M_MAX, bn, k)
     bk = next((c for c in _BK_CANDIDATES if k % c == 0 and c % group == 0), None)
     if bk is None:
@@ -121,7 +129,7 @@ def candidate_blocks(
     base = heuristic_blocks(kind, m, n, k, group, rank)
     if base is None:
         return []
-    if kind == "dual_decode":
+    if kind in ("dual_decode", "dual_decode_fused"):
         return [(DECODE_M_MAX, bn, k) for bn in _BN_CANDIDATES if n % bn == 0]
     bms = sorted({min(128, _round_up_pow2(m)), 128} | ({64} if m >= 64 else set()))
     bns = [c for c in _BN_CANDIDATES if n % c == 0]
@@ -199,7 +207,7 @@ def blocks_valid(
     bm, bn, bk = blocks
     if bm <= 0 or bn <= 0 or bk <= 0 or n % bn != 0:
         return False
-    if kind == "dual_decode":
+    if kind in ("dual_decode", "dual_decode_fused"):
         return k % group == 0
     return k % bk == 0 and bk % group == 0
 

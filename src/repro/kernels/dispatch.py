@@ -16,6 +16,13 @@ component) or :func:`w4a16_linear` (weight-only), which route each call by
     This replaces the old hard asserts: an odd shape is a routing decision,
     not a crash.
 
+:func:`fused_linear` (kind ``dual_fused``) is the horizontal-fusion entry:
+sibling projections that consume the same activation (q/k/v, gate/up) run as
+ONE launch over a :class:`~repro.kernels.ref.TwinQuantGroupWeights`, with the
+same three-path routing (fused autotune kinds ``dual_prefill_fused`` /
+``dual_decode_fused``). :func:`set_fusion` is the process-global A/B switch
+the benchmarks toggle.
+
 Routing is a trace-time (static-shape) decision, so under ``jax.jit`` it
 costs nothing on the execution path. Each decision increments a **dispatch
 counter** keyed ``<kind>/<path>``: under jit that means one bump per
@@ -36,28 +43,38 @@ Execution backend is orthogonal to routing (``impl`` argument):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import math
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.autotune import DECODE_M_MAX, get_blocks
-from repro.kernels.ref import TwinQuantWeights
-from repro.kernels.twinquant_dual_gemm import dual_gemm
-from repro.kernels.twinquant_dual_gemv import dual_gemv
+from repro.kernels.ref import (
+    TwinQuantGroupWeights,
+    TwinQuantWeights,
+    fuse_twinquant_weights,
+)
+from repro.kernels.twinquant_dual_gemm import dual_gemm, dual_gemm_group
+from repro.kernels.twinquant_dual_gemv import dual_gemv, dual_gemv_group
 from repro.kernels.w4a16_gemm import w4a16_gemm
 
 __all__ = [
     "DECODE_M_MAX",
     "QuantLinear",
+    "QuantLinearGroup",
     "Route",
     "classify_dual",
+    "classify_dual_group",
     "classify_w4a16",
     "default_interpret",
     "dispatch_counters",
+    "fused_linear",
+    "fusion_enabled",
     "quant_linear",
     "reset_dispatch_counters",
+    "set_fusion",
     "w4a16_linear",
 ]
 
@@ -68,6 +85,31 @@ PATH_REF = "ref"
 
 def default_interpret() -> bool:
     return jax.default_backend() == "cpu"
+
+
+# ---------------------------------------------------------------------------
+# fusion policy (process-global, like the counters)
+# ---------------------------------------------------------------------------
+
+_fusion_enabled = True
+
+
+def fusion_enabled() -> bool:
+    """Whether sibling-projection groups may fuse into one launch (default)."""
+    return _fusion_enabled
+
+
+def set_fusion(enabled: bool) -> bool:
+    """Enable/disable horizontal fusion; returns the previous setting.
+
+    The A/B switch for the benchmarks (``run.py --quick --no-fused``):
+    with fusion off, ``models.common.linear_group`` applies each sibling
+    through its own :func:`quant_linear` call, the pre-fusion behavior.
+    """
+    global _fusion_enabled
+    prev = _fusion_enabled
+    _fusion_enabled = bool(enabled)
+    return prev
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +166,39 @@ def classify_dual(
     return Route(PATH_PREFILL, blocks, f"M={m}>{DECODE_M_MAX}")
 
 
+def classify_dual_group(
+    m: int,
+    k: int,
+    group: int,
+    seg_n: tuple[int, ...],
+    seg_r: tuple[int, ...],
+    rgroups: tuple[int, ...],
+) -> Route:
+    """Route a fused sibling-projection group by shape regime.
+
+    The fused kernels additionally need a ``block_n`` that tiles EVERY
+    segment (an N block must never straddle a segment boundary), so block
+    lookup runs against ``gcd(seg_n)``; rank enters the key as the stacked
+    total. Anything untileable routes to the per-segment oracle.
+    """
+    if k % group != 0 or group % 2 != 0:
+        return Route(PATH_REF, None, f"K={k} not tileable by group={group}")
+    for rj, gr in zip(seg_r, rgroups):
+        if rj % gr != 0 or gr % 2 != 0:
+            return Route(PATH_REF, None, f"rank={rj} not tileable by rgroup={gr}")
+    ngcd = math.gcd(*seg_n)
+    rank = sum(seg_r)
+    if m <= DECODE_M_MAX:
+        blocks = get_blocks("dual_decode_fused", m, ngcd, k, group, rank)
+        if blocks is None:
+            return Route(PATH_REF, None, f"gcd(N)={ngcd} not 128-aligned")
+        return Route(PATH_DECODE, blocks, f"M={m}<={DECODE_M_MAX}")
+    blocks = get_blocks("dual_prefill_fused", m, ngcd, k, group, rank)
+    if blocks is None:
+        return Route(PATH_REF, None, f"(gcd(N)={ngcd}, K={k}) not tileable")
+    return Route(PATH_PREFILL, blocks, f"M={m}>{DECODE_M_MAX}")
+
+
 def classify_w4a16(m: int, n: int, k: int, group: int) -> Route:
     """Route a weight-only call: the prefill-style kernel or the oracle."""
     if k % group != 0 or group % 2 != 0:
@@ -139,10 +214,17 @@ def classify_w4a16(m: int, n: int, k: int, group: int) -> Route:
 # ---------------------------------------------------------------------------
 
 
+def _flatten_m(shape: tuple[int, ...]) -> int:
+    """Flattened token-row count of a (..., K) shape — THE M the execution
+    path routes on. ``route_for`` inspection uses the same function, so a
+    routing preview can never disagree with what ``quant_linear`` runs."""
+    return math.prod(shape[:-1])
+
+
 def _flatten(x: jax.Array) -> tuple[jax.Array, tuple[int, ...], int]:
     batch_shape = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    return x2, batch_shape, x2.shape[0]
+    m = _flatten_m(x.shape)
+    return x.reshape(m, x.shape[-1]), batch_shape, m
 
 
 def _pad_m(x2: jax.Array, bm: int) -> jax.Array:
@@ -206,6 +288,57 @@ def quant_linear(
             _pad_m(x2, bm), w, block_m=bm, block_n=bn, block_k=bk, interpret=interpret
         )
     return _finish(y, m, batch_shape, n, bias)
+
+
+def fused_linear(
+    x: jax.Array,
+    ws: Union[TwinQuantGroupWeights, Sequence[TwinQuantWeights]],
+    biases: Optional[Sequence[Optional[jax.Array]]] = None,
+    *,
+    impl: str = "auto",
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, ...]:
+    """Fused sibling-projection linear: (..., K) -> per-segment (..., N_j).
+
+    One routed launch computes every projection in the group (q/k/v,
+    gate/up): the activation is quantized once and its panel fetched once,
+    instead of once per sibling. Routing kind is ``dual_fused`` — its
+    counter entries are the per-trace launch-count evidence the bench gate
+    reads. Numerics per segment are identical to :func:`quant_linear` on the
+    unfused pack (decode bit-exact, prefill within f32-reassociation ULPs of
+    the oracle, exactly like the unfused kernels).
+    """
+    gw = ws if isinstance(ws, TwinQuantGroupWeights) else fuse_twinquant_weights(ws)
+    if biases is None:
+        biases = (None,) * gw.n_segments
+    assert len(biases) == gw.n_segments, (len(biases), gw.n_segments)
+    k = x.shape[-1]
+    x2, batch_shape, m = _flatten(x)
+    if impl == "ref":
+        route = Route(PATH_REF, None, "forced impl=ref")
+    else:
+        route = classify_dual_group(m, k, gw.group, gw.seg_n, gw.seg_r, gw.rgroups)
+    _record("dual_fused", route.path)
+
+    if interpret is None:
+        interpret = default_interpret()
+    run_kernel = route.path != PATH_REF and (
+        impl == "kernel" or (impl == "auto" and not interpret)
+    )
+    if not run_kernel:
+        y = _ref.dual_gemm_group_ref(x2, gw)
+    elif route.path == PATH_DECODE:
+        y = dual_gemv_group(x2, gw, block_n=route.blocks[1], interpret=interpret)
+    else:
+        bm, bn, bk = route.blocks
+        y = dual_gemm_group(
+            _pad_m(x2, bm), gw, block_m=bm, block_n=bn, block_k=bk,
+            interpret=interpret,
+        )
+    return tuple(
+        _finish(yj, m, batch_shape, nj, bj)
+        for yj, nj, bj in zip(gw.split(y), gw.seg_n, biases)
+    )
 
 
 def w4a16_linear(
@@ -273,9 +406,38 @@ class QuantLinear:
         return quant_linear(x, self.w, self.bias, impl=impl)
 
     def route_for(self, shape: tuple[int, ...]) -> Route:
-        m = 1
-        for d in shape[:-1]:
-            m *= d
+        # same M computation as quant_linear's _flatten: inspection and
+        # execution can never disagree on the shape regime
         return classify_dual(
-            m, self.w.ndim_out, shape[-1], self.w.group, self.w.rgroup, self.w.rank
+            _flatten_m(shape), self.w.ndim_out, shape[-1],
+            self.w.group, self.w.rgroup, self.w.rank,
+        )
+
+
+class QuantLinearGroup:
+    """A routed fused projection group bound to sibling weight packs.
+
+    The group-level counterpart of :class:`QuantLinear`: one launch computes
+    every sibling projection of a shared activation.
+
+        qkv = QuantLinearGroup([wq, wk, wv], [bq, None, None])
+        q, k, v = qkv(x)              # one routed fused launch
+        qkv.route_for(x.shape)        # inspect without running
+    """
+
+    def __init__(
+        self,
+        ws: Union[TwinQuantGroupWeights, Sequence[TwinQuantWeights]],
+        biases: Optional[Sequence[Optional[jax.Array]]] = None,
+    ):
+        self.gw = ws if isinstance(ws, TwinQuantGroupWeights) else fuse_twinquant_weights(ws)
+        self.biases = biases
+
+    def __call__(self, x: jax.Array, *, impl: str = "auto") -> tuple[jax.Array, ...]:
+        return fused_linear(x, self.gw, self.biases, impl=impl)
+
+    def route_for(self, shape: tuple[int, ...]) -> Route:
+        gw = self.gw
+        return classify_dual_group(
+            _flatten_m(shape), shape[-1], gw.group, gw.seg_n, gw.seg_r, gw.rgroups
         )

@@ -30,9 +30,12 @@ __all__ = [
     "quantize_rows_ref",
     "quantize_act_ref",
     "dual_gemm_ref",
+    "dual_gemm_group_ref",
     "w4a16_gemm_ref",
     "TwinQuantWeights",
+    "TwinQuantGroupWeights",
     "pack_twinquant_weights",
+    "fuse_twinquant_weights",
 ]
 
 
@@ -174,6 +177,212 @@ def pack_twinquant_weights(
         rgroup=rgroup,
         a_bits=a_bits,
     )
+
+
+# ---------------------------------------------------------------------------
+# fused projection group: sibling packs merged along N (§4.3 horizontal fusion)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TwinQuantGroupWeights:
+    """Sibling :class:`TwinQuantWeights` fused along N (one launch per group).
+
+    Projections that consume the SAME activation (q/k/v, gate/up, wq_a/wkv_a)
+    are merged so the kernel quantizes X once and fetches its panel once:
+
+    * ``rp``/``rs`` — residual factors concatenated along N. R quantization
+      is per (K-group, column), i.e. column-independent, so concatenation IS
+      the per-segment quantization, bit for bit.
+    * ``up``/``us`` — per-matrix U factors stacked along the rank axis
+      (column-independent for the same reason): ``H = [H_0 | H_1 | ...]``.
+    * ``vps``/``vss`` — V kept **per segment** (logically a block-diagonal V:
+      output segment j only consumes its own H columns). Per-segment storage
+      preserves each segment's own rank-axis scale-group structure
+      (``rgroups[j]``), which a materialized block-diagonal V could not when
+      segments have different ranks — the bit-exactness invariant.
+
+    Segment geometry (``seg_n``, ``seg_r``, offsets) is derived from the
+    per-segment ``vps`` shapes, so it stays static under jit/vmap.
+    """
+
+    up: jax.Array  # (K/2, R)    packed int4 — U factors stacked along rank
+    us: jax.Array  # (K/G, R)    f32 scales
+    vps: tuple  # per segment: (r_j/2, N_j) packed int4
+    vss: tuple  # per segment: (r_j/gr_j, N_j) f32 scales
+    rp: jax.Array  # (K/2, sum N) packed int4 — residuals concatenated
+    rs: jax.Array  # (K/G, sum N) f32 scales
+    group: int  # shared K-axis scale group
+    rgroups: tuple  # per-segment r-axis scale group
+    a_bits: int  # shared activation bits
+
+    def tree_flatten(self):
+        return (self.up, self.us, self.vps, self.vss, self.rp, self.rs), (
+            self.group,
+            self.rgroups,
+            self.a_bits,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        up, us, vps, vss, rp, rs = children
+        return cls(up, us, tuple(vps), tuple(vss), rp, rs, *aux)
+
+    @property
+    def kdim(self) -> int:
+        return self.rp.shape[0] * 2
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.vps)
+
+    @property
+    def seg_n(self) -> tuple:
+        return tuple(vp.shape[1] for vp in self.vps)
+
+    @property
+    def seg_r(self) -> tuple:
+        return tuple(vp.shape[0] * 2 for vp in self.vps)
+
+    @property
+    def ndim_out(self) -> int:
+        return self.rp.shape[1]
+
+    @property
+    def rank(self) -> int:
+        return self.up.shape[1]
+
+    def _offsets(self, sizes) -> tuple:
+        offs, acc = [], 0
+        for s in sizes:
+            offs.append(acc)
+            acc += s
+        return tuple(offs)
+
+    @property
+    def n_offsets(self) -> tuple:
+        return self._offsets(self.seg_n)
+
+    @property
+    def r_offsets(self) -> tuple:
+        return self._offsets(self.seg_r)
+
+    def segment(self, j: int) -> TwinQuantWeights:
+        """The j-th sibling pack, recovered as exact views of the fused one."""
+        no, ro = self.n_offsets[j], self.r_offsets[j]
+        nj, rj = self.seg_n[j], self.seg_r[j]
+        return TwinQuantWeights(
+            up=self.up[:, ro : ro + rj],
+            us=self.us[:, ro : ro + rj],
+            vp=self.vps[j],
+            vs=self.vss[j],
+            rp=self.rp[:, no : no + nj],
+            rs=self.rs[:, no : no + nj],
+            group=self.group,
+            rgroup=self.rgroups[j],
+            a_bits=self.a_bits,
+        )
+
+    def split(self, y: jax.Array) -> tuple:
+        """Split a fused (..., sum N) output into per-segment views."""
+        return tuple(
+            y[..., no : no + nj] for no, nj in zip(self.n_offsets, self.seg_n)
+        )
+
+
+def fuse_twinquant_weights(ws) -> TwinQuantGroupWeights:
+    """Merge sibling packs (same K, group, a_bits) into one fused group.
+
+    Pure concatenation of already-quantized per-segment packs — no
+    requantization — so ``fused.segment(j)`` recovers ``ws[j]`` bit-exactly
+    and the fused kernels reproduce per-segment unfused numerics.
+    """
+    ws = tuple(ws)
+    assert ws, "need at least one pack"
+    base = ws[0]
+    for w in ws:
+        assert w.up.ndim == 2, "fuse_twinquant_weights takes unstacked 2-D packs"
+        assert w.kdim == base.kdim, (w.kdim, base.kdim)
+        assert w.group == base.group, (w.group, base.group)
+        assert w.a_bits == base.a_bits, (w.a_bits, base.a_bits)
+    return TwinQuantGroupWeights(
+        up=jnp.concatenate([w.up for w in ws], axis=1),
+        us=jnp.concatenate([w.us for w in ws], axis=1),
+        vps=tuple(w.vp for w in ws),
+        vss=tuple(w.vs for w in ws),
+        rp=jnp.concatenate([w.rp for w in ws], axis=1),
+        rs=jnp.concatenate([w.rs for w in ws], axis=1),
+        group=base.group,
+        rgroups=tuple(w.rgroup for w in ws),
+        a_bits=base.a_bits,
+    )
+
+
+@jax.jit
+def dual_gemm_group_ref(x: jax.Array, gw: TwinQuantGroupWeights) -> jax.Array:
+    """Fused-group oracle — genuinely fused, yet bit-exact per segment.
+
+    X is quantized ONCE and one ascending-group scan covers the concatenated
+    residual/stacked-U factors; only the H requantization and V epilogue run
+    per segment (each with its own rank-group structure). Every operation is
+    column-independent and in the same order as :func:`dual_gemm_ref` on the
+    segment's own pack, so each output segment equals
+    ``dual_gemm_ref(x, gw.segment(j))`` bit for bit — the exactness contract
+    the group kernels are tested against (decode exact, prefill within
+    f32-reassociation ULPs, exactly like the unfused kernels).
+    """
+    m, k = x.shape
+    G, a_bits = gw.group, gw.a_bits
+    a_qmax = qmax_for_bits(a_bits)
+    r = gw.rank
+    n = gw.ndim_out
+
+    xq, xs = quantize_act_ref(x, G, a_bits)
+    uq = unpack_rows_groupsplit(gw.up, G)
+    rq = unpack_rows_groupsplit(gw.rp, G)
+
+    n_groups = k // G
+
+    def group_partial(g):
+        xg = jax.lax.dynamic_slice(xq, (0, g * G), (m, G))
+        sg = jax.lax.dynamic_slice(xs, (0, g), (m, 1))
+        rg = jax.lax.dynamic_slice(rq, (g * G, 0), (G, n))
+        ug = jax.lax.dynamic_slice(uq, (g * G, 0), (G, r))
+        rsg = jax.lax.dynamic_slice(gw.rs, (g, 0), (1, n))
+        usg = jax.lax.dynamic_slice(gw.us, (g, 0), (1, r))
+        acc_r = _int8_dot(xg, rg).astype(jnp.float32) * sg * rsg
+        acc_h = _int8_dot(xg, ug).astype(jnp.float32) * sg * usg
+        return acc_r, acc_h
+
+    def body(carry, g):
+        acc_r, acc_h = carry
+        pr, ph = group_partial(g)
+        return (acc_r + pr, acc_h + ph), None
+
+    init = (jnp.zeros((m, n), jnp.float32), jnp.zeros((m, r), jnp.float32))
+    (acc_r, h), _ = jax.lax.scan(body, init, jnp.arange(n_groups))
+
+    # per segment: requantize its H columns with its OWN rank groups, then
+    # the second low-rank GEMM against its own V
+    outs = []
+    for j in range(gw.n_segments):
+        no, ro = gw.n_offsets[j], gw.r_offsets[j]
+        nj, rj, gr = gw.seg_n[j], gw.seg_r[j], gw.rgroups[j]
+        hg = h[:, ro : ro + rj].reshape(m, rj // gr, gr)
+        amax = jnp.max(jnp.abs(hg), axis=2)
+        hs = jnp.where(amax > 0, amax / a_qmax, 1.0)
+        hq = jnp.clip(jnp.round(hg / hs[:, :, None]), -a_qmax, a_qmax).astype(jnp.int8)
+        hq = hq.reshape(m, rj)
+        vq = unpack_rows_groupsplit(gw.vps[j], gr)
+        out = acc_r[:, no : no + nj]
+        for gg in range(rj // gr):
+            hqg = hq[:, gg * gr : (gg + 1) * gr]
+            vg = vq[gg * gr : (gg + 1) * gr, :]
+            p = _int8_dot(hqg, vg).astype(jnp.float32)
+            out = out + p * hs[:, gg][:, None] * gw.vss[j][gg, :][None, :]
+        outs.append(out)
+    return jnp.concatenate(outs, axis=-1).astype(jnp.bfloat16)
 
 
 # ---------------------------------------------------------------------------

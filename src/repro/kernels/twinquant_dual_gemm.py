@@ -46,9 +46,9 @@ from jax.experimental.pallas import tpu as pltpu
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 from repro.core.quantization import qmax_for_bits
-from repro.kernels.ref import TwinQuantWeights
+from repro.kernels.ref import TwinQuantGroupWeights, TwinQuantWeights
 
-__all__ = ["dual_gemm", "DEFAULT_BLOCKS"]
+__all__ = ["dual_gemm", "dual_gemm_group", "DEFAULT_BLOCKS"]
 
 DEFAULT_BLOCKS = dict(block_m=128, block_n=256, block_k=512)
 
@@ -223,3 +223,186 @@ def dual_gemm(
         ),
         interpret=interpret,
     )(x, w.up, w.us, w.vp, w.vs, w.rp, w.rs)
+
+
+# ---------------------------------------------------------------------------
+# fused projection group (q/k/v, gate/up): one launch for all sibling outputs
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret"),
+)
+def dual_gemm_group(
+    x: jax.Array,
+    gw: TwinQuantGroupWeights,
+    *,
+    block_m: int = 128,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Prefill-shaped fused dual GEMM over a sibling-projection group.
+
+    x: (M, K) -> (M, sum N_j) bf16, M/K multiples of the blocks and
+    ``block_n`` dividing every segment's N (so each N block is owned by one
+    segment). Relative to running the unfused kernel once per sibling, the
+    X tile is quantized ONCE (at the n==0 sweep) instead of once per
+    sibling, the X panel is fetched from HBM once instead of S times, and
+    the stacked-rank H accumulator is built in a single pass over K. Each
+    output block's epilogue contracts only the owning segment's H columns
+    against that segment's V (block-diagonal V without materialized zeros),
+    and H requantization uses each segment's own rank-group structure — so
+    every output segment is bit-exact vs the unfused kernel at the same
+    blocks.
+    """
+    m, k = x.shape
+    G = gw.group
+    seg_n, seg_r, grs = gw.seg_n, gw.seg_r, gw.rgroups
+    n_segs = len(seg_n)
+    r_total = gw.rank
+    n_total = gw.ndim_out
+    assert m % block_m == 0 and k % block_k == 0, (m, k)
+    assert block_k % G == 0
+    for nj, rj, gr in zip(seg_n, seg_r, grs):
+        assert nj % block_n == 0, (nj, block_n)
+        assert rj % gr == 0 and gr % 2 == 0, (rj, gr)
+    n_k = k // block_k
+    bm, bn, bk = block_m, block_n, block_k
+    gpb = bk // G  # scale groups per K block
+    nblk_off = tuple(no // bn for no in gw.n_offsets)
+    nblk_end = tuple((no + nj) // bn for no, nj in zip(gw.n_offsets, seg_n))
+    r_off = gw.r_offsets
+    hs_off, hs_cols = [], 0
+    for rj, gr in zip(seg_r, grs):
+        hs_off.append(hs_cols)
+        hs_cols += rj // gr
+    hs_off = tuple(hs_off)
+    a_bits = gw.a_bits
+
+    def kernel(*args):
+        x_ref, up_ref, us_ref = args[:3]
+        vrefs = args[3 : 3 + 2 * n_segs]
+        rp_ref, rs_ref, o_ref = args[3 + 2 * n_segs : 6 + 2 * n_segs]
+        xq_s, xs_s, h_s, hq_s, hs_s, acc_s = args[6 + 2 * n_segs :]
+        ni = pl.program_id(1)
+        ki = pl.program_id(2)
+        a_qmax = qmax_for_bits(a_bits)
+
+        @pl.when(ki == 0)
+        def _zero_acc():
+            acc_s[...] = jnp.zeros_like(acc_s)
+
+        @pl.when((ni == 0) & (ki == 0))
+        def _zero_h():
+            h_s[...] = jnp.zeros_like(h_s)
+
+        # ---- stage A (first N block only): quantize the X tile once into
+        # scratch and accumulate the stacked low-rank GEMM H += dq(Xq @ Uq)
+        @pl.when(ni == 0)
+        def _quantize_and_lowrank():
+            xv = x_ref[...].astype(jnp.float32)  # (bm, bk)
+            for g in range(gpb):
+                xg = xv[:, g * G : (g + 1) * G]
+                amax = jnp.max(jnp.abs(xg), axis=1, keepdims=True)
+                scale = jnp.where(amax > 0, amax / a_qmax, 1.0)
+                q = jnp.clip(jnp.round(xg / scale), -a_qmax, a_qmax).astype(jnp.int8)
+                xq_s[:, pl.ds(ki * bk + g * G, G)] = q
+                xs_s[:, pl.ds(ki * gpb + g, 1)] = scale
+                ug = _unpack_rows(up_ref[pl.ds((ki * bk + g * G) // 2, G // 2), :])
+                us = us_ref[pl.ds(ki * gpb + g, 1), :]
+                ph = _int8_dot(q, ug).astype(jnp.float32)
+                h_s[...] += ph * scale * us
+
+        # ---- stage B: residual partial for this (concatenated-N, K) tile
+        for g in range(gpb):
+            xg = xq_s[:, pl.ds(ki * bk + g * G, G)]
+            sg = xs_s[:, pl.ds(ki * gpb + g, 1)]
+            rg = _unpack_rows(rp_ref[g * (G // 2) : (g + 1) * (G // 2), :])
+            rs = rs_ref[g : g + 1, :]
+            pr = _int8_dot(xg, rg).astype(jnp.float32)
+            acc_s[...] += pr * sg * rs
+
+        # ---- stage C (first N block, last K step): requantize each
+        # segment's H columns with that segment's OWN rank groups
+        @pl.when((ni == 0) & (ki == n_k - 1))
+        def _requantize_h():
+            h = h_s[...]
+            for j in range(n_segs):
+                gr = grs[j]
+                for gg in range(seg_r[j] // gr):
+                    base = r_off[j] + gg * gr
+                    hg = h[:, base : base + gr]
+                    amax = jnp.max(jnp.abs(hg), axis=1, keepdims=True)
+                    scale = jnp.where(amax > 0, amax / a_qmax, 1.0)
+                    hq_s[:, base : base + gr] = jnp.clip(
+                        jnp.round(hg / scale), -a_qmax, a_qmax
+                    ).astype(jnp.int8)
+                    hs_s[:, hs_off[j] + gg : hs_off[j] + gg + 1] = scale
+
+        # ---- stage D (last K step): the owning segment's second low-rank
+        # GEMM + merge with the residual accumulator + one write-back
+        for j in range(n_segs):
+
+            @pl.when((ki == n_k - 1) & (ni >= nblk_off[j]) & (ni < nblk_end[j]))
+            def _seg_epilogue(j=j):
+                vp_ref, vs_ref = vrefs[2 * j], vrefs[2 * j + 1]
+                loc = (ni - nblk_off[j]) * bn  # column offset inside segment j
+                gr = grs[j]
+                acc = acc_s[...]
+                for gg in range(seg_r[j] // gr):
+                    hqg = hq_s[:, r_off[j] + gg * gr : r_off[j] + (gg + 1) * gr]
+                    vg = _unpack_rows(
+                        vp_ref[gg * (gr // 2) : (gg + 1) * (gr // 2), pl.ds(loc, bn)]
+                    )
+                    pv = _int8_dot(hqg, vg).astype(jnp.float32)
+                    acc = acc + (
+                        pv
+                        * hs_s[:, hs_off[j] + gg : hs_off[j] + gg + 1]
+                        * vs_ref[gg : gg + 1, pl.ds(loc, bn)]
+                    )
+                o_ref[...] = acc.astype(o_ref.dtype)
+
+    in_specs = [
+        # X: fetched only during the n==0 sweep (index pins to (m, 0) after)
+        pl.BlockSpec(
+            (bm, bk),
+            lambda mi, ni, ki: (mi, jnp.where(ni == 0, ki, 0)),
+        ),
+        # stacked U pinned whole in VMEM, fetched once
+        pl.BlockSpec((k // 2, r_total), lambda mi, ni, ki: (0, 0)),
+        pl.BlockSpec((k // G, r_total), lambda mi, ni, ki: (0, 0)),
+    ]
+    for vp, vs in zip(gw.vps, gw.vss):
+        # per-segment V resident whole (rank is small; sliced per N block)
+        in_specs.append(pl.BlockSpec(vp.shape, lambda mi, ni, ki: (0, 0)))
+        in_specs.append(pl.BlockSpec(vs.shape, lambda mi, ni, ki: (0, 0)))
+    in_specs += [
+        pl.BlockSpec((bk // 2, bn), lambda mi, ni, ki: (ki, ni)),
+        pl.BlockSpec((bk // G, bn), lambda mi, ni, ki: (ki, ni)),
+    ]
+    operands = [x, gw.up, gw.us]
+    for vp, vs in zip(gw.vps, gw.vss):
+        operands += [vp, vs]
+    operands += [gw.rp, gw.rs]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n_total // bn, n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n_total), jnp.bfloat16),
+        scratch_shapes=[
+            pltpu.VMEM((bm, k), jnp.int8),
+            pltpu.VMEM((bm, k // G), jnp.float32),
+            pltpu.VMEM((bm, r_total), jnp.float32),
+            pltpu.VMEM((bm, r_total), jnp.int8),
+            pltpu.VMEM((bm, hs_cols), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY, pltpu.ARBITRARY),
+        ),
+        interpret=interpret,
+    )(*operands)

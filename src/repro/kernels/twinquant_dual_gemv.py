@@ -38,12 +38,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quantization import qmax_for_bits
 from repro.kernels.autotune import DECODE_M_MAX
-from repro.kernels.ref import TwinQuantWeights
+from repro.kernels.ref import TwinQuantGroupWeights, TwinQuantWeights
 
 # jax renamed TPUCompilerParams -> CompilerParams; support both vintages
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
-__all__ = ["dual_gemv", "DECODE_M_MAX"]
+__all__ = ["dual_gemv", "dual_gemv_group", "DECODE_M_MAX"]
 
 
 def _unpack_rows(p: jax.Array) -> jax.Array:
@@ -188,3 +188,163 @@ def dual_gemv(
         ),
         interpret=interpret,
     )(x, w.up, w.us, w.vp, w.vs, w.rp, w.rs)
+
+
+# ---------------------------------------------------------------------------
+# fused projection group (q/k/v, gate/up): one launch for all sibling outputs
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def dual_gemv_group(
+    x: jax.Array,
+    gw: TwinQuantGroupWeights,
+    *,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode-shaped fused dual GEMM over a sibling-projection group.
+
+    x: (M<=8, K) -> (M, sum N_j) bf16. One launch computes every segment of
+    the group: the X panel is quantized ONCE (instead of once per sibling),
+    H = requant(dq(Xq @ [U_0|U_1|...])) is built once over the stacked rank
+    axis, and the 1-D grid streams the concatenated residual. Each N block
+    belongs to exactly one segment (``block_n`` divides every ``N_j``); its
+    epilogue consumes only that segment's H columns against that segment's
+    resident V — the block-diagonal-V contraction without materialized
+    zeros — so every output segment is bit-exact vs the unfused kernel.
+
+    ``block_n`` must divide every segment's N and K must be a multiple of
+    ``gw.group``; the dispatch layer routes anything else to the oracle.
+    """
+    m, k = x.shape
+    G = gw.group
+    seg_n, seg_r, grs = gw.seg_n, gw.seg_r, gw.rgroups
+    n_segs = len(seg_n)
+    r_total = gw.rank
+    assert m <= DECODE_M_MAX, (m, DECODE_M_MAX)
+    assert k % G == 0, (k, G)
+    for nj, rj, gr in zip(seg_n, seg_r, grs):
+        assert nj % block_n == 0, (nj, block_n)
+        assert rj % gr == 0 and gr % 2 == 0, (rj, gr)
+    n_groups = k // G
+    bn = block_n
+    # static segment tables: N-block ownership, rank offsets, H-scale offsets
+    nblk_off = tuple(no // bn for no in gw.n_offsets)
+    nblk_end = tuple((no + nj) // bn for no, nj in zip(gw.n_offsets, seg_n))
+    r_off = gw.r_offsets
+    hs_off, hs_cols = [], 0
+    for rj, gr in zip(seg_r, grs):
+        hs_off.append(hs_cols)
+        hs_cols += rj // gr
+    hs_off = tuple(hs_off)
+    a_bits = gw.a_bits
+
+    def kernel(*args):
+        x_ref, up_ref, us_ref = args[:3]
+        vrefs = args[3 : 3 + 2 * n_segs]
+        rp_ref, rs_ref, o_ref = args[3 + 2 * n_segs : 6 + 2 * n_segs]
+        xq_s, xs_s, hq_s, hs_s = args[6 + 2 * n_segs :]
+        ni = pl.program_id(0)
+        a_qmax = qmax_for_bits(a_bits)
+
+        # ---- first grid step: quantize the X panel once, build the stacked
+        # H = dq(Xq @ [U_0|U_1|...]), requantize each segment's H columns with
+        # that segment's OWN rank-group structure (static offsets/sizes)
+        @pl.when(ni == 0)
+        def _quantize_panel_and_h():
+            def body(g, h):
+                xg = x_ref[:, pl.ds(g * G, G)].astype(jnp.float32)  # (m, G)
+                amax = jnp.max(jnp.abs(xg), axis=1, keepdims=True)
+                scale = jnp.where(amax > 0, amax / a_qmax, 1.0)
+                q = jnp.clip(jnp.round(xg / scale), -a_qmax, a_qmax).astype(jnp.int8)
+                xq_s[:, pl.ds(g * G, G)] = q
+                xs_s[:, pl.ds(g, 1)] = scale
+                ug = _unpack_rows(up_ref[pl.ds(g * (G // 2), G // 2), :])
+                us = us_ref[pl.ds(g, 1), :]
+                return h + _int8_dot(q, ug).astype(jnp.float32) * scale * us
+
+            h = jax.lax.fori_loop(0, n_groups, body, jnp.zeros((m, r_total), jnp.float32))
+            for j in range(n_segs):
+                gr = grs[j]
+                for gg in range(seg_r[j] // gr):
+                    base = r_off[j] + gg * gr
+                    hg = h[:, base : base + gr]
+                    amax = jnp.max(jnp.abs(hg), axis=1, keepdims=True)
+                    scale = jnp.where(amax > 0, amax / a_qmax, 1.0)
+                    hq_s[:, base : base + gr] = jnp.clip(
+                        jnp.round(hg / scale), -a_qmax, a_qmax
+                    ).astype(jnp.int8)
+                    hs_s[:, hs_off[j] + gg : hs_off[j] + gg + 1] = scale
+
+        # ---- every grid step: whole-K residual for this (concatenated) N block
+        def resid(g, acc):
+            xg = xq_s[:, pl.ds(g * G, G)]
+            sg = xs_s[:, pl.ds(g, 1)]
+            rg = _unpack_rows(rp_ref[pl.ds(g * (G // 2), G // 2), :])
+            rs = rs_ref[pl.ds(g, 1), :]
+            return acc + _int8_dot(xg, rg).astype(jnp.float32) * sg * rs
+
+        out = jax.lax.fori_loop(0, n_groups, resid, jnp.zeros((m, bn), jnp.float32))
+
+        # ---- epilogue: exactly one segment owns this N block; add its
+        # low-rank contribution from its own H columns + resident V segment
+        for j in range(n_segs):
+
+            @pl.when((ni >= nblk_off[j]) & (ni < nblk_end[j]))
+            def _seg_epilogue(j=j):
+                vp_ref, vs_ref = vrefs[2 * j], vrefs[2 * j + 1]
+                loc = (ni - nblk_off[j]) * bn  # column offset inside segment j
+                gr = grs[j]
+                acc = out
+                for gg in range(seg_r[j] // gr):
+                    hqg = hq_s[:, r_off[j] + gg * gr : r_off[j] + (gg + 1) * gr]
+                    vg = _unpack_rows(
+                        vp_ref[gg * (gr // 2) : (gg + 1) * (gr // 2), pl.ds(loc, bn)]
+                    )
+                    pv = _int8_dot(hqg, vg).astype(jnp.float32)
+                    acc = acc + (
+                        pv
+                        * hs_s[:, hs_off[j] + gg : hs_off[j] + gg + 1]
+                        * vs_ref[gg : gg + 1, pl.ds(loc, bn)]
+                    )
+                o_ref[...] = acc.astype(o_ref.dtype)
+
+    n_total = gw.ndim_out
+    in_specs = [
+        # resident operands: constant index maps, fetched exactly once
+        pl.BlockSpec((m, k), lambda ni: (0, 0)),
+        pl.BlockSpec((k // 2, r_total), lambda ni: (0, 0)),
+        pl.BlockSpec((k // G, r_total), lambda ni: (0, 0)),
+    ]
+    for vp, vs in zip(gw.vps, gw.vss):
+        in_specs.append(pl.BlockSpec(vp.shape, lambda ni: (0, 0)))
+        in_specs.append(pl.BlockSpec(vs.shape, lambda ni: (0, 0)))
+    in_specs += [
+        # streamed concatenated residual tile: whole K, one N block per step
+        pl.BlockSpec((k // 2, bn), lambda ni: (0, ni)),
+        pl.BlockSpec((k // G, bn), lambda ni: (0, ni)),
+    ]
+    operands = [x, gw.up, gw.us]
+    for vp, vs in zip(gw.vps, gw.vss):
+        operands += [vp, vs]
+    operands += [gw.rp, gw.rs]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n_total // bn,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((m, bn), lambda ni: (0, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n_total), jnp.bfloat16),
+        scratch_shapes=[
+            pltpu.VMEM((m, k), jnp.int8),
+            pltpu.VMEM((m, k // G), jnp.float32),
+            pltpu.VMEM((m, r_total), jnp.int8),
+            pltpu.VMEM((m, hs_cols), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            # sequential N sweep: scratch (Xq, H) persists across grid steps
+            dimension_semantics=(pltpu.ARBITRARY,),
+        ),
+        interpret=interpret,
+    )(*operands)

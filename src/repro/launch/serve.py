@@ -140,7 +140,16 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4, max_len: int = 128):
         self.cfg = cfg
         self.model = get_model(cfg)
-        self.params = params
+        # serving default: pre-merge sibling quantized packs (q/k/v, gate/up,
+        # wq_a/wkv_a) ONCE so fused launches read merged packs directly —
+        # trace-time fusion would otherwise re-concatenate the packs inside
+        # every jitted step (they are jit arguments, not constants). A no-op
+        # for bf16/w4a16/already-merged trees; skipped when the process-wide
+        # fusion toggle is off (the benchmarks' --no-fused A/B lane).
+        from repro.core.twinquant import fuse_params
+        from repro.kernels.dispatch import fusion_enabled
+
+        self.params = fuse_params(params) if fusion_enabled() else params
         self.batch = batch_slots
         self.max_len = max_len
         self.state = self.model.init_decode_state(cfg, batch_slots, max_len)
@@ -288,7 +297,10 @@ class ContinuousBatchingEngine:
         Counts compiled routes (trace-time dispatch decisions) for the
         quantized linears in this engine's prefill/decode executables —
         the end-to-end evidence that decode steps hit the decode-shaped
-        kernel schedule and prefill steps hit the prefill one.
+        kernel schedule and prefill steps hit the prefill one, and (kind
+        ``dual_fused``) that sibling projections (q/k/v, gate/up) ran as
+        one fused launch rather than one per sibling. The per-kind sums
+        are the launches-per-traced-step number the bench gate ratchets.
 
         Attribution caveat: the underlying counters are process-global, so
         the delta also includes routes traced by OTHER engines (or eager

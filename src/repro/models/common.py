@@ -12,6 +12,14 @@ the parameter keys:
 so TwinQuant is a first-class precision mode of the whole framework, not a
 bolt-on — quantize_model() rewrites the params pytree and every architecture
 (dense/MoE/MLA/SSM/...) picks it up through this one dispatcher.
+
+Sibling projections that consume the SAME activation (q/k/v, gate/up,
+wq_a/wkv_a) go through :func:`linear_group`, which merges packed
+dual-component siblings into ONE fused launch (kernels/dispatch.fused_linear)
+— either from a pre-merged pack produced by ``core.twinquant.fuse_params``
+(key ``qkv`` / ``gate_up`` / ``wqkv_a``; checkpoints stay unfused on disk) or
+by fusing the sibling packs at trace time — and falls back to per-sibling
+:func:`linear` for every other precision mode.
 """
 
 from __future__ import annotations
@@ -138,6 +146,100 @@ def linear(p: dict, x: jax.Array) -> jax.Array:
             group=p["wp"].shape[-2] * 2 // p["ws"].shape[-2],
         ).astype(x.dtype)
     raise KeyError(f"unrecognized linear params: {sorted(p)}")
+
+
+def _group_weights_of(fp: dict):
+    """Fused-pack param dict ({up,us,rp,rs,abits,vp0,vs0,...}) -> group pack.
+
+    Like the single-pack branch of :func:`linear`, all static metadata is
+    recovered from (static) array shapes so the params pytree stays jit-pure.
+    """
+    from repro.kernels.ref import TwinQuantGroupWeights
+
+    vps, vss = [], []
+    while f"vp{len(vps)}" in fp:
+        vps.append(fp[f"vp{len(vps)}"])
+        vss.append(fp[f"vs{len(vss)}"])
+    return TwinQuantGroupWeights(
+        up=fp["up"], us=fp["us"], vps=tuple(vps), vss=tuple(vss),
+        rp=fp["rp"], rs=fp["rs"],
+        group=fp["rp"].shape[-2] * 2 // fp["rs"].shape[-2],
+        rgroups=tuple(
+            vp.shape[-2] * 2 // vs.shape[-2] for vp, vs in zip(vps, vss)
+        ),
+        a_bits=fp["abits"].shape[-1],
+    )
+
+
+def _fusable_packs(ps) -> bool:
+    """Sibling param dicts that can merge into one fused launch: all packed
+    dual-component (unstacked at this call site), same K, scale group, and
+    activation bits — derived from static shapes only."""
+    if not all(isinstance(pp, dict) and "rp" in pp for pp in ps):
+        return False
+    base = ps[0]
+    group = base["rp"].shape[-2] * 2 // base["rs"].shape[-2]
+    return all(
+        pp["rp"].ndim == 2
+        and pp["rp"].shape[0] == base["rp"].shape[0]
+        and pp["rp"].shape[-2] * 2 // pp["rs"].shape[-2] == group
+        and pp["abits"].shape == base["abits"].shape
+        for pp in ps
+    )
+
+
+def linear_group(p: dict, names: tuple, fused_key: str, x: jax.Array) -> tuple:
+    """Apply sibling projections of ONE activation as a fused launch.
+
+    Resolution order:
+      1. ``p[fused_key]`` exists (quantization-time pack merging via
+         ``core.twinquant.fuse_params`` — checkpoints stay unfused on disk,
+         the in-memory tree carries the merged pack): one fused launch.
+         This is the serving configuration (the engine pre-merges).
+      2. the siblings ``p[name]`` are fusable dual-component packs and
+         fusion is enabled: fuse at trace time and launch once. The
+         concatenation runs INSIDE the traced step (packs are jit arguments,
+         not constants), so this path pays an extra copy of each fused
+         weight pack per execution — correct everywhere, but hot loops
+         should pre-merge with ``fuse_params`` instead.
+      3. otherwise (bf16, w4a16, sim dicts, mixed precision, fusion
+         disabled): one :func:`linear` per sibling — the pre-fusion path.
+         ``set_fusion(False)`` also forces a pre-merged pack (case 1) to
+         execute per segment, so the A/B toggle is honest for both layouts.
+
+    Returns one output per sibling, in ``names`` order.
+    """
+    from repro.kernels.dispatch import fused_linear, fusion_enabled, quant_linear
+
+    fp = p.get(fused_key)
+    if fp is not None:
+        gw = _group_weights_of(fp)
+        biases = gw.split(fp["b"]) if "b" in fp else (None,) * gw.n_segments
+        if not fusion_enabled():  # A/B lane: per-segment launches
+            return tuple(
+                quant_linear(x, gw.segment(j), biases[j]).astype(x.dtype)
+                for j in range(gw.n_segments)
+            )
+        return tuple(
+            y.astype(x.dtype) for y in fused_linear(x, gw, biases)
+        )
+    ps = [p[n] for n in names]
+    if fusion_enabled() and _fusable_packs(ps):
+        from repro.kernels.ref import TwinQuantWeights
+
+        ws = [
+            TwinQuantWeights(
+                up=pp["up"], us=pp["us"], vp=pp["vp"], vs=pp["vs"],
+                rp=pp["rp"], rs=pp["rs"],
+                group=pp["rp"].shape[-2] * 2 // pp["rs"].shape[-2],
+                rgroup=pp["vp"].shape[-2] * 2 // pp["vs"].shape[-2],
+                a_bits=pp["abits"].shape[-1],
+            )
+            for pp in ps
+        ]
+        ys = fused_linear(x, ws, biases=[pp.get("b") for pp in ps])
+        return tuple(y.astype(x.dtype) for y in ys)
+    return tuple(linear(pp, x) for pp in ps)
 
 
 # ---------------------------------------------------------------------------
@@ -316,9 +418,10 @@ def attention_train(p: dict, x: jax.Array, cfg: ModelConfig, positions=None,
     """Full-sequence causal attention (training / prefill)."""
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = linear(p["q"], x).reshape(b, s, h, hd)
-    k = linear(p["k"], x).reshape(b, s, kvh, hd)
-    v = linear(p["v"], x).reshape(b, s, kvh, hd)
+    q, k, v = linear_group(p, ("q", "k", "v"), "qkv", x)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
     if positions is None:
         positions = jnp.arange(s)[None, :].astype(jnp.int32) * jnp.ones((b, 1), jnp.int32)
     tables = rope_tables(positions, hd, cfg.rope_fraction, cfg.rope_theta)
@@ -386,9 +489,10 @@ def attention_decode_ro(p: dict, x: jax.Array, cfg: ModelConfig, k_cache, v_cach
     Returns (out, k_t, v_t)."""
     b, sq, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = linear(p["q"], x).reshape(b, sq, h, hd)
-    kt = linear(p["k"], x).reshape(b, sq, kvh, hd)
-    vt = linear(p["v"], x).reshape(b, sq, kvh, hd)
+    q, kt, vt = linear_group(p, ("q", "k", "v"), "qkv", x)
+    q = q.reshape(b, sq, h, hd)
+    kt = kt.reshape(b, sq, kvh, hd)
+    vt = vt.reshape(b, sq, kvh, hd)
     positions = slot_positions(pos, b, sq)
     pos_v = positions[:, 0]  # (B,)
     tables = rope_tables(positions, hd, cfg.rope_fraction, cfg.rope_theta)
@@ -429,7 +533,8 @@ def mlp_init(key, d: int, f: int):
 
 
 def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
-    return linear(p["down"], swiglu(linear(p["gate"], x), linear(p["up"], x)))
+    gate, up = linear_group(p, ("gate", "up"), "gate_up", x)
+    return linear(p["down"], swiglu(gate, up))
 
 
 def attn_init(key, cfg: ModelConfig, d_in: Optional[int] = None):

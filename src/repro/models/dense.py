@@ -138,9 +138,10 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict,
         h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
         bb, ss, _ = h.shape
         hh, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-        q = C.linear(lp["attn"]["q"], h).reshape(bb, ss, hh, hd)
-        k = C.linear(lp["attn"]["k"], h).reshape(bb, ss, kvh, hd)
-        v = C.linear(lp["attn"]["v"], h).reshape(bb, ss, kvh, hd)
+        q, k, v = C.linear_group(lp["attn"], ("q", "k", "v"), "qkv", h)
+        q = q.reshape(bb, ss, hh, hd)
+        k = k.reshape(bb, ss, kvh, hd)
+        v = v.reshape(bb, ss, kvh, hd)
         tables = C.rope_tables(positions, hd, cfg.rope_fraction, cfg.rope_theta)
         q = C.apply_rope(q, tables)
         k = C.apply_rope(k, tables)

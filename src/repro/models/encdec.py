@@ -79,9 +79,14 @@ def _mha(p, q_in, kv_in, cfg, mask):
     b, sq, _ = q_in.shape
     sk = kv_in.shape[1]
     h, hd = cfg.n_heads, cfg.head_dim
-    q = C.linear(p["q"], q_in).reshape(b, sq, h, hd)
-    k = C.linear(p["k"], kv_in).reshape(b, sk, h, hd)
-    v = C.linear(p["v"], kv_in).reshape(b, sk, h, hd)
+    if q_in is kv_in:  # self-attention: q/k/v share the input -> one launch
+        q, k, v = C.linear_group(p, ("q", "k", "v"), "qkv", q_in)
+    else:  # cross-attention: k/v share the encoder states -> one launch
+        q = C.linear(p["q"], q_in)
+        k, v = C.linear_group(p, ("k", "v"), "kv", kv_in)
+    q = q.reshape(b, sq, h, hd)
+    k = k.reshape(b, sk, h, hd)
+    v = v.reshape(b, sk, h, hd)
     out = C._sdpa(q, k, v, mask)
     return C.linear(p["o"], out.reshape(b, sq, h * hd))
 
@@ -93,7 +98,8 @@ def encode(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
     full = jnp.ones((1, s, s), bool)
 
     def body(x, lp):
-        x = x + _mha(lp["attn"], _ln(lp["ln1"], x, cfg.norm_eps), _ln(lp["ln1"], x, cfg.norm_eps), cfg, full)
+        h_in = _ln(lp["ln1"], x, cfg.norm_eps)
+        x = x + _mha(lp["attn"], h_in, h_in, cfg, full)
         return x + _gelu_mlp(lp["mlp"], _ln(lp["ln2"], x, cfg.norm_eps)), None
 
     if cfg.remat:
@@ -112,9 +118,10 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, frames: jax.Array
     def body(x, lp):
         h_in = _ln(lp["ln1"], x, cfg.norm_eps)
         hh, hd = cfg.n_heads, cfg.head_dim
-        qq = C.linear(lp["attn"]["q"], h_in).reshape(b, s, hh, hd)
-        kk = C.linear(lp["attn"]["k"], h_in).reshape(b, s, hh, hd)
-        vv = C.linear(lp["attn"]["v"], h_in).reshape(b, s, hh, hd)
+        qq, kk, vv = C.linear_group(lp["attn"], ("q", "k", "v"), "qkv", h_in)
+        qq = qq.reshape(b, s, hh, hd)
+        kk = kk.reshape(b, s, hh, hd)
+        vv = vv.reshape(b, s, hh, hd)
         x = x + C.linear(lp["attn"]["o"], C.sdpa_causal(qq, kk, vv).reshape(b, s, hh * hd))
         x = x + _mha(lp["xattn"], _ln(lp["ln2"], x, cfg.norm_eps), enc, cfg, full)
         return x + _gelu_mlp(lp["mlp"], _ln(lp["ln3"], x, cfg.norm_eps)), None
@@ -135,9 +142,10 @@ def _hidden(params: dict, cfg: ModelConfig, tokens: jax.Array, frames: jax.Array
     def body(x, lp):
         h_in = _ln(lp["ln1"], x, cfg.norm_eps)
         hh, hd = cfg.n_heads, cfg.head_dim
-        qq = C.linear(lp["attn"]["q"], h_in).reshape(b, s, hh, hd)
-        kk = C.linear(lp["attn"]["k"], h_in).reshape(b, s, hh, hd)
-        vv = C.linear(lp["attn"]["v"], h_in).reshape(b, s, hh, hd)
+        qq, kk, vv = C.linear_group(lp["attn"], ("q", "k", "v"), "qkv", h_in)
+        qq = qq.reshape(b, s, hh, hd)
+        kk = kk.reshape(b, s, hh, hd)
+        vv = vv.reshape(b, s, hh, hd)
         x = x + C.linear(lp["attn"]["o"], C.sdpa_causal(qq, kk, vv).reshape(b, s, hh * hd))
         x = x + _mha(lp["xattn"], _ln(lp["ln2"], x, cfg.norm_eps), enc, cfg, full)
         return x + _gelu_mlp(lp["mlp"], _ln(lp["ln3"], x, cfg.norm_eps)), None
@@ -180,9 +188,8 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict,
     h, hd = cfg.n_heads, cfg.head_dim
 
     def xkv(lp):
-        k = C.linear(lp["xattn"]["k"], enc).reshape(b, -1, h, hd)
-        v = C.linear(lp["xattn"]["v"], enc).reshape(b, -1, h, hd)
-        return k, v
+        k, v = C.linear_group(lp["xattn"], ("k", "v"), "kv", enc)
+        return k.reshape(b, -1, h, hd), v.reshape(b, -1, h, hd)
 
     xk, xv = jax.vmap(xkv)(params["dec_layers"])
     s = tokens.shape[1]
@@ -192,9 +199,10 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict,
     def body(x, lp_x):
         lp, xk_l, xv_l = lp_x
         h_in = _ln(lp["ln1"], x, cfg.norm_eps)
-        q = C.linear(lp["attn"]["q"], h_in).reshape(b, s, h, hd)
-        k = C.linear(lp["attn"]["k"], h_in).reshape(b, s, h, hd)
-        v = C.linear(lp["attn"]["v"], h_in).reshape(b, s, h, hd)
+        q, k, v = C.linear_group(lp["attn"], ("q", "k", "v"), "qkv", h_in)
+        q = q.reshape(b, s, h, hd)
+        k = k.reshape(b, s, h, hd)
+        v = v.reshape(b, s, h, hd)
         x = x + C.linear(lp["attn"]["o"], C.sdpa_causal(q, k, v).reshape(b, s, h * hd))
         q2 = C.linear(lp["xattn"]["q"], _ln(lp["ln2"], x, cfg.norm_eps)).reshape(b, s, h, hd)
         x = x + C.linear(lp["xattn"]["o"], C._sdpa(q2, xk_l, xv_l, full).reshape(b, s, h * hd))
@@ -222,9 +230,10 @@ def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
     def body(x, lp_cache):
         lp, kc, vc, xk_l, xv_l = lp_cache
         h_in = _ln(lp["ln1"], x, cfg.norm_eps)
-        q = C.linear(lp["attn"]["q"], h_in).reshape(b, 1, h, hd)
-        k = C.linear(lp["attn"]["k"], h_in).reshape(b, 1, h, hd)
-        v = C.linear(lp["attn"]["v"], h_in).reshape(b, 1, h, hd)
+        q, k, v = C.linear_group(lp["attn"], ("q", "k", "v"), "qkv", h_in)
+        q = q.reshape(b, 1, h, hd)
+        k = k.reshape(b, 1, h, hd)
+        v = v.reshape(b, 1, h, hd)
         kc = C.update_cache_slot(kc, k, pos)
         vc = C.update_cache_slot(vc, v, pos)
         s_max = kc.shape[1]

@@ -228,11 +228,9 @@ def _shared_attn(sp, adapter, x, emb0, cfg: ModelConfig, cache=None, pos=None):
         att = C._sdpa(q, kc, vc, mask)
         new_kv = (kc, vc)
     y = C.linear(sp["o"], att.reshape(b, s, h * hd))
-    y = y + C.linear(
-        sp["mlp"]["down"],
-        C.swiglu(C.linear(sp["mlp"]["gate"], C.rmsnorm(cat, sp["ln2"], cfg.norm_eps)),
-                 C.linear(sp["mlp"]["up"], C.rmsnorm(cat, sp["ln2"], cfg.norm_eps))),
-    )
+    h2 = C.rmsnorm(cat, sp["ln2"], cfg.norm_eps)
+    gate, up = C.linear_group(sp["mlp"], ("gate", "up"), "gate_up", h2)
+    y = y + C.linear(sp["mlp"]["down"], C.swiglu(gate, up))
     return C.linear(adapter, y), new_kv
 
 

@@ -39,6 +39,13 @@ def _rope_1head(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     return C.apply_rope(x[:, :, None, :], tables)[:, :, 0, :]
 
 
+def _down_projs(p: dict, x: jax.Array):
+    """The two latent down-projections of x — wq_a and wkv_a share the layer
+    input, so when quantized they run as ONE fused launch (pre-merged
+    ``wqkv_a`` pack or trace-time fusion). Returns (cq_raw, ckv_full)."""
+    return C.linear_group(p, ("wq_a", "wkv_a"), "wqkv_a", x)
+
+
 def mla_train(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     """Expanded-form causal MLA (training / prefill math)."""
     b, s, d = x.shape
@@ -46,13 +53,13 @@ def mla_train(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     positions = jnp.arange(s)[None, :] * jnp.ones((b, 1), jnp.int32)
 
-    cq = C.rmsnorm(C.linear(p["wq_a"], x), p["q_norm"], cfg.norm_eps)
+    cq_raw, ckv_full = _down_projs(p, x)
+    cq = C.rmsnorm(cq_raw, p["q_norm"], cfg.norm_eps)
     q = C.linear(p["wq_b"], cq).reshape(b, s, h, nope + rope)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     tables = C.rope_tables(positions, rope, 1.0, cfg.rope_theta)
     q_rope = C.apply_rope(q_rope, tables)
 
-    ckv_full = C.linear(p["wkv_a"], x)
     ckv = C.rmsnorm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
     k_rope = _rope_1head(ckv_full[..., cfg.kv_lora_rank :], positions, cfg.rope_theta)
     kv = C.linear(p["wkv_b"], ckv).reshape(b, s, h, nope + vd)
@@ -78,7 +85,8 @@ def mla_prefill_layer(p: dict, x: jax.Array, cfg: ModelConfig):
     """Expanded attention + return the latent cache lines for this layer."""
     b, s, _ = x.shape
     positions = jnp.arange(s)[None, :] * jnp.ones((b, 1), jnp.int32)
-    ckv_full = C.linear(p["wkv_a"], x)
+    # same fused projection as mla_train on the same input: CSEs in the jit
+    _, ckv_full = _down_projs(p, x)
     ckv = C.rmsnorm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
     k_rope = _rope_1head(ckv_full[..., cfg.kv_lora_rank :], positions, cfg.rope_theta)
     return mla_train(p, x, cfg), ckv, k_rope
@@ -97,14 +105,14 @@ def mla_decode(p: dict, x: jax.Array, cfg: ModelConfig, ckv_cache, krope_cache, 
     positions = C.slot_positions(pos, b, sq)
     pos_v = positions[:, 0]
 
-    cq = C.rmsnorm(C.linear(p["wq_a"], x), p["q_norm"], cfg.norm_eps)
+    cq_raw, ckv_full = _down_projs(p, x)
+    cq = C.rmsnorm(cq_raw, p["q_norm"], cfg.norm_eps)
     q = C.linear(p["wq_b"], cq).reshape(b, sq, h, nope + rope)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     tables = C.rope_tables(positions, rope, 1.0, cfg.rope_theta)
     q_rope = C.apply_rope(q_rope, tables)
 
     # update latent cache with this step's compressed kv (per-slot offsets)
-    ckv_full = C.linear(p["wkv_a"], x)
     ckv_t = C.rmsnorm(ckv_full[..., :kvr], p["kv_norm"], cfg.norm_eps)
     krope_t = _rope_1head(ckv_full[..., kvr:], positions, cfg.rope_theta)
     ckv_cache = C.update_cache_slot(ckv_cache, ckv_t, pos_v)

@@ -89,16 +89,21 @@ def _dispatch_indices(top_i: jax.Array, k: int, E: int, C: int):
     return slot, tok_s, order, keep
 
 
+_EXPERT_KEYS = ("gate", "up", "gate_up", "down")
+
+
 def _expert_ffn(p: dict, xb: jax.Array) -> jax.Array:
     """xb (E_loc, Cap, D) -> (E_loc, Cap, D); bf16 or quantized experts."""
-    if "w" in p["gate"]:
+    if "gate" in p and "w" in p["gate"]:
         g = jnp.einsum("ecd,edf->ecf", xb, p["gate"]["w"].astype(xb.dtype))
         u = jnp.einsum("ecd,edf->ecf", xb, p["up"]["w"].astype(xb.dtype))
         h = C.swiglu(g, u)
         return jnp.einsum("ecf,efd->ecd", h, p["down"]["w"].astype(xb.dtype))
-    # quantized experts: vmap the linear dispatcher over the expert dim
+    # quantized experts: vmap the linear dispatcher over the expert dim;
+    # gate/up share the expert input, so they run as one fused launch
     def one(pe, xe):
-        return C.linear(pe["down"], C.swiglu(C.linear(pe["gate"], xe), C.linear(pe["up"], xe)))
+        g, u = C.linear_group(pe, ("gate", "up"), "gate_up", xe)
+        return C.linear(pe["down"], C.swiglu(g, u))
 
     return jax.vmap(one)(p, xb)
 
@@ -120,7 +125,8 @@ def _moe_local(p: dict, x: jax.Array, cfg: ModelConfig):
     top_w, top_i, aux = route(p["router"], x, cfg)
     slot, tok_s, order, keep = _dispatch_indices(top_i, k, E, Cp)
     buf = jnp.zeros((E * Cp + 1, d), x.dtype).at[slot].set(x[tok_s])
-    yb = _expert_ffn({kk: p[kk] for kk in ("gate", "up", "down")}, buf[: E * Cp].reshape(E, Cp, d))
+    experts = {kk: p[kk] for kk in _EXPERT_KEYS if kk in p}
+    yb = _expert_ffn(experts, buf[: E * Cp].reshape(E, Cp, d))
     yb = jnp.concatenate([yb.reshape(E * Cp, d), jnp.zeros((1, d), x.dtype)], axis=0)
     w_s = top_w.reshape(-1)[order].astype(x.dtype)
     contrib = yb[slot] * (w_s * keep.astype(x.dtype))[:, None]
@@ -221,7 +227,8 @@ def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig):
         ctx.mesh is not None
         and ctx.ep_size > 1
         and cfg.n_experts % ctx.ep_size == 0
-        and "w" in p["gate"]  # EP shard_map path is bf16-experts only (for now)
+        # EP shard_map path is bf16-experts only (for now)
+        and "gate" in p and "w" in p["gate"]
     )
     if use_ep:
         out, aux = _moe_ep(p, xf, cfg)

@@ -71,9 +71,10 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict):
     def body(x, lp):
         h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
         hh, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-        q = C.linear(lp["attn"]["q"], h).reshape(b, s, hh, hd)
-        k = C.linear(lp["attn"]["k"], h).reshape(b, s, kvh, hd)
-        v = C.linear(lp["attn"]["v"], h).reshape(b, s, kvh, hd)
+        q, k, v = C.linear_group(lp["attn"], ("q", "k", "v"), "qkv", h)
+        q = q.reshape(b, s, hh, hd)
+        k = k.reshape(b, s, kvh, hd)
+        v = v.reshape(b, s, kvh, hd)
         tables = C.rope_tables(positions, hd, cfg.rope_fraction, cfg.rope_theta)
         q = C.apply_rope(q, tables)
         k = C.apply_rope(k, tables)

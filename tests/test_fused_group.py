@@ -1,0 +1,417 @@
+"""Horizontally fused projection groups: pack fusion round-trips,
+fused-vs-unfused bit-exactness (both kernel schedules and the oracle, across
+segment-boundary shapes), fused routing/counters, and model-level adoption
+(linear_group + fuse_params forward parity)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ModelConfig, QuantSpec
+from repro.core.twinquant import fuse_params, quantize_params
+from repro.kernels.dispatch import (
+    DECODE_M_MAX,
+    QuantLinear,
+    QuantLinearGroup,
+    classify_dual_group,
+    dispatch_counters,
+    fused_linear,
+    quant_linear,
+    reset_dispatch_counters,
+    set_fusion,
+)
+from repro.kernels.ref import (
+    dual_gemm_group_ref,
+    dual_gemm_ref,
+    fuse_twinquant_weights,
+    pack_twinquant_weights,
+)
+from repro.kernels.twinquant_dual_gemm import dual_gemm
+from repro.kernels.twinquant_dual_gemv import dual_gemv
+
+
+def _make_pack(seed, K, N, r, a_bits=4, group=128):
+    k1, k2, k3, _ = jax.random.split(jax.random.PRNGKey(seed), 4)
+    U = jax.random.normal(k1, (K, r)) * 0.1
+    V = jax.random.normal(k2, (r, N)) * 0.1
+    R = jax.random.normal(k3, (K, N)) * 0.05
+    return pack_twinquant_weights(U, V, R, a_bits=a_bits, group=group)
+
+
+# uneven N segments with per-segment ranks (and so per-segment rgroups):
+# the segment-boundary geometry the fused kernels must keep bit-exact
+K = 512
+SEGS = ((256, 64), (128, 32), (128, 32))
+
+
+def _make_group(a_bits=4):
+    ws = [_make_pack(10 + j, K, n, r, a_bits) for j, (n, r) in enumerate(SEGS)]
+    return ws, fuse_twinquant_weights(ws)
+
+
+def _assert_bf16_close(y_k, y_ref, max_ulp=2):
+    a = np.asarray(jnp.asarray(y_k, jnp.bfloat16)).view(np.uint16).astype(np.int32)
+    b = np.asarray(jnp.asarray(y_ref, jnp.bfloat16)).view(np.uint16).astype(np.int32)
+    ka = np.where(a & 0x8000, 0x7FFF - (a & 0x7FFF), 0x8000 + a)
+    kb = np.where(b & 0x8000, 0x7FFF - (b & 0x7FFF), 0x8000 + b)
+    ulp = np.abs(ka - kb)
+    assert ulp.max() <= max_ulp, f"{(ulp > max_ulp).sum()} elements differ (max {ulp.max()})"
+
+
+# ---------------------------------------------------------------------------
+# pack fusion round-trip + fused oracle
+# ---------------------------------------------------------------------------
+
+
+def test_fuse_segment_roundtrip():
+    ws, gw = _make_group()
+    assert gw.seg_n == tuple(n for n, _ in SEGS)
+    assert gw.seg_r == tuple(r for _, r in SEGS)
+    assert gw.rgroups == tuple(min(128, r) for _, r in SEGS)
+    assert gw.ndim_out == sum(n for n, _ in SEGS)
+    assert gw.rank == sum(r for _, r in SEGS)
+    for j, w in enumerate(ws):
+        seg = gw.segment(j)
+        for f in ("up", "us", "vp", "vs", "rp", "rs"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(seg, f)), np.asarray(getattr(w, f))
+            )
+        assert (seg.group, seg.rgroup, seg.a_bits) == (w.group, w.rgroup, w.a_bits)
+
+
+@pytest.mark.parametrize("m", [1, 8, 48])
+def test_group_oracle_bitexact_vs_per_segment_oracle(m):
+    """The fused oracle shares Xq across segments but must reproduce each
+    unfused segment oracle bit for bit (column-independent ops, same order)."""
+    ws, gw = _make_group()
+    x = (jax.random.normal(jax.random.PRNGKey(m), (m, K)) * 2).astype(jnp.bfloat16)
+    y = dual_gemm_group_ref(x, gw)
+    for j, w in enumerate(ws):
+        np.testing.assert_array_equal(
+            np.asarray(gw.split(y)[j], np.float32),
+            np.asarray(dual_gemm_ref(x, w), np.float32),
+        )
+
+
+# ---------------------------------------------------------------------------
+# fused kernels vs unfused, through the dispatcher (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", list(range(1, DECODE_M_MAX + 1)))
+def test_fused_decode_kernel_bitexact(m):
+    """Decode M=1..8: the fused gemv must equal BOTH the per-segment unfused
+    kernel and the oracle exactly (the decode schedule matches the oracle's
+    accumulation order)."""
+    ws, gw = _make_group()
+    x = (jax.random.normal(jax.random.PRNGKey(m), (m, K)) * 2).astype(jnp.bfloat16)
+    assert classify_dual_group(m, K, 128, gw.seg_n, gw.seg_r, gw.rgroups).path == "decode"
+    ys = fused_linear(x, gw, impl="kernel", interpret=True)
+    for j, w in enumerate(ws):
+        y_unfused = dual_gemv(x, w, block_n=128, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(ys[j], np.float32), np.asarray(y_unfused, np.float32)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ys[j], np.float32),
+            np.asarray(dual_gemm_ref(x, w), np.float32),
+        )
+
+
+@pytest.mark.parametrize("a_bits", [4, 8])
+def test_fused_prefill_kernel_bitexact_vs_unfused_kernel(a_bits):
+    """Prefill M=256: the fused gemm must equal the unfused kernel run per
+    segment at the same blocks bit for bit, and stay within f32-reassociation
+    ULPs of the oracle (the unfused kernel's own tolerance)."""
+    ws, gw = _make_group(a_bits)
+    m = 256
+    x = (jax.random.normal(jax.random.PRNGKey(a_bits), (m, K)) * 2).astype(jnp.bfloat16)
+    route = classify_dual_group(m, K, 128, gw.seg_n, gw.seg_r, gw.rgroups)
+    assert route.path == "prefill"
+    bm, bn, bk = route.blocks
+    ys = fused_linear(x, gw, impl="kernel", interpret=True)
+    for j, w in enumerate(ws):
+        y_unfused = dual_gemm(x, w, block_m=bm, block_n=bn, block_k=bk, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(ys[j], np.float32), np.asarray(y_unfused, np.float32)
+        )
+        _assert_bf16_close(ys[j], dual_gemm_ref(x, w))
+
+
+def test_fused_bias_and_batch_dims():
+    ws, gw = _make_group()
+    b0 = jnp.arange(gw.seg_n[0], dtype=jnp.float32) * 0.01
+    x = (jax.random.normal(jax.random.PRNGKey(3), (2, 3, K))).astype(jnp.bfloat16)
+    ys = fused_linear(x, gw, biases=[b0, None, None], impl="kernel", interpret=True)
+    assert [y.shape for y in ys] == [(2, 3, n) for n in gw.seg_n]
+    y_ref = dual_gemm_ref(x.reshape(6, K), ws[0]).reshape(2, 3, -1)
+    y_ref = (y_ref.astype(jnp.float32) + b0).astype(jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(ys[0], np.float32), np.asarray(y_ref, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# routing + counters
+# ---------------------------------------------------------------------------
+
+
+def test_classify_dual_group_regimes():
+    sn, sr, gr = (256, 128, 128), (64, 32, 32), (64, 32, 32)
+    assert classify_dual_group(1, 512, 128, sn, sr, gr).path == "decode"
+    assert classify_dual_group(8, 512, 128, sn, sr, gr).path == "decode"
+    assert classify_dual_group(9, 512, 128, sn, sr, gr).path == "prefill"
+    # block_n must tile EVERY segment: one odd segment -> ref
+    assert classify_dual_group(4, 512, 128, (256, 100), (64, 32), (64, 32)).path == "ref"
+    # K not a group multiple -> ref
+    assert classify_dual_group(4, 300, 128, sn, sr, gr).path == "ref"
+    # a segment rank not tileable by its rgroup -> ref
+    assert classify_dual_group(4, 512, 128, sn, (64, 30, 32), (64, 4, 32)).path == "ref"
+    blocks = classify_dual_group(4, 512, 128, sn, sr, gr).blocks
+    assert blocks is not None and all(n % blocks[1] == 0 for n in sn)
+
+
+def test_fused_ref_route_odd_segments_no_assert():
+    """An untileable group must run the per-segment oracle, not assert."""
+    ws = [_make_pack(31, K, 100, 32), _make_pack(32, K, 128, 32)]
+    x = (jax.random.normal(jax.random.PRNGKey(5), (4, K)) * 2).astype(jnp.bfloat16)
+    ys = fused_linear(x, ws, impl="kernel", interpret=True)  # impl hint ignored on ref
+    for y, w in zip(ys, ws):
+        np.testing.assert_array_equal(
+            np.asarray(y, np.float32), np.asarray(dual_gemm_ref(x, w), np.float32)
+        )
+
+
+def test_fused_dispatch_counters():
+    ws, gw = _make_group()
+    reset_dispatch_counters()
+    fused_linear(jnp.ones((4, K), jnp.bfloat16), gw)
+    fused_linear(jnp.ones((4, K), jnp.bfloat16), gw)
+    fused_linear(jnp.ones((64, K), jnp.bfloat16), gw)
+    c = dispatch_counters()
+    assert c["dual_fused/decode"] == 2
+    assert c["dual_fused/prefill"] == 1
+    reset_dispatch_counters()
+
+
+def test_quantlineargroup_route_matches_execution():
+    ws, gw = _make_group()
+    layer = QuantLinearGroup(ws)
+    assert layer.route_for((4, K)).path == "decode"
+    assert layer.route_for((2, 3, K)).path == "decode"  # M = 6 flattened
+    assert layer.route_for((2, 64, K)).path == "prefill"
+    x = (jax.random.normal(jax.random.PRNGKey(7), (4, K)) * 2).astype(jnp.bfloat16)
+    ys = layer(x)
+    for j, w in enumerate(ws):
+        np.testing.assert_array_equal(
+            np.asarray(ys[j], np.float32), np.asarray(dual_gemm_ref(x, w), np.float32)
+        )
+
+
+def test_quantlinear_route_for_shares_flatten_m():
+    """route_for must flatten leading dims exactly like quant_linear does
+    (the execution path), including the empty-leading-dims case M=1."""
+    w = _make_pack(40, 256, 128, 32)
+    layer = QuantLinear(w)
+    assert layer.route_for((256,)).path == "decode"  # M=1, not M=0
+    for shape in ((256,), (4, 256), (2, 3, 256), (2, 64, 256)):
+        x = jnp.ones(shape, jnp.bfloat16)
+        reset_dispatch_counters()
+        quant_linear(x, w)
+        (executed,) = [k.split("/")[1] for k in dispatch_counters()]
+        assert layer.route_for(shape).path == executed, shape
+    reset_dispatch_counters()
+
+
+# ---------------------------------------------------------------------------
+# model-level adoption: linear_group + fuse_params
+# ---------------------------------------------------------------------------
+
+CFG = ModelConfig(
+    name="fuse-t", family="dense", n_layers=2, d_model=256, n_heads=4,
+    n_kv_heads=2, head_dim=64, d_ff=512, vocab=64, rope_theta=1e4, remat=False,
+)
+
+
+def _dense_qparams():
+    from repro.models import dense
+
+    params = dense.init_params(CFG, jax.random.PRNGKey(0))
+    return params, quantize_params(params, CFG, QuantSpec(mode="w4a4", rank=32))
+
+
+def test_fuse_params_merges_sibling_packs():
+    _, qp = _dense_qparams()
+    fqp = fuse_params(qp)
+    attn = fqp["layers"]["attn"]
+    assert "qkv" in attn and not any(k in attn for k in ("q", "k", "v"))
+    assert "o" in attn  # o has its own input (attention output): never fused
+    mlp = fqp["layers"]["mlp"]
+    assert "gate_up" in mlp and "down" in mlp
+    # stacked (per-layer) leaves: concat along the trailing N axis
+    assert attn["qkv"]["rp"].shape == (CFG.n_layers, 128, 256 + 128 + 128)
+    assert attn["qkv"]["vp0"].shape[0] == CFG.n_layers
+
+
+def test_fuse_params_leaves_bf16_and_w4a16_alone():
+    params, _ = _dense_qparams()
+    fused = fuse_params(params)  # bf16 tree: structurally unchanged
+    assert jax.tree_util.tree_structure(fused) == jax.tree_util.tree_structure(params)
+    qp16 = quantize_params(params, CFG, QuantSpec(mode="w4a16"))
+    f16 = fuse_params(qp16)
+    assert "q" in f16["layers"]["attn"] and "qkv" not in f16["layers"]["attn"]
+
+
+def test_dense_forward_parity_fused_vs_unfused():
+    """Prefill + decode logits must be IDENTICAL across: unfused (fusion
+    off), trace-time fusion, and pre-merged fuse_params packs — the fused
+    route is the default and provably lossless on the ref path."""
+    from repro.models import dense
+
+    _, qp = _dense_qparams()
+    fqp = fuse_params(qp)
+    toks = jnp.arange(16, dtype=jnp.int32)[None, :].repeat(2, 0) % CFG.vocab
+    state0 = dense.init_decode_state(CFG, 2, 32)
+    step = jnp.array([[1], [2]], jnp.int32)
+
+    def run(p, flag):
+        prev = set_fusion(flag)
+        try:
+            lg, st = dense.prefill(p, CFG, toks, state0)
+            dl, _ = dense.decode_step(p, CFG, st, step)
+            return np.asarray(lg, np.float32), np.asarray(dl, np.float32)
+        finally:
+            set_fusion(prev)
+
+    base = run(qp, False)
+    reset_dispatch_counters()
+    trace_fused = run(qp, True)
+    c = dispatch_counters()
+    assert c.get("dual_fused/decode", 0) > 0 and c.get("dual_fused/prefill", 0) > 0
+    pre_merged = run(fqp, True)
+    for a, b in zip(base, trace_fused):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(base, pre_merged):
+        np.testing.assert_array_equal(a, b)
+    reset_dispatch_counters()
+
+
+def test_set_fusion_disables_group_launches():
+    from repro.models import common as C
+
+    _, qp = _dense_qparams()
+    lp = jax.tree.map(lambda a: a[0], qp["layers"])  # one layer's packs
+    x = jnp.ones((4, CFG.d_model), jnp.bfloat16)
+    reset_dispatch_counters()
+    prev = set_fusion(False)
+    try:
+        C.linear_group(lp["attn"], ("q", "k", "v"), "qkv", x)
+    finally:
+        set_fusion(prev)
+    c = dispatch_counters()
+    assert c.get("dual_fused/decode", 0) == 0 and c.get("dual/decode", 0) == 3
+    reset_dispatch_counters()
+    C.linear_group(lp["attn"], ("q", "k", "v"), "qkv", x)
+    assert dispatch_counters().get("dual_fused/decode", 0) == 1
+    reset_dispatch_counters()
+
+
+def test_linear_group_falls_back_for_bf16_and_mixed():
+    from repro.models import common as C
+
+    params, qp = _dense_qparams()
+    lp_bf16 = jax.tree.map(lambda a: a[0], params["layers"])
+    x = jnp.ones((4, CFG.d_model), jnp.bfloat16)
+    q, k, v = C.linear_group(lp_bf16["attn"], ("q", "k", "v"), "qkv", x)
+    assert q.shape[-1] == CFG.n_heads * CFG.head_dim
+    # mixed precision siblings (one bf16, two packed): per-sibling fallback
+    lp_q = jax.tree.map(lambda a: a[0], qp["layers"])
+    mixed = {"q": lp_bf16["attn"]["q"], "k": lp_q["attn"]["k"], "v": lp_q["attn"]["v"]}
+    reset_dispatch_counters()
+    q2, k2, v2 = C.linear_group(mixed, ("q", "k", "v"), "qkv", x)
+    assert dispatch_counters().get("dual_fused/decode", 0) == 0
+    np.testing.assert_array_equal(
+        np.asarray(k2, np.float32), np.asarray(C.linear(mixed["k"], x), np.float32)
+    )
+    reset_dispatch_counters()
+
+
+def test_set_fusion_false_forces_premerged_pack_per_segment():
+    """The A/B toggle must be honest for BOTH layouts: a fuse_params-merged
+    tree with fusion off executes one launch per segment, identical values."""
+    from repro.models import common as C
+
+    _, qp = _dense_qparams()
+    lp = jax.tree.map(lambda a: a[0], fuse_params(qp)["layers"])
+    x = (jax.random.normal(jax.random.PRNGKey(8), (4, CFG.d_model)) * 2).astype(jnp.bfloat16)
+    fused = C.linear_group(lp["attn"], ("q", "k", "v"), "qkv", x)
+    reset_dispatch_counters()
+    prev = set_fusion(False)
+    try:
+        unfused = C.linear_group(lp["attn"], ("q", "k", "v"), "qkv", x)
+    finally:
+        set_fusion(prev)
+    c = dispatch_counters()
+    assert c.get("dual_fused/decode", 0) == 0 and c.get("dual/decode", 0) == 3
+    for a, b in zip(fused, unfused):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    reset_dispatch_counters()
+
+
+def test_engine_premerges_sibling_packs():
+    """The serving engine pre-merges unfused packs at construction (so fused
+    launches never pay per-step pack concatenation) and its decode traces
+    route the fused kind."""
+    from repro.launch.serve import ContinuousBatchingEngine, Request
+
+    _, qp = _dense_qparams()
+    eng = ContinuousBatchingEngine(CFG, qp, batch_slots=2, max_len=24)
+    attn = eng.params["layers"]["attn"]
+    assert "qkv" in attn and "q" not in attn
+    eng.serve([Request(jnp.arange(6, dtype=jnp.int32), max_new=3)])
+    routes = eng.routing()
+    assert routes.get("dual_fused/decode", 0) > 0, routes
+
+
+def test_mamba_hybrid_shared_attn_mlp_fuses():
+    """fuse_params merges the hybrid stack's shared-attention MLP gate/up;
+    the forward pass must consume the merged pack (no KeyError) with values
+    identical to the unfused tree."""
+    from repro.configs import get_config
+    from repro.models.registry import get_model
+
+    cfg = get_config("zamba2-1.2b", reduced=True)
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(params, cfg, QuantSpec(mode="w4a4", rank=16))
+    fqp = fuse_params(qp)
+    toks = jnp.arange(8, dtype=jnp.int32)[None, :] % cfg.vocab
+    y_unfused = np.asarray(model.forward(qp, cfg, toks), np.float32)
+    y_fused = np.asarray(model.forward(fqp, cfg, toks), np.float32)
+    np.testing.assert_array_equal(y_unfused, y_fused)
+
+
+def test_fuse_params_excludes_encdec_cross_attention():
+    """xattn q projects the decoder stream, k/v the encoder states: no shared
+    activation, so fuse_params must leave xattn unfused (only dicts named
+    'attn' merge q/k/v)."""
+    xattn_like = {
+        "layers": {
+            "xattn": {
+                "q": _pack_dict(1), "k": _pack_dict(2), "v": _pack_dict(3),
+            },
+            "attn": {
+                "q": _pack_dict(4), "k": _pack_dict(5), "v": _pack_dict(6),
+            },
+        }
+    }
+    fused = fuse_params(xattn_like)
+    assert set(fused["layers"]["xattn"]) == {"q", "k", "v"}
+    assert set(fused["layers"]["attn"]) == {"qkv"}
+
+
+def _pack_dict(seed, K=256, N=128, r=32):
+    w = _make_pack(seed, K, N, r)
+    return {
+        "up": w.up, "us": w.us, "vp": w.vp, "vs": w.vs, "rp": w.rp, "rs": w.rs,
+        "abits": jnp.zeros((w.a_bits,), jnp.int8),
+    }
