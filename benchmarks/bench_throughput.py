@@ -120,11 +120,121 @@ def run_engine(fused: bool = True) -> dict:
     return results
 
 
-def run(quick: bool = False, fused: bool = True) -> dict:
+def _paged_workload(cfg):
+    """System-prompt-style traffic: a shared 48-token prefix with mixed-length
+    tails, plus a few cold prompts — the workload paging + prefix caching are
+    for. Prefix length is page-aligned (48 = 6 pages of 8) so hits map whole
+    pages."""
+    system = [(7 * i + 3) % cfg.vocab for i in range(48)]
+    tails = [2, 5, 9, 14, 3, 7, 11, 6]
+    prompts = [system + [(100 + 13 * j + t) % cfg.vocab for t in range(n)]
+               for j, n in enumerate(tails)]
+    prompts += [[(50 + 5 * t) % cfg.vocab for t in range(n)] for n in (6, 21)]  # cold
+    return prompts
+
+
+def run_paged(fused: bool = True) -> dict:
+    """Measured paged-vs-dense serving on the mixed-prompt + shared-prefix
+    workload: tokens/s both ways, prefix-cache hit rate, peak cache bytes,
+    and a hard tokens-equality check (the paged engine must reproduce the
+    dense engine token for token — the A/B oracle, not a tolerance)."""
+    from repro.configs import QuantSpec
+    from repro.core.twinquant import fuse_params, quantize_params
+    from repro.kernels.dispatch import set_fusion
+    from repro.launch.serve import ContinuousBatchingEngine, Request
+
+    from repro.models import dense
+
+    cfg = BENCH_CFG
+    params = dense.init_params(cfg, jax.random.PRNGKey(0))
+    qparams = quantize_params(params, cfg, QuantSpec(mode="w4a4", rank=32))
+    if fused:
+        qparams = fuse_params(qparams)
+    prompts = _paged_workload(cfg)
+    max_len, page_size, slots = 96, 8, 4
+    # pool sized at 60% of the dense B x S_max row count: the capacity
+    # headroom paging buys on short/shared traffic
+    n_pages = int(0.6 * slots * (max_len // page_size))
+    prev = set_fusion(fused)
+    try:
+        results = {}
+        for mode in ("paged", "dense"):
+            kw = dict(paged=True, page_size=page_size, n_pages=n_pages) if mode == "paged" else {}
+            eng = ContinuousBatchingEngine(cfg, qparams, batch_slots=slots,
+                                           max_len=max_len, **kw)
+            reqs = [Request(jnp.asarray(p, jnp.int32), max_new=16) for p in prompts]
+            eng.serve(reqs)
+            if mode == "paged":
+                eng.check_page_invariants()
+            th = eng.throughput()
+            mem = eng.memory()
+            results[mode] = {
+                "decode_tok_s": th["decode_tok_s"],
+                "prefill_tok_s": th["prefill_tok_s"],
+                "prefill_tokens": th["prefill_tokens"],
+                "peak_cache_bytes": mem["peak_cache_bytes"],
+                "routing": th["routing"],
+                "outputs": [r.out for r in reqs],
+                "compile": eng.compile_stats(),
+            }
+            if mode == "paged":
+                results[mode]["prefix_hit_rate"] = (
+                    th["prefix_hits"] / max(th["prefix_lookups"], 1)
+                )
+                results[mode]["prefix_hit_tokens"] = th["prefix_hit_tokens"]
+                results[mode]["memory"] = {
+                    k: mem[k] for k in ("page_size", "n_pages", "pages_peak",
+                                        "cache_bytes", "dense_cache_bytes")
+                }
+    finally:
+        set_fusion(prev)
+    pg, dn = results["paged"], results["dense"]
+    out = {
+        "paged_decode_tok_s": pg["decode_tok_s"],
+        "dense_decode_tok_s": dn["decode_tok_s"],
+        "paged_prefill_tok_s": pg["prefill_tok_s"],
+        "dense_prefill_tok_s": dn["prefill_tok_s"],
+        # the prefix cache's work reduction shows up directly here
+        "paged_prefill_tokens": pg["prefill_tokens"],
+        "dense_prefill_tokens": dn["prefill_tokens"],
+        "prefix_hit_rate": pg["prefix_hit_rate"],
+        "prefix_hit_tokens": pg["prefix_hit_tokens"],
+        "peak_cache_bytes_paged": pg["peak_cache_bytes"],
+        "peak_cache_bytes_dense": dn["peak_cache_bytes"],
+        "peak_below_dense": pg["peak_cache_bytes"] < dn["peak_cache_bytes"],
+        "tokens_match": pg["outputs"] == dn["outputs"],
+        "routing": pg["routing"],
+        "compile": pg["compile"],
+        "memory": pg["memory"],
+    }
+    if not out["tokens_match"]:
+        raise RuntimeError("paged serving diverged from the dense oracle")
+    if out["routing"].get("dual/decode", 0) == 0:
+        raise RuntimeError(
+            f"paged decode trace did not route the decode-shaped kernel "
+            f"(routes: {out['routing']})"
+        )
+    emit("throughput/paged", 1e6 / max(out["paged_decode_tok_s"], 1e-9),
+         f"decode={out['paged_decode_tok_s']:.1f}tok/s "
+         f"(dense={out['dense_decode_tok_s']:.1f}) "
+         f"hit_rate={out['prefix_hit_rate']:.2f} "
+         f"prefill_toks={out['paged_prefill_tokens']}vs{out['dense_prefill_tokens']} "
+         f"peak_bytes={out['peak_cache_bytes_paged']}vs{out['peak_cache_bytes_dense']}")
+    return out
+
+
+def run(quick: bool = False, fused: bool = True, paged: bool = False) -> dict:
     """``quick=True`` (the CI bench lane) runs only the measured engine
     sweep — the gated metrics; the full run adds the derived roofline grid.
-    ``fused`` toggles horizontal projection fusion for the engine sweep."""
+    ``fused`` toggles horizontal projection fusion for the engine sweep;
+    ``paged`` adds the paged-vs-dense mixed-prompt workload (the
+    BENCH_PAGED.json lane)."""
     if quick:
+        # the paged quick lane is paged-ONLY: the b{1,4,8} engine sweep
+        # already ran (and was gated) in the BENCH_PR lane, and re-gating a
+        # duplicate sweep would double the exposure to machine-noise one-offs
+        if paged:
+            return {"paged": run_paged(fused=fused), "fused": fused}
         return {"engine_measured": run_engine(fused=fused), "fused": fused}
     cfg = get_config("llama3-8b")
     results = {}
@@ -151,6 +261,8 @@ def run(quick: bool = False, fused: bool = True) -> dict:
     dt = time.monotonic() - t0
     engine = run_engine(fused=fused)
     out = {"roofline": results, "engine_measured": engine, "fused": fused}
+    if paged:
+        out["paged"] = run_paged(fused=fused)
     ART.mkdir(parents=True, exist_ok=True)
     (ART / "bench_throughput.json").write_text(json.dumps(out, indent=2))
     for k, v in results.items():

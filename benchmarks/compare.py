@@ -19,6 +19,13 @@ machine-independent checks always fail hard:
   step) must not exceed the baseline's. This is the fusion ratchet: q/k/v
   and gate/up stay one launch each.
 
+A candidate carrying a ``paged`` throughput section (the ``--paged`` lane,
+BENCH_PAGED.json) additionally gets the paged-routing sanity check
+(``check_paged``): dense-oracle token equality, decode-kernel routing,
+prefix-cache hits, and peak-bytes-below-dense. It reports as warnings until
+a baseline containing a ``paged`` section is promoted (DESIGN.md §12), then
+fails hard.
+
 The per-path launch counts (fused vs unfused kinds) are printed for every
 batch size, so the artifact trail shows where each launch went, not just the
 tokens/s number.
@@ -74,6 +81,34 @@ def check_routing(doc: dict) -> list[str]:
     return errors
 
 
+def check_paged(base: dict, cand: dict) -> tuple[list[str], list[str]]:
+    """Paged-lane sanity: the paged engine must have reproduced the dense
+    oracle token for token, routed the decode-shaped kernel, actually hit the
+    prefix cache, and kept peak cache bytes under the dense footprint.
+
+    Non-gating (warnings) until a baseline carrying a ``paged`` section is
+    promoted per DESIGN.md §12 — after that, failures."""
+    pg = cand.get("results", {}).get("throughput", {}).get("paged")
+    if pg is None:
+        return [], []
+    issues = []
+    if not pg.get("tokens_match", False):
+        issues.append("paged: outputs diverged from the dense serving oracle")
+    if pg.get("routing", {}).get("dual/decode", 0) == 0:
+        issues.append("paged: decode sweep did not route the decode-shaped kernel")
+    if pg.get("prefix_hit_rate", 0) <= 0:
+        issues.append("paged: prefix cache never hit on the shared-prefix workload")
+    if not pg.get("peak_below_dense", False):
+        issues.append("paged: peak cache bytes not below the dense footprint")
+    print(f"\n{'paged lane':<24} decode={pg.get('paged_decode_tok_s', 0):.1f}tok/s "
+          f"(dense={pg.get('dense_decode_tok_s', 0):.1f}) "
+          f"hit_rate={pg.get('prefix_hit_rate', 0):.2f} "
+          f"prefill_toks={pg.get('paged_prefill_tokens')}vs{pg.get('dense_prefill_tokens')} "
+          f"peak_bytes={pg.get('peak_cache_bytes_paged')}vs{pg.get('peak_cache_bytes_dense')}")
+    gating = "paged" in base.get("results", {}).get("throughput", {})
+    return (issues, []) if gating else ([], issues)
+
+
 def check_launches(base: dict, cand: dict) -> list[str]:
     """Launch-count ratchet: decode launches per traced step must not grow."""
     errors = []
@@ -105,12 +140,30 @@ def main() -> None:
     ap.add_argument("candidate")
     ap.add_argument("--max-regress", type=float, default=0.25,
                     help="allowed fractional tokens/s drop (default 0.25)")
+    ap.add_argument("--paged-only", action="store_true",
+                    help="candidate is the paged-only lane (BENCH_PAGED.json): "
+                         "run just the paged sanity checks, no engine-sweep gate")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
         base = json.load(f)
     with open(args.candidate) as f:
         cand = json.load(f)
+
+    if args.paged_only:
+        failures, warns = check_paged(base, cand)
+        if cand.get("results", {}).get("throughput", {}).get("paged") is None:
+            failures.append("paged section missing from candidate")
+        for msg in warns:
+            print(f"WARN (paged lane not in baseline yet, not gating): {msg}",
+                  file=sys.stderr)
+        if failures:
+            print("\nBENCH GATE FAILED:", file=sys.stderr)
+            for msg in failures:
+                print(f"  - {msg}", file=sys.stderr)
+            raise SystemExit(1)
+        print("\nbench gate (paged lane): ok")
+        return
 
     bootstrap = bool(base.get("bootstrap"))
     base_m = engine_metrics(base)
@@ -138,9 +191,13 @@ def main() -> None:
             print(f"{name:<24} {'(new)':>12} {cand_m[name]:>12.1f}")
 
     failures += check_launches(base, cand)
+    paged_failures, paged_warnings = check_paged(base, cand)
+    failures += paged_failures
 
     for msg in warnings:
         print(f"WARN (bootstrap baseline, not gating): {msg}", file=sys.stderr)
+    for msg in paged_warnings:
+        print(f"WARN (paged lane not in baseline yet, not gating): {msg}", file=sys.stderr)
     if failures:
         print("\nBENCH GATE FAILED:", file=sys.stderr)
         for msg in failures:

@@ -45,6 +45,12 @@ def main() -> None:
         "--no-fused", dest="fused", action="store_false",
         help="A/B lane: per-sibling launches (the pre-fusion serving path)",
     )
+    ap.add_argument(
+        "--paged", action="store_true",
+        help="add the paged-serving lane (mixed-prompt + shared-prefix "
+             "workload, paged vs dense engines) to the throughput module — "
+             "the BENCH_PAGED.json artifact",
+    )
     ap.add_argument("--out", default=None, help="write combined results JSON here")
     args = ap.parse_args()
 
@@ -74,7 +80,8 @@ def main() -> None:
     for name in selected:
         try:
             if name == "throughput":
-                results[name] = mods[name].run(quick=args.quick, fused=args.fused)
+                results[name] = mods[name].run(quick=args.quick, fused=args.fused,
+                                               paged=args.paged)
             elif name in QUICK_MODULES:
                 results[name] = mods[name].run(quick=args.quick)
             else:

@@ -33,7 +33,12 @@ def main():
     qb = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(qparams)) / 1e6
     print(f" {n_quant} linears packed; params {pb:.1f}MB -> {qb:.1f}MB")
 
-    engine = ContinuousBatchingEngine(cfg, qparams, batch_slots=4, max_len=96)
+    # paged serving runtime (DESIGN.md §14): global page pool + per-slot
+    # block tables, admission gated on free pages, shared prompt prefixes
+    # served from the prefix cache (paged=False is the dense A/B oracle)
+    engine = ContinuousBatchingEngine(cfg, qparams, batch_slots=4, max_len=96,
+                                      paged=True, page_size=8)
+    system = "# TwinQuant demo: continue the code\n"  # shared system prompt
     prompts = [
         "def main(", "import jax", "class Model", "# TwinQuant",
         "return x +", "for i in",
@@ -41,7 +46,7 @@ def main():
     # mixed per-request sampling: half greedy, half temperature+top-k
     requests = [
         Request(
-            jnp.asarray(list(p.encode()), jnp.int32), max_new=12,
+            jnp.asarray(list((system + p).encode()), jnp.int32), max_new=12,
             sampling=(SamplingParams() if i % 2 == 0
                       else SamplingParams(temperature=0.8, top_k=40, seed=i)),
         )
@@ -65,9 +70,18 @@ def main():
     # prompt prefill (M=prompt length) the prefill one
     routes = ", ".join(f"{k}:{v}" for k, v in sorted(th["routing"].items()))
     print(f" dispatch routes: {routes}")
+    mem = engine.memory()
+    cs = engine.compile_stats()
+    print(f" paging: {mem['pages_peak']}/{mem['n_pages']} pages peak "
+          f"({mem['peak_cache_bytes'] / 1e3:.0f}kB vs dense {mem['dense_cache_bytes'] / 1e3:.0f}kB), "
+          f"prefix hits {th['prefix_hits']}/{th['prefix_lookups']} "
+          f"({th['prefix_hit_tokens']} prompt tokens served from cache), "
+          f"{cs['prefill_traces']} prefill traces for buckets {cs['prefill_buckets']}")
+    engine.check_page_invariants()
     assert th["routing"].get("dual/decode", 0) > 0, "decode steps must route decode"
     assert th["routing"].get("dual_fused/decode", 0) > 0, \
         "fused serving must route the fused decode kind (q/k/v, gate/up)"
+    assert th["prefix_hits"] > 0, "shared system prompt must hit the prefix cache"
     print("serve_quantized OK")
 
 

@@ -1,26 +1,37 @@
 """Serving launcher: prefill/decode step construction + a continuous-batching
-serving engine built on per-slot cache state.
+serving engine built on per-slot cache state, with an optional PAGED KV-cache
+runtime (block-table attention, page allocator, prompt-prefix cache).
 
 The decode step is the function the ``decode_*`` / ``long_*`` dry-run cells
 lower; :class:`ContinuousBatchingEngine` is the runnable end-to-end driver
 used by examples/serve_quantized.py and benchmarks/bench_throughput.py.
 
-Engine architecture (DESIGN.md §10):
+Engine architecture (DESIGN.md §10, §14):
 
 * Every decode state carries a **per-slot position vector** ``pos (B,)`` —
   each batch slot is an independent timeline, so requests of different
   lengths decode in lock-step without sharing a global step counter.
 * **Admission** runs the model's real prefill once on a batch-1 state (one
-  batched pass over the whole prompt, not T decode steps) and splices the
-  resulting cache/recurrent state into the free slot with a single
-  ``dynamic_update_slice_in_dim`` per leaf — live slots are never touched.
+  batched pass over the whole prompt, not T decode steps). Prompts are
+  padded to power-of-two **buckets** (compile count O(log S_max), not
+  O(distinct lengths)); the model's ``length`` kwarg keeps the padded math
+  exact and ``compile_stats()`` reports the trace inventory.
 * The slot axis of every state leaf is inferred structurally (batch-2 vs
   batch-1 ``eval_shape`` diff), so the same engine serves KV-cache
   transformers, MLA latent caches, SSM/xLSTM recurrent states, and hybrid
   stacks without per-family splice code.
-* **Eviction** is host bookkeeping only: a finished request frees its slot;
-  stale device state is fully overwritten at the next admission, and
-  per-slot masking (``arange(S) < pos[b]``) keeps it invisible meanwhile.
+* **Paged mode** (``paged=True``): sequence-carrying cache leaves live in a
+  global page pool shared by all slots (``models.common.init_paged_state``);
+  a host-side :class:`PageAllocator` owns the free list and refcounts,
+  admission is gated on free PAGES (not just free slots), eviction returns
+  pages, and a :class:`PrefixCache` maps shared prompt prefixes (hashed at
+  page granularity) into new slots copy-free so only the suffix re-prefills.
+  The dense per-slot layout stays alive behind the flag as the A/B and
+  correctness oracle.
+* **Eviction** is host bookkeeping plus (paged) page release: a finished
+  request frees its slot and pages; stale device state is invisible behind
+  the per-slot mask / unmapped block-table rows. A request stopped by cache
+  capacity before producing ``max_new`` tokens is flagged ``truncated``.
 * Sampling is per-request (greedy / temperature / top-k) on the host.
 """
 
@@ -28,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Any, Callable, Optional
 
@@ -36,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ModelConfig
+from repro.models import common as C
 from repro.models.registry import get_model
 
 
@@ -80,9 +93,162 @@ class Request:
     frontend: dict = dataclasses.field(default_factory=dict)  # vlm/encdec extras
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # set at eviction when the request hit cache capacity before filling its
+    # max_new quota (prompt_len + max_new > engine.max_len)
+    truncated: bool = False
     # engine-private
     _last_logits: Any = dataclasses.field(default=None, repr=False)
     _rng: Any = dataclasses.field(default=None, repr=False)
+
+
+# ---------------------------------------------------------------------------
+# paged-pool host bookkeeping (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+class PageAllocator:
+    """Free-list allocator with refcounts over the global KV page pool.
+
+    A page's refcount is exactly (number of slot block-tables mapping it)
+    plus (1 if a prefix-cache entry holds it). ``alloc`` hands out ref=1
+    pages, ``share`` adds a reference (prefix reuse / cache registration),
+    ``release`` drops one and returns fully-freed pages to the free list.
+    ``audit`` asserts the free list and refcounts partition the pool — the
+    no-leak / no-double-map invariant the churn tests exercise."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self.free: deque[int] = deque(range(n_pages))
+        self.ref = np.zeros(n_pages, np.int32)
+        self.peak_used = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_pages - len(self.free)
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        if n > len(self.free):
+            return None
+        pages = [self.free.popleft() for _ in range(n)]
+        for p in pages:
+            assert self.ref[p] == 0, f"free page {p} had ref {self.ref[p]}"
+            self.ref[p] = 1
+        self.peak_used = max(self.peak_used, self.n_used)
+        return pages
+
+    def share(self, pages) -> None:
+        for p in pages:
+            assert self.ref[p] > 0, f"sharing unreferenced page {p}"
+            self.ref[p] += 1
+
+    def release(self, pages) -> None:
+        for p in pages:
+            assert self.ref[p] > 0, f"double release of page {p}"
+            self.ref[p] -= 1
+            if self.ref[p] == 0:
+                self.free.append(p)
+
+    def audit(self) -> None:
+        free = set(self.free)
+        assert len(free) == len(self.free), "free list contains duplicates"
+        for p in range(self.n_pages):
+            if p in free:
+                assert self.ref[p] == 0, f"free page {p} has ref {self.ref[p]}"
+            else:
+                assert self.ref[p] > 0, f"page {p} leaked (ref 0 but not free)"
+
+
+class _PrefixEntry:
+    __slots__ = ("key", "page", "eid", "parent", "children", "tick")
+
+
+class PrefixCache:
+    """Prompt-prefix page cache (hash-chained at page granularity).
+
+    Entry j of a prompt's chain is keyed by (parent entry id, the page's
+    token tuple), so a key identifies the FULL token prefix up to that page
+    boundary without hashing collisions or storing O(S^2) token copies.
+    A hit maps already-filled, fully-immutable pages (only whole pages fully
+    covered by prompt tokens are ever registered; decode writes land strictly
+    after the prompt, so registered pages are never written again) into the
+    new slot's block table copy-free. Registered pages carry one cache
+    reference; ``evict`` drops least-recently-used leaf entries to refill
+    the free list when admission runs out of pages."""
+
+    def __init__(self, allocator: PageAllocator, page_size: int):
+        self.allocator = allocator
+        self.page_size = page_size
+        self.entries: dict[tuple, _PrefixEntry] = {}
+        self._by_id: dict[int, _PrefixEntry] = {}
+        self._next_id = 1
+        self._tick = 0
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def _key(self, parent: int, prompt, j: int) -> tuple:
+        ps = self.page_size
+        return (parent, tuple(int(t) for t in prompt[j * ps : (j + 1) * ps]))
+
+    def match(self, prompt) -> tuple[int, list[int]]:
+        """Longest cached prefix of whole pages, capped at len(prompt)-1 so
+        at least one suffix token always remains to produce prefill logits.
+        Returns (n_tokens_matched, pages)."""
+        self._tick += 1
+        pages: list[int] = []
+        parent = 0
+        for j in range((len(prompt) - 1) // self.page_size):
+            e = self.entries.get(self._key(parent, prompt, j))
+            if e is None:
+                break
+            e.tick = self._tick
+            pages.append(e.page)
+            parent = e.eid
+        return len(pages) * self.page_size, pages
+
+    def register(self, prompt, pages: list[int]) -> None:
+        """Register a freshly admitted prompt's full pages (``pages`` = the
+        slot's mapped pages in timeline order, shared prefix included)."""
+        self._tick += 1
+        parent = 0
+        for j in range(min(len(prompt) // self.page_size, len(pages))):
+            key = self._key(parent, prompt, j)
+            e = self.entries.get(key)
+            if e is None:
+                e = _PrefixEntry()
+                e.key, e.page, e.parent = key, pages[j], parent
+                e.eid = self._next_id
+                self._next_id += 1
+                e.children = 0
+                self.entries[key] = e
+                self._by_id[e.eid] = e
+                if parent:
+                    self._by_id[parent].children += 1
+                self.allocator.share([e.page])
+            e.tick = self._tick
+            parent = e.eid
+
+    def evict(self, n_free_needed: int) -> int:
+        """Drop LRU leaf entries (an inner entry is only evictable once its
+        children are gone) until the allocator has ``n_free_needed`` free
+        pages or nothing evictable remains. Returns entries evicted."""
+        evicted = 0
+        while self.allocator.n_free < n_free_needed:
+            leaves = [e for e in self.entries.values() if e.children == 0]
+            if not leaves:
+                break
+            e = min(leaves, key=lambda e: e.tick)
+            del self.entries[e.key]
+            del self._by_id[e.eid]
+            if e.parent:
+                self._by_id[e.parent].children -= 1
+            self.allocator.release([e.page])
+            evicted += 1
+        return evicted
 
 
 # ---------------------------------------------------------------------------
@@ -107,20 +273,87 @@ def _slot_axes(cfg: ModelConfig, model, max_len: int):
     return jax.tree.map(axis, big, one)
 
 
-def _make_slot_insert(axes) -> Callable:
+def _make_slot_insert(axes, keys=None) -> Callable:
     """jit-compiled splice of a batch-1 state into slot ``idx`` of the full
     state; one dynamic_update_slice_in_dim per leaf, index traced so every
-    slot shares one executable."""
+    slot shares one executable. ``keys`` restricts the splice to a subset of
+    (flat dict) state leaves — the paged engine splices only per-slot leaves
+    and routes pooled leaves through the page writer instead."""
+    if keys is None:
+        def insert(state, sub, idx):
+            return jax.tree.map(
+                lambda leaf, subleaf, ax: jax.lax.dynamic_update_slice_in_dim(
+                    leaf, subleaf.astype(leaf.dtype), idx, axis=ax
+                ),
+                state, sub, axes,
+            )
+    else:
+        keys = tuple(keys)
 
-    def insert(state, sub, idx):
-        return jax.tree.map(
-            lambda leaf, subleaf, ax: jax.lax.dynamic_update_slice_in_dim(
-                leaf, subleaf.astype(leaf.dtype), idx, axis=ax
-            ),
-            state, sub, axes,
-        )
+        def insert(state, sub, idx):
+            out = dict(state)
+            for k in keys:
+                out[k] = jax.lax.dynamic_update_slice_in_dim(
+                    state[k], sub[k].astype(state[k].dtype), idx, axis=axes[k]
+                )
+            return out
 
     return jax.jit(insert)
+
+
+def _make_page_writer(pool_keys) -> Callable:
+    """jit-compiled scatter of a batch-1 prefill's cache rows into mapped
+    pages: sub leaf (L, 1, S, ...) -> pool pages ``page_ids`` (n,). Rows are
+    zero-padded / truncated to n*page_size — trailing garbage rows inside a
+    reserved page are invisible behind the per-slot pos mask and overwritten
+    token-by-token as decode proceeds. Retraces per (n, S) combination, both
+    bucketed, so the executable count stays O(log S_max)."""
+    pool_keys = tuple(pool_keys)
+
+    def write(state, sub, page_ids):
+        n = page_ids.shape[0]
+        out = dict(state)
+        for k in pool_keys:
+            pool = state[k]
+            ps = pool.shape[2]
+            rows = sub[k][:, 0]  # (L, S, ...)
+            need = n * ps
+            if rows.shape[1] < need:
+                pad = [(0, 0)] * rows.ndim
+                pad[1] = (0, need - rows.shape[1])
+                rows = jnp.pad(rows, pad)
+            else:
+                rows = rows[:, :need]
+            rows = rows.reshape(rows.shape[0], n, ps, *rows.shape[2:])
+            out[k] = pool.at[:, page_ids].set(rows.astype(pool.dtype))
+        return out
+
+    return jax.jit(write)
+
+
+def _make_prefix_gather(pool_keys) -> Callable:
+    """jit-compiled gather of shared prefix pages into the dense (L, 1, m,
+    ...) context the family prefill's ``prefix`` kwarg consumes."""
+    pool_keys = tuple(pool_keys)
+
+    def gather(state, ids):
+        out = {}
+        for k in pool_keys:
+            pool = state[k]
+            pages = pool[:, ids]  # (L, m_pages, ps, ...)
+            out[k] = pages.reshape(
+                pool.shape[0], 1, ids.shape[0] * pool.shape[2], *pool.shape[3:]
+            )
+        return out
+
+    return jax.jit(gather)
+
+
+# families whose decode state is FULLY page-addressable (caches + pos only),
+# so a prompt prefix maps onto shared pages with no residual per-slot state.
+# vlm is excluded (patch frontends make token-hashed prefixes unsound),
+# encdec has per-request encoder K/V, recurrent families carry O(1) state.
+_PREFIX_FAMILIES = ("dense", "moe", "mla_moe")
 
 
 # ---------------------------------------------------------------------------
@@ -133,11 +366,25 @@ class ContinuousBatchingEngine:
     timelines, per-slot admission/eviction, per-request sampling, lock-step
     decode (the TPU-efficient layout), and throughput accounting.
 
-    Note: prefill jit-specializes on prompt length — callers serving wildly
-    varied prompt lengths should bucket/pad prompts upstream.
+    ``paged=True`` switches the decode state to the paged layout (global page
+    pool + per-slot block tables): cache memory is proportional to pages in
+    use instead of slots x max_len, admission gates on free pages, and shared
+    prompt prefixes are served from the prefix cache without re-prefilling.
+    ``paged=False`` (default) keeps the dense per-slot layout — the A/B lane
+    and correctness oracle for the paging invariant tests.
+
+    Prompts are padded to power-of-two buckets by default
+    (``bucket_prompts``), so prefill compiles O(log max_len) executables
+    instead of one per distinct prompt length; ``compile_stats()`` reports
+    the inventory.
     """
 
-    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4, max_len: int = 128):
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4, max_len: int = 128,
+                 paged: bool = False, page_size: int = 16, n_pages: Optional[int] = None,
+                 prefix_caching: bool = True, bucket_prompts: bool = True,
+                 on_truncation: str = "warn"):
+        if on_truncation not in ("warn", "reject"):
+            raise ValueError(f"on_truncation must be 'warn' or 'reject', got {on_truncation!r}")
         self.cfg = cfg
         self.model = get_model(cfg)
         # serving default: pre-merge sibling quantized packs (q/k/v, gate/up,
@@ -152,19 +399,58 @@ class ContinuousBatchingEngine:
         self.params = fuse_params(params) if fusion_enabled() else params
         self.batch = batch_slots
         self.max_len = max_len
-        self.state = self.model.init_decode_state(cfg, batch_slots, max_len)
+        self.paged = paged
+        self.bucket_prompts = bucket_prompts
+        self.on_truncation = on_truncation
+        # frontend row inflation: vlm prefill prepends n_patches rows to the
+        # decoder cache, so capacity/page math must count them with the prompt
+        self._extra_rows = cfg.n_patches if cfg.family == "vlm" else 0
+        # structural leaf classification (slot axis / optional seq axis)
+        self._layout = C.paged_layout(self.model.init_decode_state, cfg, max_len)
+        self._pool_keys = tuple(k for k, (_, seq) in self._layout.items() if seq is not None)
+        axes = _slot_axes(cfg, self.model, max_len)
+
+        if paged and self._pool_keys:
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            self.page_size = page_size
+            self._max_pages = -(-max_len // page_size)
+            self.n_pages = n_pages if n_pages is not None else batch_slots * self._max_pages
+            self.state = C.init_paged_state(
+                self.model.init_decode_state, cfg, batch_slots, max_len, page_size, self.n_pages
+            )
+            self.allocator: Optional[PageAllocator] = PageAllocator(self.n_pages)
+            self.prefix_cache: Optional[PrefixCache] = (
+                PrefixCache(self.allocator, page_size)
+                if prefix_caching and cfg.family in _PREFIX_FAMILIES else None
+            )
+            self._bt = np.full((batch_slots, self._max_pages), -1, np.int32)
+            slot_keys = tuple(k for k in self._layout if k not in self._pool_keys)
+            self._insert = _make_slot_insert(axes, keys=slot_keys)
+            self._page_write = _make_page_writer(self._pool_keys)
+            self._prefix_gather = _make_prefix_gather(self._pool_keys)
+        else:
+            # dense per-slot layout — also the degenerate "paged" layout for
+            # purely recurrent families, whose state has nothing to page
+            self.page_size = 0
+            self.n_pages = 0
+            self.state = self.model.init_decode_state(cfg, batch_slots, max_len)
+            self.allocator = None
+            self.prefix_cache = None
+            self._insert = _make_slot_insert(axes)
         # constant zero batch-1 state, built once: the splice source for every
         # admission (prefill never donates/mutates its inputs)
         self._sub_template = self.model.init_decode_state(cfg, 1, max_len)
         self.slots: list[Optional[Request]] = [None] * batch_slots
         self.queue: deque[Request] = deque()
-        self._insert = _make_slot_insert(_slot_axes(cfg, self.model, max_len))
         self._decode = jax.jit(make_decode_step(cfg))
         self._prefill = jax.jit(make_prefill_step(cfg))
+        self._prefill_traces: dict[tuple, int] = {}
         self.stats = {
             "prefill_tokens": 0, "prefill_s": 0.0,
             "decode_tokens": 0, "decode_steps": 0, "decode_s": 0.0,
-            "requests_done": 0,
+            "requests_done": 0, "requests_truncated": 0,
+            "prefix_lookups": 0, "prefix_hits": 0, "prefix_hit_tokens": 0,
         }
         # dispatch-counter baseline: routing() reports the delta, i.e. the
         # kernel routes this engine's traces took (quantized params only)
@@ -175,45 +461,142 @@ class ContinuousBatchingEngine:
     # -- admission ----------------------------------------------------------
 
     def submit(self, req: Request) -> bool:
-        """Enqueue a request; admit immediately if a slot is free. Returns
-        True when the request went straight into a slot. Invalid requests
-        are rejected HERE, before touching queue or slot state, so one bad
-        request can never strand a batch mid-generation. Re-submitting a
-        request that is already queued or live is a no-op."""
+        """Enqueue a request; admit immediately if a slot (and, when paged,
+        enough pages) is free. Returns True when the request went straight
+        into a slot. Invalid requests are rejected HERE, before touching
+        queue or slot state, so one bad request can never strand a batch
+        mid-generation. Re-submitting a request that is already queued or
+        live is a no-op."""
         if req.done:  # already served (e.g. admitted+finished inside one step)
             return True
-        prompt = jnp.asarray(req.prompt)
+        prompt = np.asarray(req.prompt)
         if prompt.ndim != 1:
             raise ValueError(f"prompt must be 1-D (S,), got shape {prompt.shape}")
         n = int(prompt.shape[0])
-        if not 1 <= n < self.max_len:
+        rows = n + self._extra_rows  # cache rows the prompt occupies
+        if not 1 <= rows < self.max_len:
             raise ValueError(
-                f"prompt length {n} must be in [1, max_len={self.max_len})"
+                f"prompt length {n} (+{self._extra_rows} frontend rows) must "
+                f"leave room in max_len={self.max_len}"
             )
+        if rows + req.max_new > self.max_len:
+            msg = (f"request will truncate: prompt rows {rows} + max_new {req.max_new} "
+                   f"> max_len {self.max_len} (the slot runs out of cache rows "
+                   f"after {self.max_len - rows} new tokens)")
+            if self.on_truncation == "reject":
+                raise ValueError(msg)
+            warnings.warn(msg, stacklevel=2)
+        if self.allocator is not None:
+            worst = -(-min(rows + req.max_new, self.max_len) // self.page_size)
+            if worst > self.n_pages:
+                raise ValueError(
+                    f"request needs up to {worst} pages but the pool only has "
+                    f"{self.n_pages}; it could never be admitted"
+                )
         if any(s is req for s in self.slots) or any(q is req for q in self.queue):
             return any(s is req for s in self.slots)
         self.queue.append(req)
         self._admit()
         return any(s is req for s in self.slots)
 
+    @staticmethod
+    def _bucket(n: int, cap: int) -> int:
+        """Power-of-two prompt bucket (min 8), capped at the cache capacity."""
+        return max(n, min(1 << max(3, (n - 1).bit_length()), cap))
+
+    def _run_prefill(self, req: Request, tokens: np.ndarray, off: int = 0,
+                     shared_pages: Optional[list[int]] = None):
+        """One batched prefill of ``tokens`` (the prompt, or the suffix after
+        ``off`` prefix-cached tokens), bucket-padded. Returns (last_logits
+        np (V,), sub_state, bucket_len)."""
+        s_real = len(tokens)
+        cap = self.max_len - off - self._extra_rows
+        bucket = self._bucket(s_real, cap) if self.bucket_prompts else s_real
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :s_real] = tokens
+        kwargs = dict(req.frontend)
+        if bucket != s_real or off or self.bucket_prompts:
+            kwargs["length"] = jnp.full((1,), s_real, jnp.int32)
+        if off:
+            kwargs["prefix"] = self._prefix_gather(
+                {k: self.state[k] for k in self._pool_keys},
+                jnp.asarray(shared_pages, jnp.int32),
+            )
+        key = (bucket, off, tuple(sorted(req.frontend)))
+        self._prefill_traces[key] = self._prefill_traces.get(key, 0) + 1
+        t0 = time.monotonic()
+        logits, sub = self._prefill(self.params, jnp.asarray(toks), self._sub_template, **kwargs)
+        last = np.asarray(logits[0, -1].astype(jnp.float32))  # sync point
+        self.stats["prefill_s"] += time.monotonic() - t0
+        self.stats["prefill_tokens"] += s_real
+        return last, sub, bucket
+
     def _admit(self) -> None:
-        for i in range(self.batch):
-            if not self.queue:
+        while self.queue:
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            if not free:
                 return
-            if self.slots[i] is not None:
-                continue
-            req = self.queue.popleft()
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            sub = self._sub_template  # fresh-state splice source (read-only)
-            t0 = time.monotonic()
-            logits, sub = self._prefill(self.params, prompt, sub, **req.frontend)
+            if not self._admit_one(self.queue[0], free[0]):
+                return  # page-gated: the head request waits for evictions
+            self.queue.popleft()
+
+    def _admit_one(self, req: Request, i: int) -> bool:
+        if self.allocator is None:
+            last, sub, _ = self._run_prefill(req, np.asarray(req.prompt, np.int32))
             self.state = self._insert(self.state, sub, i)
-            last = np.asarray(logits[0, -1].astype(jnp.float32))  # sync point
-            self.stats["prefill_s"] += time.monotonic() - t0
-            self.stats["prefill_tokens"] += int(prompt.shape[1])
-            req._last_logits = last
-            req._rng = np.random.default_rng(req.sampling.seed)
-            self.slots[i] = req
+        else:
+            prompt = np.asarray(req.prompt, np.int32)
+            n = len(prompt)
+            # reserve the request's full timeline up front (prompt rows incl.
+            # frontend inflation + max_new) so decode never needs a mid-flight
+            # allocation (no preemption path)
+            need = min(n + self._extra_rows + req.max_new, self.max_len)
+            n_res = -(-need // self.page_size)
+            m_tok, shared = 0, []
+            if self.prefix_cache is not None and not req.frontend:
+                self.stats["prefix_lookups"] += 1
+                m_tok, shared = self.prefix_cache.match(prompt)
+                if shared:
+                    # bucket the prefix to a power-of-two page count: the
+                    # suffix-prefill executable is shaped by the prefix
+                    # length, so raw offsets would compile one trace per
+                    # distinct matched length — this keeps the inventory
+                    # O(log max_pages), like prompt bucketing itself
+                    keep = 1 << (len(shared).bit_length() - 1)
+                    shared = shared[:keep]
+                    m_tok = keep * self.page_size
+            # take our reference on the shared pages BEFORE any eviction:
+            # cache eviction under pressure may drop the matched entries, and
+            # an unreferenced match could be recycled out from under us
+            self.allocator.share(shared)
+            n_own = n_res - len(shared)
+            pages = self.allocator.alloc(n_own)
+            if pages is None and self.prefix_cache is not None:
+                self.prefix_cache.evict(n_own)
+                pages = self.allocator.alloc(n_own)
+            if pages is None:
+                self.allocator.release(shared)
+                return False  # admission gated on free pages
+            if m_tok:
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_hit_tokens"] += m_tok
+            last, sub, bucket = self._run_prefill(req, prompt[m_tok:], off=m_tok,
+                                                  shared_pages=shared)
+            self.state = self._insert(self.state, sub, i)
+            n_write = min(-(-(bucket + self._extra_rows) // self.page_size), len(pages))
+            self.state = self._page_write(
+                self.state, sub, jnp.asarray(pages[:n_write], jnp.int32)
+            )
+            row = shared + pages
+            self._bt[i, :] = -1
+            self._bt[i, : len(row)] = row
+            self.state["bt"] = jnp.asarray(self._bt)
+            if self.prefix_cache is not None and not req.frontend:
+                self.prefix_cache.register(prompt, row)
+        req._last_logits = last
+        req._rng = np.random.default_rng(req.sampling.seed)
+        self.slots[i] = req
+        return True
 
     # -- sampling -----------------------------------------------------------
 
@@ -231,6 +614,21 @@ class ContinuousBatchingEngine:
         return int(req._rng.choice(p.shape[0], p=p))
 
     # -- decode -------------------------------------------------------------
+
+    def _evict(self, i: int, req: Request, truncated: bool) -> None:
+        req.done = True
+        req.truncated = truncated
+        self.slots[i] = None
+        self.stats["requests_done"] += 1
+        if truncated:
+            self.stats["requests_truncated"] += 1
+        if self.allocator is not None:
+            self.allocator.release([int(p) for p in self._bt[i] if p >= 0])
+            self._bt[i, :] = -1
+            self.state["bt"] = jnp.asarray(self._bt)
+            # neutralize the freed slot: pos 0 + unmapped block table means
+            # its lock-step garbage decode attends nothing and writes nowhere
+            self.state["pos"] = self.state["pos"].at[i].set(0)
 
     def step(self) -> int:
         """Admit queued work, sample one token per active slot, then one
@@ -251,10 +649,10 @@ class ContinuousBatchingEngine:
             # a request whose quota is now filled (or whose token has no cache
             # row left) is evicted BEFORE the decode — its final logits would
             # be discarded anyway
-            if len(req.out) >= req.max_new or int(pos[i]) >= self.max_len:
-                req.done = True
-                self.slots[i] = None
-                self.stats["requests_done"] += 1
+            if len(req.out) >= req.max_new:
+                self._evict(i, req, truncated=False)
+            elif int(pos[i]) >= self.max_len:
+                self._evict(i, req, truncated=True)
             else:
                 live.append(i)
         if live:
@@ -277,7 +675,8 @@ class ContinuousBatchingEngine:
                 return
 
     def serve(self, requests: list[Request], max_steps: int = 100_000) -> list[Request]:
-        """Submit all requests and drive the loop to completion."""
+        """Submit all requests and drive the loop to completion. Results ride
+        on the Request objects (``out``, ``done``, ``truncated``)."""
         for r in requests:
             self.submit(r)
         self.run_until_done(max_steps)
@@ -288,8 +687,83 @@ class ContinuousBatchingEngine:
 
         The dispatch-routing baseline is NOT reset: routing decisions happen
         at trace time, so a warm executable would otherwise report an empty
-        route table."""
+        route table. The prefill-trace inventory (compile_stats) persists for
+        the same reason."""
         self.stats = {k: type(v)() for k, v in self.stats.items()}
+        if self.allocator is not None:
+            self.allocator.peak_used = self.allocator.n_used
+
+    # -- introspection ------------------------------------------------------
+
+    def compile_stats(self) -> dict:
+        """Prefill executable inventory: with prompt bucketing every distinct
+        (bucket, prefix-offset, frontend) triple is one trace, so the count
+        stays O(log max_len) under arbitrary prompt-length traffic."""
+        return {
+            "prefill_traces": len(self._prefill_traces),
+            "prefill_calls": sum(self._prefill_traces.values()),
+            "prefill_buckets": sorted({k[0] for k in self._prefill_traces}),
+            "decode_traces": 1 if self.stats["decode_steps"] else 0,
+        }
+
+    def memory(self) -> dict:
+        """Cache-memory accounting: the paged pool's bytes and peak pages in
+        use vs the dense per-slot footprint the same (batch, max_len) engine
+        would allocate — the capacity headroom paging buys."""
+        dense_shapes = jax.eval_shape(
+            lambda: self.model.init_decode_state(self.cfg, self.batch, self.max_len)
+        )
+        dense_bytes = sum(
+            int(np.prod(dense_shapes[k].shape)) * dense_shapes[k].dtype.itemsize
+            for k in self._pool_keys
+        )
+        out = {
+            "mode": "paged" if self.allocator is not None else "dense",
+            "dense_cache_bytes": dense_bytes,
+        }
+        if self.allocator is None:
+            out["cache_bytes"] = dense_bytes
+            out["peak_cache_bytes"] = dense_bytes
+            return out
+        page_bytes = 0
+        for k in self._pool_keys:
+            pool = self.state[k]
+            page_bytes += int(np.prod(pool.shape[:1] + pool.shape[2:])) * pool.dtype.itemsize
+        out.update(
+            page_size=self.page_size,
+            n_pages=self.n_pages,
+            page_bytes=page_bytes,
+            cache_bytes=page_bytes * self.n_pages,
+            pages_in_use=self.allocator.n_used,
+            pages_peak=self.allocator.peak_used,
+            peak_cache_bytes=page_bytes * self.allocator.peak_used,
+            prefix_entries=0 if self.prefix_cache is None else len(self.prefix_cache),
+        )
+        return out
+
+    def check_page_invariants(self) -> None:
+        """Debug/test hook: allocator audit plus exact refcount accounting —
+        every pool page's refcount equals the number of slot block-tables
+        mapping it plus its prefix-cache registrations, no slot maps a page
+        twice, and free/used pages partition the pool."""
+        if self.allocator is None:
+            return
+        self.allocator.audit()
+        refs = np.zeros(self.n_pages, np.int32)
+        for i in range(self.batch):
+            row = [int(p) for p in self._bt[i] if p >= 0]
+            assert len(set(row)) == len(row), f"slot {i} maps a page twice: {row}"
+            assert self.slots[i] is not None or not row, \
+                f"empty slot {i} still maps pages {row}"
+            for p in row:
+                refs[p] += 1
+        if self.prefix_cache is not None:
+            for e in self.prefix_cache.entries.values():
+                refs[e.page] += 1
+        assert np.array_equal(refs, self.allocator.ref), (
+            f"refcount drift: mapped+cached {refs.tolist()} "
+            f"vs allocator {self.allocator.ref.tolist()}"
+        )
 
     def routing(self) -> dict:
         """Kernel routes taken by this engine's traces: {kind/path: count}.

@@ -445,6 +445,175 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
     }
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache (DESIGN.md §14)
+#
+# The dense decode state keeps one (..., B, S_max, ...) cache per slot, so
+# memory scales with slots x worst-case length. The paged layout replaces
+# every sequence-carrying leaf with a global page pool
+# (..., n_pages, page_size, ...) shared by all slots, plus one per-slot block
+# table ``bt (B, max_pages)`` of page indices (-1 = unmapped). Decode gathers
+# a slot's pages through its block-table row and scatters the new token into
+# the slot's tail page; the host-side allocator in launch/serve.py owns the
+# free list / refcounts. Which leaves become pools is decided STRUCTURALLY
+# (paged_layout): a leaf whose shape changes with max_len carries the
+# sequence axis and gets paged; everything else (recurrent SSM/xLSTM states,
+# encoder K/V, pos) stays per-slot, exactly like the engine's slot-axis
+# inference.
+# ---------------------------------------------------------------------------
+
+
+def paged_layout(init_fn, cfg: ModelConfig, max_len: int) -> dict:
+    """Classify decode-state leaves: key -> (slot_axis, seq_axis | None).
+
+    The slot axis comes from a batch-2 vs batch-1 ``eval_shape`` diff, the
+    sequence axis from a max_len vs 2*max_len diff. Page pools require the
+    canonical (..., B, S, ...) layout (seq axis right after the slot axis) —
+    every family in the registry satisfies it, and a violation fails loudly
+    here rather than corrupting pages later.
+    """
+    s2 = jax.eval_shape(lambda: init_fn(cfg, 2, max_len))
+    s1 = jax.eval_shape(lambda: init_fn(cfg, 1, max_len))
+    sl = jax.eval_shape(lambda: init_fn(cfg, 1, 2 * max_len))
+    if not isinstance(s1, dict):
+        raise TypeError("paged serving requires a flat dict decode state")
+    out = {}
+    for key in s1:
+        slot = [i for i, (a, b) in enumerate(zip(s2[key].shape, s1[key].shape)) if a != b]
+        seq = [i for i, (a, b) in enumerate(zip(s1[key].shape, sl[key].shape)) if a != b]
+        if len(slot) != 1 or len(seq) > 1:
+            raise ValueError(f"cannot classify state leaf {key!r}: "
+                             f"{s2[key].shape} vs {s1[key].shape} vs {sl[key].shape}")
+        # the paged runtime hard-codes (lead, B, S, ...) for pools: slot axis
+        # 1, seq axis 2 (page writer / token scatter index the pool at axis 1)
+        if seq and (slot[0] != 1 or seq[0] != 2):
+            raise ValueError(f"page pools need (lead, B, S, ...) layout, got "
+                             f"{key!r} with slot axis {slot[0]}, seq axis {seq[0]}")
+        out[key] = (slot[0], seq[0] if seq else None)
+    return out
+
+
+def init_paged_state(init_fn, cfg: ModelConfig, batch: int, max_len: int,
+                     page_size: int, n_pages: int) -> dict:
+    """Paged decode state: sequence-carrying leaves become global page pools
+    (lead, n_pages, page_size, trail); per-slot leaves are kept verbatim; a
+    block table ``bt (B, ceil(max_len/page_size))`` maps slot timelines to
+    pages. Families with no sequence leaves (pure recurrent state) get their
+    dense state back unchanged — there is nothing to page."""
+    layout = paged_layout(init_fn, cfg, max_len)
+    st = dict(init_fn(cfg, batch, max_len))
+    pooled = False
+    for key, (slot, seq) in layout.items():
+        if seq is None:
+            continue
+        sh = st[key].shape
+        st[key] = jnp.zeros(sh[:slot] + (n_pages, page_size) + sh[seq + 1:], st[key].dtype)
+        pooled = True
+    if pooled:
+        max_pages = -(-max_len // page_size)
+        st["bt"] = jnp.full((batch, max_pages), -1, jnp.int32)
+    return st
+
+
+def gather_pages(pool_l: jax.Array, bt: jax.Array) -> jax.Array:
+    """One layer's pool (P, page, ...) + block table (B, maxp) -> the dense
+    per-slot view (B, maxp*page, ...). Unmapped (-1) entries read page 0;
+    callers mask those rows with the per-slot ``pos`` prefix mask, exactly as
+    the dense path masks rows >= pos."""
+    b, maxp = bt.shape
+    pages = pool_l[jnp.maximum(bt, 0)]  # (B, maxp, page, ...)
+    return pages.reshape(b, maxp * pool_l.shape[1], *pool_l.shape[2:])
+
+
+def scatter_token_pages(pool: jax.Array, t: jax.Array, bt: jax.Array,
+                        pos: jax.Array) -> jax.Array:
+    """Scatter each slot's one-token line into its tail page.
+
+    pool (lead, P, page, ...), t (lead, B, 1, ...), bt (B, maxp), pos (B,).
+    The target is page ``bt[b, pos_b // page]`` row ``pos_b % page``; slots
+    whose target is unmapped (bt -1, e.g. an evicted slot decoding garbage in
+    lock-step) or past the block table are dropped, mirroring the dense
+    path's drop-not-clamp rule. The invalid sentinel is ``n_pages`` (one past
+    the pool), NOT -1: negative indices are canonicalized NumPy-style before
+    ``mode="drop"`` applies, so -1 would silently wrap into the LAST page and
+    corrupt whichever slot owns it."""
+    page = pool.shape[2]
+    n_pages = pool.shape[1]
+    b, maxp = bt.shape
+    pi = pos // page
+    page_id = bt[jnp.arange(b), jnp.minimum(pi, maxp - 1)]
+    page_id = jnp.where((pi < maxp) & (page_id >= 0), page_id, n_pages)
+    return pool.at[:, page_id, pos % page].set(t[:, :, 0].astype(pool.dtype), mode="drop")
+
+
+def select_at_length(x: jax.Array, length) -> jax.Array:
+    """Last REAL position of each row: x (B, S, D), length (B,) or scalar ->
+    (B, 1, D). ``length=None`` means the whole row is real (no padding)."""
+    if length is None:
+        return x[:, -1:]
+    idx = jnp.clip(jnp.asarray(length, jnp.int32).reshape(-1) - 1, 0, x.shape[1] - 1)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)
+
+
+def prefill_pos(length, batch: int, s: int) -> jax.Array:
+    """Per-slot position vector after a prefill of s (possibly padded) tokens
+    of which ``length`` are real."""
+    if length is None:
+        return jnp.full((batch,), s, jnp.int32)
+    return jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1), (batch,))
+
+
+def gate_state_update(new_state: dict, old_state: dict, valid: jax.Array,
+                      b_axis: dict) -> dict:
+    """Keep each slot's state update only where ``valid`` (B,) is True —
+    bucketed prefill gates recurrent-state updates off for pad steps.
+
+    ``b_axis`` maps each state key to its slot (batch) axis as a NEGATIVE
+    offset from the trailing dims, which is uniform across a family's
+    stacked-layout variants (e.g. mamba_hybrid's n_seg/rest groupings)."""
+    out = {}
+    for key, new in new_state.items():
+        ax = b_axis[key] % new.ndim
+        shape = [1] * new.ndim
+        shape[ax] = valid.shape[0]
+        out[key] = jnp.where(valid.reshape(shape), new, old_state[key])
+    return out
+
+
+def prefix_attn_mask(s: int, off: int) -> jax.Array:
+    """(1, s, off+s) mask for suffix prefill over a cached prefix: every
+    suffix query sees the whole prefix plus the causal part of the suffix."""
+    return jnp.concatenate(
+        [jnp.ones((1, s, off), bool), jnp.tril(jnp.ones((s, s), bool))[None]], axis=-1
+    )
+
+
+def gqa_prefill_attn(p: dict, h: jax.Array, cfg: ModelConfig, positions: jax.Array,
+                     prefix_kv=None, mask=None):
+    """One layer's prefill attention (fused q/k/v projection + RoPE), causal
+    or — given ``prefix_kv`` = (pk (B, m, KV, hd), pv) from cached pages plus
+    the matching ``prefix_attn_mask`` — over [prefix; causal suffix].
+    Returns (attn_out, k, v); shared by the dense-style families' prefill
+    bodies so the prefix-cache suffix path exists exactly once."""
+    b, s, _ = h.shape
+    hh, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = linear_group(p, ("q", "k", "v"), "qkv", h)
+    q = q.reshape(b, s, hh, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    tables = rope_tables(positions, hd, cfg.rope_fraction, cfg.rope_theta)
+    q = apply_rope(q, tables)
+    k = apply_rope(k, tables)
+    if prefix_kv is None:
+        att = sdpa_causal(q, k, v)
+    else:
+        pk, pv = prefix_kv
+        kf = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        vf = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+        att = _sdpa(q, kf, vf, mask)
+    return linear(p["o"], att.reshape(b, s, hh * hd)), k, v
+
+
 def slot_positions(pos: jax.Array, b: int, sq: int = 1) -> jax.Array:
     """Per-slot decode positions (B, sq) from a per-slot ``pos`` vector (B,).
 

@@ -14,6 +14,7 @@ from repro.configs import ModelConfig
 from repro.models import common as C
 from repro.models.mla import (
     mla_decode,
+    mla_decode_paged,
     mla_init,
     mla_init_cache,
     mla_prefill_layer,
@@ -139,26 +140,43 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=C.DTYPE)
     return mla_init_cache(cfg, batch, max_len, cfg.n_layers, dtype)
 
 
-def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict):
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict,
+            length=None, prefix=None):
+    """Prompt prefill. ``length`` marks the real prompt length when tokens
+    are bucket-padded; ``prefix`` = {"ckv": (L, B, m, kvr), "krope": ...} is
+    a cached latent prefix (shared pages) — tokens then hold the suffix only
+    and the expanded attention runs over [expanded prefix; causal suffix]."""
     x = C.embed_lookup(params["embed"], tokens)
     b, s, _ = x.shape
+    nd = cfg.first_k_dense
 
-    def dbody(x, lp):
+    def dbody(x, lp_ctx):
+        lp = lp_ctx if prefix is None else lp_ctx[0]
+        pre = None if prefix is None else lp_ctx[1:]
         h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
-        att, ckv, krope = mla_prefill_layer(lp["attn"], h, cfg)
+        att, ckv, krope = mla_prefill_layer(lp["attn"], h, cfg, prefix=pre)
         x = x + att
         x = x + C.mlp_apply(lp["mlp"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps))
         return x, (ckv, krope)
 
-    def mbody(x, lp):
+    def mbody(x, lp_ctx):
+        lp = lp_ctx if prefix is None else lp_ctx[0]
+        pre = None if prefix is None else lp_ctx[1:]
         h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
-        att, ckv, krope = mla_prefill_layer(lp["attn"], h, cfg)
+        att, ckv, krope = mla_prefill_layer(lp["attn"], h, cfg, prefix=pre)
         x = x + att
         m, _ = moe_ffn(lp["moe"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg)
         return x + m, (ckv, krope)
 
-    x, (ckv_d, kr_d) = jax.lax.scan(dbody, x, params["dense_layers"])
-    x, (ckv_m, kr_m) = jax.lax.scan(mbody, x, params["moe_layers"])
+    if prefix is None:
+        off = 0
+        dxs, mxs = params["dense_layers"], params["moe_layers"]
+    else:
+        off = prefix["ckv"].shape[2]
+        dxs = (params["dense_layers"], prefix["ckv"][:nd], prefix["krope"][:nd])
+        mxs = (params["moe_layers"], prefix["ckv"][nd:], prefix["krope"][nd:])
+    x, (ckv_d, kr_d) = jax.lax.scan(dbody, x, dxs)
+    x, (ckv_m, kr_m) = jax.lax.scan(mbody, x, mxs)
     ckv = jnp.concatenate([ckv_d, ckv_m], axis=0)
     krope = jnp.concatenate([kr_d, kr_m], axis=0)
     state = {
@@ -168,31 +186,38 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict):
         "krope": jax.lax.dynamic_update_slice(
             state["krope"], krope.astype(state["krope"].dtype), (0, 0, 0, 0)
         ),
-        "pos": jnp.full((b,), s, jnp.int32),
+        "pos": off + C.prefill_pos(length, b, s),
     }
-    return _unembed(params, cfg, x[:, -1:]), state
+    return _unembed(params, cfg, C.select_at_length(x, length)), state
 
 
 def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
     x = C.embed_lookup(params["embed"], tokens)
     pos = C.slot_positions(state["pos"], tokens.shape[0])[:, 0]
     nd = cfg.first_k_dense
+    paged = "bt" in state
+
+    def attend(lp, x, ckv, krope):
+        h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        if paged:
+            att, ckv_t, krope_t = mla_decode_paged(
+                lp["attn"], h, cfg, ckv, krope, state["bt"], pos
+            )
+            return x + att, (ckv_t, krope_t)
+        att, ckv, krope = mla_decode(lp["attn"], h, cfg, ckv, krope, pos)
+        return x + att, (ckv, krope)
 
     def dbody(x, lp_cache):
         lp, ckv, krope = lp_cache
-        h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
-        att, ckv, krope = mla_decode(lp["attn"], h, cfg, ckv, krope, pos)
-        x = x + att
+        x, carry = attend(lp, x, ckv, krope)
         x = x + C.mlp_apply(lp["mlp"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps))
-        return x, (ckv, krope)
+        return x, carry
 
     def mbody(x, lp_cache):
         lp, ckv, krope = lp_cache
-        h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
-        att, ckv, krope = mla_decode(lp["attn"], h, cfg, ckv, krope, pos)
-        x = x + att
+        x, carry = attend(lp, x, ckv, krope)
         m, _ = moe_ffn(lp["moe"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg)
-        return x + m, (ckv, krope)
+        return x + m, carry
 
     x, (ckv_d, kr_d) = jax.lax.scan(
         dbody, x, (params["dense_layers"], state["ckv"][:nd], state["krope"][:nd])
@@ -200,11 +225,23 @@ def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
     x, (ckv_m, kr_m) = jax.lax.scan(
         mbody, x, (params["moe_layers"], state["ckv"][nd:], state["krope"][nd:])
     )
-    new_state = {
-        "ckv": jnp.concatenate([ckv_d, ckv_m], axis=0),
-        "krope": jnp.concatenate([kr_d, kr_m], axis=0),
-        "pos": pos + 1,
-    }
+    if paged:
+        # scanned outputs are the one-token latent lines (L, B, 1, r):
+        # one pool scatter each after the layer scans
+        ckv_t = jnp.concatenate([ckv_d, ckv_m], axis=0)
+        krope_t = jnp.concatenate([kr_d, kr_m], axis=0)
+        new_state = {
+            **state,
+            "ckv": C.scatter_token_pages(state["ckv"], ckv_t, state["bt"], pos),
+            "krope": C.scatter_token_pages(state["krope"], krope_t, state["bt"], pos),
+            "pos": pos + 1,
+        }
+    else:
+        new_state = {
+            "ckv": jnp.concatenate([ckv_d, ckv_m], axis=0),
+            "krope": jnp.concatenate([kr_d, kr_m], axis=0),
+            "pos": pos + 1,
+        }
     return _unembed(params, cfg, x), new_state
 
 

@@ -128,35 +128,48 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=C.DTYPE)
 
 
 def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict,
-            patches=None):
-    """Run the prompt, filling the cache. Returns (last_logits, state)."""
+            patches=None, length=None, prefix=None):
+    """Run the prompt, filling the cache. Returns (last_logits, state).
+
+    ``length`` (B,) marks the real prompt length when ``tokens`` is padded to
+    a bucket (launch/serve.py's prompt bucketing): attention is causal so pad
+    tokens at the tail cannot perturb real positions, and the returned logits
+    / ``pos`` come from position ``length-1`` instead of the pad tail.
+
+    ``prefix`` = {"k": (L, B, m, KV, hd), "v": ...} is an already-cached
+    (post-RoPE) prompt prefix (the engine's prefix cache, gathered from shared
+    pages): ``tokens`` then holds only the SUFFIX, every suffix query attends
+    [prefix; causal suffix], positions are offset by m, and the returned
+    cache rows contain the suffix only (the engine maps the shared pages)."""
     x = _embed(params, cfg, tokens, patches)
     b, s, _ = x.shape
-    positions = jnp.arange(s)[None, :] * jnp.ones((b, 1), jnp.int32)
+    off = 0 if prefix is None else prefix["k"].shape[2]
+    positions = (off + jnp.arange(s))[None, :] * jnp.ones((b, 1), jnp.int32)
+    mask = None if prefix is None else C.prefix_attn_mask(s, off)
 
-    def body(x, lp):
+    def body(x, lp_ctx):
+        lp = lp_ctx if prefix is None else lp_ctx[0]
         h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
-        bb, ss, _ = h.shape
-        hh, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-        q, k, v = C.linear_group(lp["attn"], ("q", "k", "v"), "qkv", h)
-        q = q.reshape(bb, ss, hh, hd)
-        k = k.reshape(bb, ss, kvh, hd)
-        v = v.reshape(bb, ss, kvh, hd)
-        tables = C.rope_tables(positions, hd, cfg.rope_fraction, cfg.rope_theta)
-        q = C.apply_rope(q, tables)
-        k = C.apply_rope(k, tables)
-        att = C.sdpa_causal(q, k, v)
-        x = x + C.linear(lp["attn"]["o"], att.reshape(bb, ss, hh * hd))
+        att, k, v = C.gqa_prefill_attn(
+            lp["attn"], h, cfg, positions,
+            prefix_kv=None if prefix is None else lp_ctx[1:], mask=mask,
+        )
+        x = x + att
         x = x + C.mlp_apply(lp["mlp"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps))
         return x, (k, v)
 
-    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    xs = params["layers"] if prefix is None else (params["layers"], prefix["k"], prefix["v"])
+    x, (ks, vs) = jax.lax.scan(body, x, xs)
+    # VLM: the patch tokens prepended to the sequence are all real
+    eff = None if length is None else (
+        jnp.asarray(length, jnp.int32).reshape(-1) + (s - tokens.shape[1])
+    )
     state = {
         "k": jax.lax.dynamic_update_slice(state["k"], ks.astype(state["k"].dtype), (0, 0, 0, 0, 0)),
         "v": jax.lax.dynamic_update_slice(state["v"], vs.astype(state["v"].dtype), (0, 0, 0, 0, 0)),
-        "pos": jnp.full((b,), s, jnp.int32),
+        "pos": off + C.prefill_pos(eff, b, s),
     }
-    return _unembed(params, cfg, x[:, -1:]), state
+    return _unembed(params, cfg, C.select_at_length(x, eff)), state
 
 
 def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
@@ -171,9 +184,13 @@ def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
     O(L·B·S·KV·hd) (§Perf cell C iteration 2)."""
     x = C.embed_lookup(params["embed"], tokens)
     pos = C.slot_positions(state["pos"], tokens.shape[0])[:, 0]
+    paged = "bt" in state  # paged pool + block table vs dense per-slot cache
 
     def body(x, lp_cache):
         lp, kc, vc = lp_cache
+        if paged:
+            kc = C.gather_pages(kc, state["bt"])
+            vc = C.gather_pages(vc, state["bt"])
         h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
         att, kt, vt = C.attention_decode_ro(lp["attn"], h, cfg, kc, vc, pos)
         x = x + att
@@ -181,11 +198,19 @@ def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
         return x, (kt, vt)
 
     x, (kts, vts) = jax.lax.scan(body, x, (params["layers"], state["k"], state["v"]))
-    new_state = {
-        "k": C.update_cache_slot_stacked(state["k"], kts, pos),
-        "v": C.update_cache_slot_stacked(state["v"], vts, pos),
-        "pos": pos + 1,
-    }
+    if paged:
+        new_state = {
+            **state,
+            "k": C.scatter_token_pages(state["k"], kts, state["bt"], pos),
+            "v": C.scatter_token_pages(state["v"], vts, state["bt"], pos),
+            "pos": pos + 1,
+        }
+    else:
+        new_state = {
+            "k": C.update_cache_slot_stacked(state["k"], kts, pos),
+            "v": C.update_cache_slot_stacked(state["v"], vts, pos),
+            "pos": pos + 1,
+        }
     return _unembed(params, cfg, x), new_state
 
 

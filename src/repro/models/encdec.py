@@ -182,7 +182,10 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=C.DTYPE)
 
 
 def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict,
-            frames: jax.Array = None):
+            frames: jax.Array = None, length=None):
+    """``length`` (B,) marks the real prompt length when tokens are padded to
+    a bucket (causal self-attention keeps real positions exact; logits and
+    ``pos`` come from position length-1)."""
     enc = encode(params, cfg, frames)
     b = enc.shape[0]
     h, hd = cfg.n_heads, cfg.head_dim
@@ -215,9 +218,9 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict,
         "v": jax.lax.dynamic_update_slice(state["v"], vs.astype(state["v"].dtype), (0, 0, 0, 0, 0)),
         "xk": xk.astype(state["xk"].dtype),
         "xv": xv.astype(state["xv"].dtype),
-        "pos": jnp.full((b,), s, jnp.int32),
+        "pos": C.prefill_pos(length, b, s),
     }
-    x = _ln(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    x = _ln(params["ln_f"], C.select_at_length(x, length), cfg.norm_eps)
     return jnp.einsum("bsd,vd->bsv", x, C.embed_attend(params["embed"]).astype(x.dtype)), state
 
 
@@ -226,9 +229,13 @@ def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
     h, hd = cfg.n_heads, cfg.head_dim
     pos = C.slot_positions(state["pos"], b)[:, 0]  # (B,) per-slot positions
     x = C.embed_lookup(params["embed"], tokens) + _sinusoid(pos[:, None], cfg.d_model)
+    paged = "bt" in state  # self-attn K/V paged; xk/xv stay per-slot state
 
     def body(x, lp_cache):
         lp, kc, vc, xk_l, xv_l = lp_cache
+        if paged:
+            kc = C.gather_pages(kc, state["bt"])
+            vc = C.gather_pages(vc, state["bt"])
         h_in = _ln(lp["ln1"], x, cfg.norm_eps)
         q, k, v = C.linear_group(lp["attn"], ("q", "k", "v"), "qkv", h_in)
         q = q.reshape(b, 1, h, hd)
@@ -243,14 +250,24 @@ def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
         q2 = C.linear(lp["xattn"]["q"], _ln(lp["ln2"], x, cfg.norm_eps)).reshape(b, 1, h, hd)
         x = x + C.linear(lp["xattn"]["o"], C._sdpa(q2, xk_l, xv_l, full).reshape(b, 1, h * hd))
         x = x + _gelu_mlp(lp["mlp"], _ln(lp["ln3"], x, cfg.norm_eps))
-        return x, (kc, vc)
+        return x, (k, v) if paged else (kc, vc)
 
     x, (ks, vs) = jax.lax.scan(
         body, x, (params["dec_layers"], state["k"], state["v"], state["xk"], state["xv"])
     )
     x = _ln(params["ln_f"], x, cfg.norm_eps)
     logits = jnp.einsum("bsd,vd->bsv", x, C.embed_attend(params["embed"]).astype(x.dtype))
-    return logits, {**state, "k": ks, "v": vs, "pos": pos + 1}
+    if paged:
+        # ks/vs are the one-token lines (L, B, 1, H, hd): scatter into pages
+        new_state = {
+            **state,
+            "k": C.scatter_token_pages(state["k"], ks, state["bt"], pos),
+            "v": C.scatter_token_pages(state["v"], vs, state["bt"], pos),
+            "pos": pos + 1,
+        }
+    else:
+        new_state = {**state, "k": ks, "v": vs, "pos": pos + 1}
+    return logits, new_state
 
 
 def count_params(cfg: ModelConfig):

@@ -199,7 +199,10 @@ def _mamba_block(lp, x, cfg: ModelConfig, state=None, conv_state=None, step=Fals
 
 
 def _shared_attn(sp, adapter, x, emb0, cfg: ModelConfig, cache=None, pos=None):
-    """x: (B,S,D); emb0: (B,S,D) original embeddings. Returns (delta, new_kv)."""
+    """x: (B,S,D); emb0: (B,S,D) original embeddings.
+    Returns (delta, new_kv, kv_t) — kv_t is this step's raw (k, v) line, which
+    the paged decode path scatters into the page pool (new_kv is then just the
+    updated temporary view)."""
     b, s, d = x.shape
     h, hd = cfg.n_heads, cfg.head_dim
     cat = jnp.concatenate([x, emb0.astype(x.dtype)], axis=-1)
@@ -231,7 +234,7 @@ def _shared_attn(sp, adapter, x, emb0, cfg: ModelConfig, cache=None, pos=None):
     h2 = C.rmsnorm(cat, sp["ln2"], cfg.norm_eps)
     gate, up = C.linear_group(sp["mlp"], ("gate", "up"), "gate_up", h2)
     y = y + C.linear(sp["mlp"]["down"], C.swiglu(gate, up))
-    return C.linear(adapter, y), new_kv
+    return C.linear(adapter, y), new_kv, (k, v)
 
 
 # ---------------------------------------------------------------------------
@@ -262,7 +265,7 @@ def forward(params, cfg: ModelConfig, tokens):
         def seg_body(x, seg):
             mls, adapter = seg
             x, _ = jax.lax.scan(m_body, x, mls)
-            delta, _ = _shared_attn(params["shared"], adapter, x, emb0, cfg)
+            delta, _, _ = _shared_attn(params["shared"], adapter, x, emb0, cfg)
             return x + delta, None
 
         if cfg.remat:
@@ -300,7 +303,7 @@ def loss_fn(params, cfg: ModelConfig, batch):
         def seg_body(x, seg):
             mls, adapter = seg
             x, _ = jax.lax.scan(m_body, x, mls)
-            delta, _ = _shared_attn(params["shared"], adapter, x, emb0, cfg)
+            delta, _, _ = _shared_attn(params["shared"], adapter, x, emb0, cfg)
             return x + delta, None
 
         if cfg.remat:
@@ -340,6 +343,9 @@ def decode_step(params, cfg: ModelConfig, state, tokens):
     emb0 = x
     pos = C.slot_positions(state["pos"], tokens.shape[0])[:, 0]
     n_seg, every, rest = _segments(cfg)
+    # shared-attention K/V may be paged (page pool + block table); the
+    # recurrent ssm/conv leaves are O(1) per slot and never paged
+    paged = "bt" in state
 
     def m_body(x, lp_st):
         lp, sst, cst = lp_st
@@ -353,16 +359,22 @@ def decode_step(params, cfg: ModelConfig, state, tokens):
         def seg_body(x, seg):
             mls, ssm, conv, adapter, kc, vc = seg
             x, (ssm, conv) = jax.lax.scan(m_body, x, (mls, ssm, conv))
-            delta, (kc, vc) = _shared_attn(
+            if paged:
+                kc = C.gather_pages(kc, state["bt"])
+                vc = C.gather_pages(vc, state["bt"])
+            delta, kv, kv_t = _shared_attn(
                 params["shared"], adapter, x, emb0, cfg, cache=(kc, vc), pos=pos
             )
-            return x + delta, (ssm, conv, kc, vc)
+            return x + delta, (ssm, conv, *(kv_t if paged else kv))
 
         x, (ssm, conv, kc, vc) = jax.lax.scan(
             seg_body, x,
             (params["m_layers"], state["ssm"], state["conv"], params["adapters"],
              state["shared_k"], state["shared_v"]),
         )
+        if paged:
+            kc = C.scatter_token_pages(state["shared_k"], kc, state["bt"], pos)
+            vc = C.scatter_token_pages(state["shared_v"], vc, state["bt"], pos)
         new_state = {**state, "ssm": ssm, "conv": conv, "shared_k": kc, "shared_v": vc,
                      "pos": pos + 1}
         if rest:
@@ -374,15 +386,31 @@ def decode_step(params, cfg: ModelConfig, state, tokens):
     return C.linear(params["head"], x), new_state
 
 
-def prefill(params, cfg: ModelConfig, tokens, state):
+# slot (batch) axis of every decode-state leaf, as a negative offset from the
+# trailing dims (uniform across the n_seg/rest layout variants) — used to
+# broadcast the per-slot pad-validity mask in bucketed prefill
+_B_AXIS = {"ssm": -4, "ssm_rest": -4, "conv": -3, "conv_rest": -3,
+           "shared_k": -4, "shared_v": -4, "pos": -1}
+
+
+def prefill(params, cfg: ModelConfig, tokens, state, length=None):
+    """``length`` (B,) marks the real prompt length under bucket padding:
+    logits come from position length-1 (the padded forward is causal, so real
+    positions are exact) and recurrent-state updates are gated off for pad
+    steps so the SSM/conv/KV state equals the unpadded prefill's."""
     h = forward(params, cfg, tokens)
-    logits = h[:, -1:]
+    logits = C.select_at_length(h, length)
 
-    def step(st, t):
-        lg, st = decode_step(params, cfg, st, t[:, None])
-        return st, ()
+    def step(st, t_i):
+        t, i = t_i
+        lg, new = decode_step(params, cfg, st, t[:, None])
+        if length is not None:
+            valid = i < jnp.asarray(length, jnp.int32).reshape(-1)
+            new = C.gate_state_update(new, st, valid, _B_AXIS)
+        return new, ()
 
-    state, _ = jax.lax.scan(step, state, tokens.T)
+    s = tokens.shape[1]
+    state, _ = jax.lax.scan(step, state, (tokens.T, jnp.arange(s)))
     return logits, state
 
 

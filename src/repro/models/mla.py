@@ -81,15 +81,57 @@ def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int, dt
     }
 
 
-def mla_prefill_layer(p: dict, x: jax.Array, cfg: ModelConfig):
-    """Expanded attention + return the latent cache lines for this layer."""
+def _expand_latent(p: dict, ckv: jax.Array, cfg: ModelConfig, dtype):
+    """Latent (B, m, kvr) -> expanded (k_nope (B,m,H,nope), v (B,m,H,vd))."""
+    b, m, _ = ckv.shape
+    h = cfg.n_heads
+    nope, vd = cfg.qk_nope_dim, cfg.v_head_dim
+    kv = C.linear(p["wkv_b"], ckv.astype(dtype)).reshape(b, m, h, nope + vd)
+    return kv[..., :nope], kv[..., nope:]
+
+
+def mla_prefill_layer(p: dict, x: jax.Array, cfg: ModelConfig, prefix=None):
+    """Expanded attention + return the latent cache lines for this layer.
+
+    ``prefix`` = (ckv_pre (B, m, kvr), krope_pre (B, m, rope)): a cached
+    (post-RoPE-krope) prompt prefix; x then holds only the suffix, whose
+    queries attend [expanded prefix; causal suffix] with positions offset by
+    m — the engine's prefix-cache suffix prefill."""
     b, s, _ = x.shape
-    positions = jnp.arange(s)[None, :] * jnp.ones((b, 1), jnp.int32)
-    # same fused projection as mla_train on the same input: CSEs in the jit
-    _, ckv_full = _down_projs(p, x)
+    h = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    off = 0 if prefix is None else prefix[0].shape[1]
+    positions = (off + jnp.arange(s))[None, :] * jnp.ones((b, 1), jnp.int32)
+
+    cq_raw, ckv_full = _down_projs(p, x)
+    cq = C.rmsnorm(cq_raw, p["q_norm"], cfg.norm_eps)
+    q = C.linear(p["wq_b"], cq).reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    tables = C.rope_tables(positions, rope, 1.0, cfg.rope_theta)
+    q_rope = C.apply_rope(q_rope, tables)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+
     ckv = C.rmsnorm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
     k_rope = _rope_1head(ckv_full[..., cfg.kv_lora_rank :], positions, cfg.rope_theta)
-    return mla_train(p, x, cfg), ckv, k_rope
+    kv = C.linear(p["wkv_b"], ckv).reshape(b, s, h, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rope))], axis=-1
+    )
+    if prefix is None:
+        out = C.sdpa_causal(q_full, k, v)
+    else:
+        ckv_pre, krope_pre = prefix
+        pk_nope, pv = _expand_latent(p, ckv_pre, cfg, x.dtype)
+        pk = jnp.concatenate(
+            [pk_nope,
+             jnp.broadcast_to(krope_pre.astype(x.dtype)[:, :, None, :], (b, off, h, rope))],
+            axis=-1,
+        )
+        kf = jnp.concatenate([pk, k], axis=1)
+        vf = jnp.concatenate([pv, v], axis=1)
+        out = C._sdpa(q_full, kf, vf, C.prefix_attn_mask(s, off))
+    return C.linear(p["o"], out.reshape(b, s, h * vd)), ckv, k_rope
 
 
 def mla_decode(p: dict, x: jax.Array, cfg: ModelConfig, ckv_cache, krope_cache, pos):
@@ -98,6 +140,25 @@ def mla_decode(p: dict, x: jax.Array, cfg: ModelConfig, ckv_cache, krope_cache, 
     x: (B, 1, D); ckv_cache: (B, S_max, kvr); krope_cache: (B, S_max, rope);
     pos: per-slot positions (B,) — each slot attends to its own prefix.
     """
+    out, ckv_cache, krope_cache, _, _ = _mla_decode_core(
+        p, x, cfg, ckv_cache, krope_cache, pos
+    )
+    return out, ckv_cache, krope_cache
+
+
+def mla_decode_paged(p: dict, x: jax.Array, cfg: ModelConfig, ckv_pool, krope_pool,
+                     bt, pos):
+    """Paged-cache decode: gather this layer's latent pages through the block
+    table into the dense per-slot view, run the identical absorbed-form math
+    on the (temporary) view, and hand the new token's latent lines back for
+    the caller's one post-scan pool scatter."""
+    ckv_view = C.gather_pages(ckv_pool, bt)
+    krope_view = C.gather_pages(krope_pool, bt)
+    out, _, _, ckv_t, krope_t = _mla_decode_core(p, x, cfg, ckv_view, krope_view, pos)
+    return out, ckv_t, krope_t
+
+
+def _mla_decode_core(p: dict, x: jax.Array, cfg: ModelConfig, ckv_cache, krope_cache, pos):
     b, sq, d = x.shape
     h = cfg.n_heads
     nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -133,4 +194,7 @@ def mla_decode(p: dict, x: jax.Array, cfg: ModelConfig, ckv_cache, krope_cache, 
     probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
     ctx = jnp.einsum("bhqt,btk->bqhk", probs, ckv_cache)
     out = jnp.einsum("bqhk,khv->bqhv", ctx, w_v.astype(x.dtype))
-    return C.linear(p["o"], out.reshape(b, sq, h * vd)), ckv_cache, krope_cache
+    return (
+        C.linear(p["o"], out.reshape(b, sq, h * vd)),
+        ckv_cache, krope_cache, ckv_t, krope_t,
+    )

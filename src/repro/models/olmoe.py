@@ -63,41 +63,47 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=C.DTYPE)
     return C.init_kv_cache(cfg, batch, max_len, cfg.n_layers, dtype)
 
 
-def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict):
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict,
+            length=None, prefix=None):
+    """Prompt prefill; ``length``/``prefix`` as in models/dense.prefill
+    (bucket padding and cached-prefix suffix prefill)."""
     x = C.embed_lookup(params["embed"], tokens)
     b, s, _ = x.shape
-    positions = jnp.arange(s)[None, :] * jnp.ones((b, 1), jnp.int32)
+    off = 0 if prefix is None else prefix["k"].shape[2]
+    positions = (off + jnp.arange(s))[None, :] * jnp.ones((b, 1), jnp.int32)
+    mask = None if prefix is None else C.prefix_attn_mask(s, off)
 
-    def body(x, lp):
+    def body(x, lp_ctx):
+        lp = lp_ctx if prefix is None else lp_ctx[0]
         h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
-        hh, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-        q, k, v = C.linear_group(lp["attn"], ("q", "k", "v"), "qkv", h)
-        q = q.reshape(b, s, hh, hd)
-        k = k.reshape(b, s, kvh, hd)
-        v = v.reshape(b, s, kvh, hd)
-        tables = C.rope_tables(positions, hd, cfg.rope_fraction, cfg.rope_theta)
-        q = C.apply_rope(q, tables)
-        k = C.apply_rope(k, tables)
-        att = C.sdpa_causal(q, k, v)
-        x = x + C.linear(lp["attn"]["o"], att.reshape(b, s, hh * hd))
+        att, k, v = C.gqa_prefill_attn(
+            lp["attn"], h, cfg, positions,
+            prefix_kv=None if prefix is None else lp_ctx[1:], mask=mask,
+        )
+        x = x + att
         m, _ = moe_ffn(lp["moe"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg)
         return x + m, (k, v)
 
-    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    xs = params["layers"] if prefix is None else (params["layers"], prefix["k"], prefix["v"])
+    x, (ks, vs) = jax.lax.scan(body, x, xs)
     state = {
         "k": jax.lax.dynamic_update_slice(state["k"], ks.astype(state["k"].dtype), (0, 0, 0, 0, 0)),
         "v": jax.lax.dynamic_update_slice(state["v"], vs.astype(state["v"].dtype), (0, 0, 0, 0, 0)),
-        "pos": jnp.full((b,), s, jnp.int32),
+        "pos": off + C.prefill_pos(length, b, s),
     }
-    return D._unembed(params, cfg, x[:, -1:]), state
+    return D._unembed(params, cfg, C.select_at_length(x, length)), state
 
 
 def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
     x = C.embed_lookup(params["embed"], tokens)
     pos = C.slot_positions(state["pos"], tokens.shape[0])[:, 0]
+    paged = "bt" in state
 
     def body(x, lp_cache):
         lp, kc, vc = lp_cache
+        if paged:
+            kc = C.gather_pages(kc, state["bt"])
+            vc = C.gather_pages(vc, state["bt"])
         h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
         att, kt, vt = C.attention_decode_ro(lp["attn"], h, cfg, kc, vc, pos)
         x = x + att
@@ -105,11 +111,19 @@ def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
         return x + m, (kt, vt)
 
     x, (kts, vts) = jax.lax.scan(body, x, (params["layers"], state["k"], state["v"]))
-    new_state = {
-        "k": C.update_cache_slot_stacked(state["k"], kts, pos),
-        "v": C.update_cache_slot_stacked(state["v"], vts, pos),
-        "pos": pos + 1,
-    }
+    if paged:
+        new_state = {
+            **state,
+            "k": C.scatter_token_pages(state["k"], kts, state["bt"], pos),
+            "v": C.scatter_token_pages(state["v"], vts, state["bt"], pos),
+            "pos": pos + 1,
+        }
+    else:
+        new_state = {
+            "k": C.update_cache_slot_stacked(state["k"], kts, pos),
+            "v": C.update_cache_slot_stacked(state["v"], vts, pos),
+            "pos": pos + 1,
+        }
     return D._unembed(params, cfg, x), new_state
 
 

@@ -5,8 +5,19 @@ Uniform protocol used by launch/{train,serve,dryrun}.py and the tests:
     init_params(cfg, key) -> params
     loss_fn(params, cfg, batch) -> scalar loss        (train_step lowers this)
     init_decode_state(cfg, batch, max_len) -> state
-    prefill(params, cfg, tokens, state[, frontend]) -> (logits, state)
+    prefill(params, cfg, tokens, state[, frontend, length, prefix]) -> (logits, state)
     decode_step(params, cfg, state, tokens) -> (logits, state)
+
+Serving extensions (DESIGN.md §14): every family's ``prefill`` accepts
+``length (B,)`` — the real prompt length when tokens are padded to a bucket
+(causal attention keeps real positions exact; recurrent families gate state
+updates past ``length``). Attention-KV families whose state is fully
+page-addressable (dense/vlm via models.dense, moe, mla_moe) also accept
+``prefix`` — already-cached prefix K/V (or latents) gathered from shared
+pages, so a prefix-cache hit prefills only the suffix. ``decode_step``
+transparently serves the paged state layout (``models.common.
+init_paged_state``): the presence of a block table ``state["bt"]`` switches
+the cache read/write to page gather/scatter at trace time.
 """
 
 from __future__ import annotations
@@ -24,8 +35,9 @@ def _vlm_loss(params, cfg, batch):
     return dense.loss_fn(params, cfg, batch)
 
 
-def _vlm_prefill(params, cfg, tokens, state, patches=None):
-    return dense.prefill(params, cfg, tokens, state, patches=patches)
+def _vlm_prefill(params, cfg, tokens, state, patches=None, length=None, prefix=None):
+    return dense.prefill(params, cfg, tokens, state, patches=patches,
+                         length=length, prefix=prefix)
 
 
 _DENSE = SimpleNamespace(

@@ -421,22 +421,37 @@ def decode_step(params, cfg: ModelConfig, state, tokens):
     return C.linear(params["head"], x), new_state
 
 
-def prefill(params, cfg: ModelConfig, tokens, state):
+# slot (batch) axis per decode-state leaf, negative from the trailing dims —
+# broadcast target for the pad-validity mask in bucketed prefill
+_B_AXIS = {"mC": -4, "mn": -3, "mm": -2, "conv": -3,
+           "sh": -2, "sc": -2, "sn": -2, "sm": -2, "pos": -1}
+
+
+def prefill(params, cfg: ModelConfig, tokens, state, length=None):
     """Prefill = run the chunkwise trunk, then capture final states by
     replaying the last partial chunk... For simplicity and exactness we run
     the sequence through decode_step via scan when capturing state is needed;
-    the serving path uses prefill for logits and decode for continuation."""
+    the serving path uses prefill for logits and decode for continuation.
+
+    ``length`` (B,) marks the real prompt length under bucket padding: logits
+    come from position length-1 and recurrent-state updates are gated off for
+    pad steps (the state is not page-addressable, so pads must not touch it)."""
     # chunkwise trunk for logits; state capture via per-chunk final states
     x = C.embed_lookup(params["embed"], tokens)
     h = _trunk(params, cfg, x)
-    h = C.rmsnorm(h[:, -1:], params["ln_f"], cfg.norm_eps)
+    h = C.rmsnorm(C.select_at_length(h, length), params["ln_f"], cfg.norm_eps)
     logits = C.linear(params["head"], h)
 
-    def step(st, t):
-        lg, st = decode_step(params, cfg, st, t[:, None])
-        return st, ()
+    def step(st, t_i):
+        t, i = t_i
+        lg, new = decode_step(params, cfg, st, t[:, None])
+        if length is not None:
+            valid = i < jnp.asarray(length, jnp.int32).reshape(-1)
+            new = C.gate_state_update(new, st, valid, _B_AXIS)
+        return new, ()
 
-    state, _ = jax.lax.scan(step, state, tokens.T)
+    s = tokens.shape[1]
+    state, _ = jax.lax.scan(step, state, (tokens.T, jnp.arange(s)))
     return logits, state
 
 

@@ -4,6 +4,7 @@ step on CPU, assert output shapes and no NaNs."""
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
@@ -64,6 +65,60 @@ def test_prefill_decode(arch):
         assert logits.shape == (b, 1, cfg.padded_vocab), arch
         assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32) % cfg.vocab
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_bucketed_prefill_parity(arch):
+    """Bucket-padded prefill (serve.py's prompt bucketing) must match the
+    unpadded prefill: same last-token logits, same ``pos``, and the state it
+    leaves behind decodes identically for the next steps — for EVERY family,
+    including the recurrent ones that gate pad steps out of their state."""
+    cfg = get_config(arch, reduced=True).replace(remat=False)
+    if cfg.n_experts:
+        # MoE expert capacity is shape-derived (it scales with the PADDED
+        # token count), so parity is exact only when neither run drops
+        # tokens to capacity — overflow is lossy no matter the padding
+        # (DESIGN.md §14). Give both runs headroom so the comparison tests
+        # the padding/masking math, not the drop set.
+        cfg = cfg.replace(capacity_factor=4.0)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(3)
+    params = model.init_params(cfg, key)
+    b, s, pad, max_len = 2, 11, 5, 48
+    batch = _batch_for(cfg, key, b, s)
+    kwargs = {}
+    if cfg.family == "vlm":
+        kwargs["patches"] = batch["patches"]
+    if cfg.family == "encdec":
+        kwargs["frames"] = batch["frames"]
+
+    state_a = model.init_decode_state(cfg, b, max_len)
+    lg_a, state_a = model.prefill(params, cfg, batch["tokens"], state_a, **kwargs)
+
+    padded = jnp.concatenate(
+        [batch["tokens"], jnp.zeros((b, pad), jnp.int32)], axis=1
+    )
+    state_b = model.init_decode_state(cfg, b, max_len)
+    lg_b, state_b = model.prefill(
+        params, cfg, padded, state_b, length=jnp.full((b,), s, jnp.int32), **kwargs
+    )
+
+    assert np.array_equal(np.asarray(state_a["pos"]), np.asarray(state_b["pos"])), arch
+
+    def close(x, y, what):
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y, np.float32)
+        err = np.max(np.abs(x - y))
+        scale = np.max(np.abs(x)) + 1e-6
+        assert err / scale < 0.02, (arch, what, float(err), float(scale))
+
+    close(lg_a, lg_b, "prefill logits")
+    tok = jnp.argmax(lg_a[:, -1:], axis=-1).astype(jnp.int32) % cfg.vocab
+    for t in range(2):
+        lg_a, state_a = model.decode_step(params, cfg, state_a, tok)
+        lg_b, state_b = model.decode_step(params, cfg, state_b, tok)
+        close(lg_a, lg_b, f"decode step {t}")
+        tok = jnp.argmax(lg_a, axis=-1).astype(jnp.int32) % cfg.vocab
 
 
 @pytest.mark.parametrize(

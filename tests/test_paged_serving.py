@@ -1,0 +1,445 @@
+"""Paged KV-cache serving runtime tests (DESIGN.md §14).
+
+The load-bearing invariant is the same one the dense engine is held to,
+under paging: serving a request through the paged engine interleaved with
+arbitrary other traffic is token-for-token identical to serving it alone
+through the DENSE engine (the A/B oracle). On top of that: the page
+allocator leaks nothing and double-maps nothing under churn, a prefix-cache
+hit skips the shared part of prefill while producing identical tokens, peak
+cache usage tracks live tokens rather than slots x max_len, truncation is
+flagged instead of silent, and prompt bucketing keeps the prefill
+executable count logarithmic.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ModelConfig, get_config
+from repro.launch.serve import (
+    ContinuousBatchingEngine,
+    PageAllocator,
+    Request,
+)
+from repro.models import dense
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig(
+    name="tiny-paged", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, remat=False,
+)
+
+MLA_CFG = ModelConfig(
+    name="tiny-paged-mla", family="mla_moe", n_layers=2, d_model=64, n_heads=4,
+    d_ff=128, vocab=256, remat=False, first_k_dense=1,
+    q_lora_rank=32, kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+    v_head_dim=16, n_experts=4, top_k=2, d_ff_expert=64, n_shared_experts=1,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return dense.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _solo(cfg, params, prompt, max_new=8):
+    """Dense-engine solo serving: the correctness oracle."""
+    eng = ContinuousBatchingEngine(cfg, params, batch_slots=1, max_len=64)
+    req = Request(jnp.asarray(prompt, jnp.int32), max_new=max_new)
+    eng.serve([req])
+    assert req.done
+    return req.out
+
+
+def _interleaved_paged(cfg, params, a, b, max_new, **engine_kwargs):
+    """Admit b while a is mid-generation on a paged engine; return outputs."""
+    eng = ContinuousBatchingEngine(
+        cfg, params, batch_slots=2, max_len=64, paged=True, **engine_kwargs
+    )
+    ra = Request(jnp.asarray(a, jnp.int32), max_new=max_new)
+    eng.submit(ra)
+    for _ in range(2):
+        eng.step()
+    rb = Request(jnp.asarray(b, jnp.int32), max_new=max_new)
+    eng.submit(rb)
+    eng.run_until_done()
+    eng.check_page_invariants()
+    assert ra.done and rb.done
+    return ra.out, rb.out, eng
+
+
+# ---------------------------------------------------------------------------
+# page allocator
+# ---------------------------------------------------------------------------
+
+
+def test_page_allocator_churn():
+    """Random alloc/share/release traffic wraps the free list repeatedly:
+    no page leaks, no double-maps, free/used always partition the pool."""
+    rng = np.random.default_rng(0)
+    al = PageAllocator(13)
+    held: list[list[int]] = []
+    shared: list[int] = []
+    for _ in range(500):
+        r = rng.random()
+        if held and r < 0.35:
+            al.release(held.pop(int(rng.integers(len(held)))))
+        elif held and r < 0.5:
+            p = held[int(rng.integers(len(held)))][0]
+            al.share([p])
+            shared.append(p)
+        elif shared and r < 0.6:
+            al.release([shared.pop()])
+        else:
+            n = int(rng.integers(1, 5))
+            pages = al.alloc(n)
+            if pages is None:
+                assert al.n_free < n  # refusal only ever for lack of pages
+            else:
+                assert len(set(pages)) == n
+                held.append(pages)
+        al.audit()
+    for pages in held:
+        al.release(pages)
+    al.release(shared)
+    al.audit()
+    assert al.n_free == al.n_pages
+    assert al.peak_used <= al.n_pages
+
+
+def test_page_allocator_refusal_and_double_release():
+    al = PageAllocator(4)
+    pages = al.alloc(4)
+    assert al.alloc(1) is None  # exhausted, not silently over-allocated
+    al.release(pages)
+    with pytest.raises(AssertionError):
+        al.release([pages[0]])  # double release must be loud
+
+
+# ---------------------------------------------------------------------------
+# interleaving invariant under paging (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+
+def test_paged_interleaving_invariant_dense(params):
+    a = list(range(10, 22))
+    b = list(range(100, 105))
+    solo_a = _solo(CFG, params, a)
+    solo_b = _solo(CFG, params, b)
+    oa, ob, eng = _interleaved_paged(CFG, params, a, b, max_new=8, page_size=16)
+    assert oa == solo_a
+    assert ob == solo_b
+    # decode traced exactly one executable; prefill bucketed
+    assert eng.compile_stats()["decode_traces"] == 1
+
+
+def test_paged_interleaving_invariant_scrambled_pages(params):
+    """Small pages + churn before admission scramble the physical page order;
+    block-table indirection must keep timelines exact regardless."""
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64,
+                                   paged=True, page_size=8, prefix_caching=False)
+    # churn the free list so later admissions get non-contiguous pages
+    for k in range(3):
+        r = Request(jnp.asarray([7 + k, 8, 9], jnp.int32), max_new=3)
+        eng.serve([r])
+    a = list(range(30, 47))
+    b = list(range(200, 206))
+    ra = Request(jnp.asarray(a, jnp.int32), max_new=6)
+    eng.submit(ra)
+    eng.step()
+    rb = Request(jnp.asarray(b, jnp.int32), max_new=6)
+    eng.submit(rb)
+    eng.run_until_done()
+    eng.check_page_invariants()
+    assert ra.out == _solo(CFG, params, a, max_new=6)
+    assert rb.out == _solo(CFG, params, b, max_new=6)
+
+
+@pytest.mark.slow
+def test_paged_interleaving_invariant_mla():
+    from repro.models import deepseek
+
+    params = deepseek.init_params(MLA_CFG, jax.random.PRNGKey(1))
+    a = list(range(10, 22))
+    b = list(range(100, 105))
+    oa, ob, _ = _interleaved_paged(MLA_CFG, params, a, b, max_new=5, page_size=16)
+    assert oa == _solo(MLA_CFG, params, a, max_new=5)
+    assert ob == _solo(MLA_CFG, params, b, max_new=5)
+
+
+@pytest.mark.slow
+def test_paged_vlm_frontend_rows():
+    """VLM prefill prepends n_patches rows to the decoder cache: paged
+    admission must reserve and write pages for prompt+patch rows, and the
+    patch frontend must bypass the prefix cache (token hashes alone cannot
+    identify an image)."""
+    cfg = get_config("internvl2-2b", reduced=True).replace(remat=False)
+    from repro.models import dense as dense_mod
+
+    params = dense_mod.init_params(cfg, jax.random.PRNGKey(4))
+    patches = jax.random.normal(
+        jax.random.PRNGKey(5), (1, cfg.n_patches, cfg.d_model), jnp.bfloat16
+    )
+    prompt = list(range(5, 14))
+
+    def serve_one(**kw):
+        eng = ContinuousBatchingEngine(cfg, params, batch_slots=2, max_len=64, **kw)
+        r = Request(jnp.asarray(prompt, jnp.int32), max_new=5,
+                    frontend={"patches": patches})
+        eng.serve([r])
+        return r, eng
+
+    r_dense, _ = serve_one()
+    r_paged, eng = serve_one(paged=True, page_size=8)
+    eng.check_page_invariants()
+    assert r_paged.out == r_dense.out
+    assert eng.stats["prefix_lookups"] == 0  # frontend requests skip the cache
+
+
+@pytest.mark.slow
+def test_paged_interleaving_invariant_mamba_hybrid():
+    """Hybrid stack: the shared-attention K/V pages through the pool while
+    the recurrent SSM/conv leaves stay per-slot state."""
+    cfg = get_config("zamba2-1.2b", reduced=True).replace(remat=False)
+    from repro.models import mamba_hybrid
+
+    params = mamba_hybrid.init_params(cfg, jax.random.PRNGKey(2))
+    a = list(range(10, 22))
+    b = list(range(100, 105))
+    oa, ob, eng = _interleaved_paged(cfg, params, a, b, max_new=5, page_size=16)
+    assert "bt" in eng.state and "ssm" in eng.state  # pools + slot state coexist
+    assert oa == _solo(cfg, params, a, max_new=5)
+    assert ob == _solo(cfg, params, b, max_new=5)
+
+
+# ---------------------------------------------------------------------------
+# prefix cache
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_hit_equivalence(params):
+    """A hit must SKIP the shared part of prefill (stats prove it) and still
+    produce exactly the cold-miss tokens."""
+    pre = list(range(1, 33))  # 4 full pages at page_size=8
+    p1 = pre + [40, 41, 42]
+    p2 = pre + [50, 51]
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64,
+                                   paged=True, page_size=8)
+    r1 = Request(jnp.asarray(p1, jnp.int32), max_new=4)
+    eng.serve([r1])
+    cold_tokens = eng.stats["prefill_tokens"]
+    assert cold_tokens == len(p1)
+    r2 = Request(jnp.asarray(p2, jnp.int32), max_new=4)
+    eng.serve([r2])
+    eng.check_page_invariants()
+    assert eng.stats["prefix_hits"] == 1
+    assert eng.stats["prefix_hit_tokens"] == 32
+    # only the 2-token suffix re-prefilled
+    assert eng.stats["prefill_tokens"] - cold_tokens == len(p2) - 32
+    # identical output to a cold engine with the prefix cache disabled
+    cold = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64,
+                                    paged=True, page_size=8, prefix_caching=False)
+    r2c = Request(jnp.asarray(p2, jnp.int32), max_new=4)
+    cold.serve([r2c])
+    assert r2.out == r2c.out
+    assert r2.out == _solo(CFG, params, p2, max_new=4)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", ["mla_moe", "moe"])
+def test_prefix_cache_hit_equivalence_other_families(family):
+    """The suffix-prefill-with-prefix paths are family-specific (expanded
+    latents for MLA, MoE FFN blocks for olmoe): hit tokens must equal the
+    cold-miss tokens for them too."""
+    if family == "mla_moe":
+        cfg = MLA_CFG
+        from repro.models import deepseek as mod
+    else:
+        cfg = get_config("olmoe-1b-7b", reduced=True).replace(
+            remat=False, capacity_factor=4.0
+        )
+        from repro.models import olmoe as mod
+    params = mod.init_params(cfg, jax.random.PRNGKey(5))
+    pre = list(range(1, 25))  # 3 full pages at page_size=8
+    p2 = pre + [30, 31]
+
+    def serve_one(prefix_caching):
+        eng = ContinuousBatchingEngine(cfg, params, batch_slots=1, max_len=64,
+                                       paged=True, page_size=8,
+                                       prefix_caching=prefix_caching)
+        warm = Request(jnp.asarray(pre + [7], jnp.int32), max_new=3)
+        eng.serve([warm])
+        r = Request(jnp.asarray(p2, jnp.int32), max_new=4)
+        eng.serve([r])
+        eng.check_page_invariants()
+        return r, eng
+
+    hit, eng = serve_one(True)
+    cold, _ = serve_one(False)
+    assert eng.stats["prefix_hits"] == 1
+    # 3 matched pages bucket down to 2 (power-of-two prefix offsets keep the
+    # suffix-prefill executable inventory bounded)
+    assert eng.stats["prefix_hit_tokens"] == 16
+    assert hit.out == cold.out
+
+
+def test_prefix_cache_hit_while_owner_live(params):
+    """Sharing pages with a STILL-DECODING owner: the owner keeps writing its
+    own tail pages, the shared prefix pages stay immutable, both match solo."""
+    pre = list(range(60, 76))  # 2 full pages at page_size=8
+    p1 = pre + [1, 2]
+    p2 = pre + [3]
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64,
+                                   paged=True, page_size=8)
+    r1 = Request(jnp.asarray(p1, jnp.int32), max_new=10)
+    eng.submit(r1)
+    eng.step()  # r1 mid-generation, its prompt pages now registered
+    r2 = Request(jnp.asarray(p2, jnp.int32), max_new=10)
+    eng.submit(r2)
+    eng.run_until_done()
+    eng.check_page_invariants()
+    assert eng.stats["prefix_hits"] == 1
+    assert r1.out == _solo(CFG, params, p1, max_new=10)
+    assert r2.out == _solo(CFG, params, p2, max_new=10)
+
+
+def test_prefix_hit_survives_eviction_pressure(params):
+    """A matched prefix whose cache entries get evicted mid-admission (page
+    pressure) must keep its pages alive through the requester's reference —
+    the request either admits correctly or waits, never reads recycled
+    pages."""
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64,
+                                   paged=True, page_size=8, n_pages=8)
+    p1 = list(range(0, 17))       # prefix A: 2 cached pages
+    pb = list(range(100, 117))    # prefix B: 2 cached pages
+    for p in (p1, pb):
+        eng.serve([Request(jnp.asarray(p, jnp.int32), max_new=3)])
+    assert len(eng.prefix_cache) == 4 and eng.allocator.n_free == 4
+    # matches A (2 shared), needs 5 own pages > 4 free: admission must evict
+    # prefix B's entries while A's matched pages stay pinned by this request
+    p2 = p1[:16] + list(range(200, 209))
+    r2 = Request(jnp.asarray(p2, jnp.int32), max_new=25)
+    eng.serve([r2])
+    eng.check_page_invariants()
+    assert r2.done
+    assert eng.stats["prefix_hits"] == 1
+    assert r2.out == _solo(CFG, params, p2, max_new=25)
+    # an impossible request (worst-case pages > whole pool) is rejected at
+    # submit instead of spinning the serve loop forever
+    tiny = ContinuousBatchingEngine(CFG, params, batch_slots=1, max_len=64,
+                                    paged=True, page_size=8, n_pages=4)
+    with pytest.raises(ValueError, match="pool"):
+        tiny.submit(Request(jnp.asarray(list(range(40)), jnp.int32), max_new=16))
+
+
+def test_prefix_cache_eviction_under_page_pressure(params):
+    """When the pool runs dry, LRU prefix entries are evicted to free pages
+    and admission proceeds; outputs stay correct throughout."""
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64,
+                                   paged=True, page_size=8, n_pages=10)
+    prompts = [list(range(base, base + 17)) for base in (0, 40, 80, 120, 160)]
+    for p in prompts:
+        r = Request(jnp.asarray(p, jnp.int32), max_new=3)
+        eng.serve([r])
+        eng.check_page_invariants()
+        assert r.out == _solo(CFG, params, p, max_new=3)
+    # pool of 10 pages cannot hold 5 prompts' worth of cached prefixes
+    assert eng.memory()["pages_in_use"] <= 10
+
+
+# ---------------------------------------------------------------------------
+# engine churn: free list wraps, nothing leaks, page gating admits in order
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_engine_page_churn_no_leak(params):
+    """Admit/evict until the free list wraps several times over a pool that
+    cannot hold all in-flight requests at once: every request still matches
+    solo serving, and the allocator/block-table/refcount invariants hold
+    after every drain."""
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=3, max_len=64,
+                                   paged=True, page_size=8, n_pages=9)
+    rng = np.random.default_rng(7)
+    for round_ in range(6):
+        prompts = [
+            [int(t) for t in rng.integers(0, CFG.vocab, int(rng.integers(2, 14)))]
+            for _ in range(4)
+        ]
+        reqs = [Request(jnp.asarray(p, jnp.int32), max_new=3) for p in prompts]
+        eng.serve(reqs)
+        eng.check_page_invariants()
+        assert all(r.done for r in reqs)
+        for p, r in zip(prompts, reqs):
+            assert r.out == _solo(CFG, params, p, max_new=3), (round_, p)
+    # after the churn the only held pages are prefix-cache registrations
+    mem = eng.memory()
+    cached = 0 if eng.prefix_cache is None else len(eng.prefix_cache)
+    assert mem["pages_in_use"] == cached
+    assert eng.allocator.peak_used <= eng.n_pages
+
+
+# ---------------------------------------------------------------------------
+# memory, truncation, bucketing
+# ---------------------------------------------------------------------------
+
+
+def test_peak_cache_memory_below_dense(params):
+    """Short-prompt workload: peak paged cache bytes land well under the
+    dense B x S_max footprint the same engine would pin."""
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=4, max_len=64,
+                                   paged=True, page_size=8)
+    reqs = [Request(jnp.asarray([i, i + 1, i + 2], jnp.int32), max_new=3)
+            for i in range(0, 40, 10)]
+    eng.serve(reqs)
+    mem = eng.memory()
+    assert mem["mode"] == "paged"
+    assert mem["peak_cache_bytes"] < mem["dense_cache_bytes"] / 2, mem
+
+
+def test_truncation_flagged_not_silent(params):
+    """prompt_len + max_new > max_len: warned at submit, served to capacity,
+    flagged truncated at eviction — in both dense and paged modes."""
+    for paged in (False, True):
+        eng = ContinuousBatchingEngine(CFG, params, batch_slots=1, max_len=16,
+                                       paged=paged, page_size=8)
+        req = Request(jnp.asarray(list(range(10)), jnp.int32), max_new=12)
+        with pytest.warns(UserWarning, match="truncate"):
+            eng.serve([req])
+        assert req.done and req.truncated, paged
+        assert 0 < len(req.out) < 12, paged
+        assert eng.stats["requests_truncated"] == 1
+        # an untruncated request must NOT be flagged
+        ok = Request(jnp.asarray([1, 2, 3], jnp.int32), max_new=4)
+        eng.serve([ok])
+        assert ok.done and not ok.truncated
+
+
+def test_truncation_reject_policy(params):
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=1, max_len=16,
+                                   on_truncation="reject")
+    with pytest.raises(ValueError, match="truncate"):
+        eng.submit(Request(jnp.asarray(list(range(10)), jnp.int32), max_new=12))
+    # the bad request never touched queue or slots
+    assert not eng.queue and eng.slots == [None]
+
+
+def test_bucketed_prefill_compile_stats(params):
+    """11 distinct prompt lengths collapse into O(log max_len) prefill
+    executables, with outputs identical to solo serving."""
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64)
+    prompts = [list(range(1, 2 + n)) for n in range(11)]
+    reqs = [Request(jnp.asarray(p, jnp.int32), max_new=3) for p in prompts]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        eng.serve(reqs)
+    cs = eng.compile_stats()
+    assert cs["prefill_calls"] == len(prompts)
+    assert cs["prefill_traces"] <= 3, cs  # buckets 8 and 16 only
+    assert set(cs["prefill_buckets"]) <= {8, 16}
+    for p, r in zip(prompts, reqs):
+        assert r.out == _solo(CFG, params, p, max_new=3)
