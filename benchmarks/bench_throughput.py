@@ -32,7 +32,9 @@ def _per_token_bytes(cfg, w_bits: int, rank: int) -> float:
     w = n * w_bits / 8
     if w_bits == 4:  # low-rank branch adds r(m+n) 4-bit params per linear
         d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim
-        per_layer = rank * (2 * d + cfg.n_heads * hd + 2 * (d + cfg.n_kv_heads * hd) + 2 * (d + f) + (f + d)) / 2
+        per_layer = rank * (
+            2 * d + cfg.n_heads * hd + 2 * (d + cfg.n_kv_heads * hd) + 2 * (d + f) + (f + d)
+        ) / 2
         w += cfg.n_layers * per_layer
     return w
 
@@ -267,7 +269,8 @@ def run(quick: bool = False, fused: bool = True, paged: bool = False) -> dict:
     (ART / "bench_throughput.json").write_text(json.dumps(out, indent=2))
     for k, v in results.items():
         emit(f"throughput/{k}", dt * 1e6 / len(results),
-             f"speedup={v['speedup']:.2f}x(amdahl-adj;roofline={v['speedup_roofline']:.2f}x;paper:1.63-1.8x)")
+             f"speedup={v['speedup']:.2f}x(amdahl-adj;roofline="
+             f"{v['speedup_roofline']:.2f}x;paper:1.63-1.8x)")
     return out
 
 

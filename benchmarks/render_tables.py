@@ -88,7 +88,9 @@ def accuracy_table() -> str:
             f"eta={f7.get('eta_gain', 0):.2f}; sv decay s32/s0="
             f"{d.get('sv_decay', {}).get('s32_over_s0', 0):.3f}."
         )
-    return "\n".join(out) if out else "(run `python -m benchmarks.run accuracy rank error_analysis`)"
+    if not out:
+        return "(run `python -m benchmarks.run accuracy rank error_analysis`)"
+    return "\n".join(out)
 
 
 def main() -> None:

@@ -73,7 +73,8 @@ def main():
     mem = engine.memory()
     cs = engine.compile_stats()
     print(f" paging: {mem['pages_peak']}/{mem['n_pages']} pages peak "
-          f"({mem['peak_cache_bytes'] / 1e3:.0f}kB vs dense {mem['dense_cache_bytes'] / 1e3:.0f}kB), "
+          f"({mem['peak_cache_bytes'] / 1e3:.0f}kB vs dense "
+          f"{mem['dense_cache_bytes'] / 1e3:.0f}kB), "
           f"prefix hits {th['prefix_hits']}/{th['prefix_lookups']} "
           f"({th['prefix_hit_tokens']} prompt tokens served from cache), "
           f"{cs['prefill_traces']} prefill traces for buckets {cs['prefill_buckets']}")

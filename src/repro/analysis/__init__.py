@@ -1,0 +1,26 @@
+"""quantcheck: repo-specific static analyzer + runtime sanitizers.
+
+``python -m repro.analysis src/`` runs the stdlib-``ast`` rule catalog
+(Pallas kernel hygiene PK001-PK004, engine hygiene EN001-EN002) over a file
+tree — self-contained, no jax import. The runtime sanitizers (recompile /
+transfer-guard / page-invariant) live in :mod:`repro.analysis.sanitizers`
+and are imported explicitly by tests.
+"""
+
+from repro.analysis.core import (
+    Finding,
+    all_rules,
+    analyze_paths,
+    analyze_source,
+    render_human,
+    render_json,
+)
+
+__all__ = [
+    "Finding",
+    "all_rules",
+    "analyze_paths",
+    "analyze_source",
+    "render_human",
+    "render_json",
+]

@@ -1,0 +1,133 @@
+"""Serving-engine hygiene rules (EN...): the per-token decode loop must not
+hide host syncs or jit construction.
+
+EN001 guards ``step`` methods of engine classes against device-to-host
+transfers outside the explicit ``# sync-point`` allowlist (the convention in
+``launch/serve.py``: a transfer that is PART of the serving design — the
+logits download, the position read — carries the comment on its line; any
+other transfer is an accidental pipeline stall). EN002 bans ``jax.jit``
+construction inside step/prefill functions, where it would silently rebuild
+an executable per call.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleAliases, rule
+
+__all__ = ["en001_decode_syncs", "en002_jit_in_step"]
+
+SYNC_POINT_MARK = "# sync-point"
+
+# device-to-host sync constructors EN001 polices inside step methods
+_NP_SYNC_FNS = ("asarray", "array")
+_ATTR_SYNC_FNS = ("item", "block_until_ready")
+
+# function names whose bodies are per-call hot paths (EN002)
+_STEP_FN_NAMES = (
+    "step",
+    "decode_step",
+    "_decode_step",
+    "prefill_step",
+    "_prefill_step",
+    "_run_prefill",
+)
+
+
+def _line_allowlisted(src_lines: list[str], node: ast.AST) -> bool:
+    for lineno in {node.lineno, getattr(node, "end_lineno", node.lineno)}:
+        if lineno and lineno <= len(src_lines):
+            if SYNC_POINT_MARK in src_lines[lineno - 1]:
+                return True
+    return False
+
+
+@rule("EN001")
+def en001_decode_syncs(tree: ast.AST, src: str, path: str) -> list[Finding]:
+    """No ``np.asarray`` / ``np.array`` / ``.item()`` / ``block_until_ready``
+    / ``jax.device_get`` in an engine's per-token ``step`` method, outside
+    lines explicitly marked ``# sync-point``. Every unmarked transfer is a
+    hidden decode-loop stall."""
+    aliases = ModuleAliases(tree)
+    np_names = aliases.names_for("np")
+    jax_names = aliases.names_for("jax")
+    src_lines = src.splitlines()
+    findings: list[Finding] = []
+
+    for cls in ast.walk(tree):
+        if not (isinstance(cls, ast.ClassDef) and "Engine" in cls.name):
+            continue
+        for meth in cls.body:
+            if not (
+                isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and meth.name == "step"
+            ):
+                continue
+            for node in ast.walk(meth):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = node.func
+                label = None
+                if (
+                    isinstance(f, ast.Attribute)
+                    and f.attr in _NP_SYNC_FNS
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id in np_names
+                ):
+                    label = f"{f.value.id}.{f.attr}(...)"
+                elif isinstance(f, ast.Attribute) and f.attr in _ATTR_SYNC_FNS:
+                    label = f".{f.attr}()"
+                elif (
+                    isinstance(f, ast.Attribute)
+                    and f.attr == "device_get"
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id in jax_names
+                ):
+                    label = "jax.device_get(...)"
+                if label and not _line_allowlisted(src_lines, node):
+                    findings.append(
+                        Finding(
+                            "EN001",
+                            f"host sync {label} in {cls.name}.step outside the "
+                            f"`{SYNC_POINT_MARK}` allowlist — a hidden "
+                            "decode-loop stall (mark the line or move the "
+                            "transfer out of the loop)",
+                            path, node.lineno, node.col_offset,
+                        )
+                    )
+    return findings
+
+
+@rule("EN002")
+def en002_jit_in_step(tree: ast.AST, src: str, path: str) -> list[Finding]:
+    """No ``jax.jit(...)`` construction inside step/prefill functions: a jit
+    wrapper built per call defeats executable caching (build it in
+    ``__init__`` or at module scope and reuse it)."""
+    aliases = ModuleAliases(tree)
+    jax_names = aliases.names_for("jax")
+    findings: list[Finding] = []
+    for fn in ast.walk(tree):
+        if not (
+            isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and fn.name in _STEP_FN_NAMES
+        ):
+            continue
+        for node in ast.walk(fn):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "jit"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id in jax_names
+            ):
+                findings.append(
+                    Finding(
+                        "EN002",
+                        f"jax.jit constructed inside `{fn.name}` — per-call jit "
+                        "construction rebuilds the executable wrapper every "
+                        "step; hoist it to __init__ or module scope",
+                        path, node.lineno, node.col_offset,
+                    )
+                )
+    return findings

@@ -1,0 +1,490 @@
+"""Pallas kernel-hygiene rules (PK...): BlockSpec index maps, divisibility
+guards, pinned-panel constants, and kernel-body host-op bans.
+
+All rules are pure stdlib-``ast`` analyses over the kernel WRAPPER functions
+(the ones containing a ``pl.pallas_call``) and the kernel bodies they launch.
+The rules resolve the file's own import aliases (``pl``, ``pltpu``, ``jnp``,
+``np``) instead of hard-coding names.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.core import Finding, ModuleAliases, rule
+
+__all__ = ["pk001_index_maps", "pk002_divisibility", "pk003_pinned_specs", "pk004_kernel_body"]
+
+
+# ---------------------------------------------------------------------------
+# shared structural helpers
+# ---------------------------------------------------------------------------
+
+
+def _parents(tree: ast.AST) -> dict[ast.AST, ast.AST]:
+    par: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            par[child] = node
+    return par
+
+
+def _enclosing_functions(node: ast.AST, parents: dict) -> list[ast.FunctionDef]:
+    """Innermost-first chain of functions containing ``node``."""
+    chain = []
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            chain.append(cur)
+        cur = parents.get(cur)
+    return chain
+
+
+def _is_attr_call(call: ast.Call, aliases: ModuleAliases, canon: str, attr: str) -> bool:
+    f = call.func
+    return (
+        isinstance(f, ast.Attribute) and f.attr == attr and aliases.is_(f.value, canon)
+    )
+
+
+def _blockspec_calls(fn: ast.AST, aliases: ModuleAliases) -> list[ast.Call]:
+    return [
+        n
+        for n in ast.walk(fn)
+        if isinstance(n, ast.Call) and _is_attr_call(n, aliases, "pallas", "BlockSpec")
+    ]
+
+
+def _pallas_calls(fn: ast.AST, aliases: ModuleAliases) -> list[ast.Call]:
+    return [
+        n
+        for n in ast.walk(fn)
+        if isinstance(n, ast.Call) and _is_attr_call(n, aliases, "pallas", "pallas_call")
+    ]
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _grid_rank(fn: ast.AST, aliases: ModuleAliases) -> Optional[int]:
+    """Grid rank from literal ``grid=`` tuples in the function's pallas_call
+    launches; None when absent, non-literal, or ambiguous."""
+    ranks = set()
+    for pc in _pallas_calls(fn, aliases):
+        grid = _kw(pc, "grid")
+        if isinstance(grid, ast.Tuple):
+            ranks.add(len(grid.elts))
+        else:
+            return None
+    return ranks.pop() if len(ranks) == 1 else None
+
+
+def _index_map(spec: ast.Call) -> Optional[ast.expr]:
+    if len(spec.args) >= 2:
+        return spec.args[1]
+    return _kw(spec, "index_map")
+
+
+def _block_shape(spec: ast.Call) -> Optional[ast.expr]:
+    if spec.args:
+        return spec.args[0]
+    return _kw(spec, "block_shape")
+
+
+def _wrapper_functions(tree: ast.AST, aliases: ModuleAliases) -> list[ast.AST]:
+    """Functions that launch a pallas_call AND are not nested inside another
+    launcher (the launch site's own function is the wrapper)."""
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # a launch inside a nested def belongs to the nested function
+            direct = [
+                pc
+                for pc in _pallas_calls(node, aliases)
+                if not any(
+                    pc in set(ast.walk(inner))
+                    for inner in ast.walk(node)
+                    if isinstance(inner, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and inner is not node
+                )
+            ]
+            if direct:
+                out.append(node)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PK001: index_map purity + grid-rank/block-rank agreement
+# ---------------------------------------------------------------------------
+
+
+@rule("PK001")
+def pk001_index_maps(tree: ast.AST, src: str, path: str) -> list[Finding]:
+    """Every BlockSpec index_map must be a pure lambda whose arity matches
+    the launch grid rank and whose returned tuple matches the block rank.
+
+    Pure means: parameters, constants, arithmetic/comparison/conditional
+    expressions, and ``jnp.where`` — no other calls, no attribute access, no
+    subscripts, no side effects. Impure index maps are re-evaluated by the
+    pipeline emitter and silently break block prefetch.
+    """
+    aliases = ModuleAliases(tree)
+    jnp_names = aliases.names_for("jnp")
+    findings: list[Finding] = []
+
+    for fn in _wrapper_functions(tree, aliases):
+        rank = _grid_rank(fn, aliases)
+        for spec in _blockspec_calls(fn, aliases):
+            imap = _index_map(spec)
+            if imap is None:
+                continue
+            if not isinstance(imap, ast.Lambda):
+                findings.append(
+                    Finding(
+                        "PK001",
+                        "BlockSpec index_map should be an inline lambda so its "
+                        "purity is checkable",
+                        path, imap.lineno, imap.col_offset,
+                    )
+                )
+                continue
+            nargs = len(imap.args.args)
+            if imap.args.vararg is None and rank is not None and nargs != rank:
+                findings.append(
+                    Finding(
+                        "PK001",
+                        f"index_map takes {nargs} args but the launch grid has "
+                        f"rank {rank}",
+                        path, imap.lineno, imap.col_offset,
+                    )
+                )
+            shape = _block_shape(spec)
+            if isinstance(shape, ast.Tuple) and isinstance(imap.body, ast.Tuple):
+                if len(imap.body.elts) != len(shape.elts):
+                    findings.append(
+                        Finding(
+                            "PK001",
+                            f"index_map returns {len(imap.body.elts)} block "
+                            f"coordinates for a rank-{len(shape.elts)} block shape",
+                            path, imap.lineno, imap.col_offset,
+                        )
+                    )
+            findings.extend(_purity_findings(imap, jnp_names, path))
+    return findings
+
+
+def _purity_findings(lam: ast.Lambda, jnp_names: set[str], path: str) -> list[Finding]:
+    allowed_attrs: set[ast.AST] = set()
+    findings: list[Finding] = []
+    for node in ast.walk(lam.body):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if (
+                isinstance(f, ast.Attribute)
+                and f.attr == "where"
+                and isinstance(f.value, ast.Name)
+                and f.value.id in jnp_names
+            ):
+                allowed_attrs.add(f)
+                continue
+            findings.append(
+                Finding(
+                    "PK001",
+                    f"impure index_map: call to "
+                    f"`{ast.unparse(node.func)}` (only jnp.where is allowed)",
+                    path, node.lineno, node.col_offset,
+                )
+            )
+            # the call is already reported; don't double-report its func
+            # expression in the attribute pass below
+            allowed_attrs.update(
+                n for n in ast.walk(node.func) if isinstance(n, ast.Attribute)
+            )
+        elif isinstance(node, ast.Subscript):
+            findings.append(
+                Finding(
+                    "PK001",
+                    "impure index_map: subscript expressions are not allowed",
+                    path, node.lineno, node.col_offset,
+                )
+            )
+    for node in ast.walk(lam.body):
+        if isinstance(node, ast.Attribute) and node not in allowed_attrs:
+            findings.append(
+                Finding(
+                    "PK001",
+                    f"impure index_map: attribute access "
+                    f"`{ast.unparse(node)}` (only jnp.where is allowed)",
+                    path, node.lineno, node.col_offset,
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# PK002: integer-division block shapes need a divisibility guard
+# ---------------------------------------------------------------------------
+
+
+def _has_contract_call(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            name = f.id if isinstance(f, ast.Name) else (
+                f.attr if isinstance(f, ast.Attribute) else None
+            )
+            if name and (
+                name.startswith("validate_") or name in ("divisible", "check_vmem")
+            ):
+                return True
+    return False
+
+
+def _mod_guard_exists(fn: ast.AST, left: ast.expr, right: ast.expr) -> bool:
+    want = (ast.unparse(left), ast.unparse(right))
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assert):
+            for sub in ast.walk(node.test):
+                if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod):
+                    if (ast.unparse(sub.left), ast.unparse(sub.right)) == want:
+                        return True
+    return False
+
+
+@rule("PK002")
+def pk002_divisibility(tree: ast.AST, src: str, path: str) -> list[Finding]:
+    """Every integer division in a BlockSpec shape, ``grid=``, or scratch
+    shape needs an explicit divisibility guard in the wrapper: either an
+    ``assert ... X % Y ...`` or a ``validate_*`` / ``divisible`` /
+    ``check_vmem`` contract call. An unguarded ``X // Y`` that does not
+    divide evenly silently truncates the block and corrupts grid coverage.
+    """
+    aliases = ModuleAliases(tree)
+    findings: list[Finding] = []
+    for fn in _wrapper_functions(tree, aliases):
+        shape_exprs: list[ast.expr] = []
+        for spec in _blockspec_calls(fn, aliases):
+            shape = _block_shape(spec)
+            if shape is not None:
+                shape_exprs.append(shape)
+        for pc in _pallas_calls(fn, aliases):
+            for kw_name in ("grid", "scratch_shapes"):
+                v = _kw(pc, kw_name)
+                if v is not None:
+                    shape_exprs.append(v)
+        guarded = _has_contract_call(fn)
+        for expr in shape_exprs:
+            for node in ast.walk(expr):
+                if isinstance(node, ast.BinOp) and isinstance(node.op, ast.FloorDiv):
+                    if guarded or _mod_guard_exists(fn, node.left, node.right):
+                        continue
+                    findings.append(
+                        Finding(
+                            "PK002",
+                            f"unguarded integer division `{ast.unparse(node)}` in "
+                            "a block/grid/scratch shape: add an assert "
+                            f"`{ast.unparse(node.left)} % "
+                            f"{ast.unparse(node.right)} == 0` or a validate_* "
+                            "contract call to the wrapper",
+                            path, node.lineno, node.col_offset,
+                        )
+                    )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# PK003: pinned-panel BlockSpecs must be constant-zero index maps
+# ---------------------------------------------------------------------------
+
+
+@rule("PK003")
+def pk003_pinned_specs(tree: ast.AST, src: str, path: str) -> list[Finding]:
+    """An index_map that ignores every grid coordinate pins its operand
+    resident in VMEM — and must then be the all-zeros map. A parameter-free
+    index map returning a nonzero or non-constant block index addresses a
+    fixed block other than the operand's origin: almost certainly a bug
+    (the resident-panel kernels rely on ``lambda ...: (0, 0)``).
+    """
+    aliases = ModuleAliases(tree)
+    findings: list[Finding] = []
+    for fn in _wrapper_functions(tree, aliases):
+        for spec in _blockspec_calls(fn, aliases):
+            imap = _index_map(spec)
+            if not isinstance(imap, ast.Lambda):
+                continue
+            params = {a.arg for a in imap.args.args}
+            uses_param = any(
+                isinstance(n, ast.Name) and n.id in params
+                for n in ast.walk(imap.body)
+            )
+            if uses_param:
+                continue
+            elts = (
+                imap.body.elts if isinstance(imap.body, ast.Tuple) else [imap.body]
+            )
+            for e in elts:
+                if not (isinstance(e, ast.Constant) and e.value == 0):
+                    findings.append(
+                        Finding(
+                            "PK003",
+                            "pinned-panel BlockSpec (index_map ignores all grid "
+                            f"coordinates) must return zeros, got "
+                            f"`{ast.unparse(imap.body)}`",
+                            path, imap.lineno, imap.col_offset,
+                        )
+                    )
+                    break
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# PK004: no host ops / Python-float accumulation inside kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _kernel_functions(tree: ast.AST, aliases: ModuleAliases) -> list[ast.AST]:
+    """Kernel bodies: functions whose first parameter is a ``*_ref``, plus
+    whatever a ``pl.pallas_call`` launches (resolved through plain names and
+    ``functools.partial(fn, ...)`` assignments in enclosing scopes)."""
+    parents = _parents(tree)
+    kernels: dict[ast.AST, None] = {}
+
+    defs_by_scope: dict[Optional[ast.AST], dict[str, ast.AST]] = {}
+    partial_by_scope: dict[Optional[ast.AST], dict[str, str]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scope = next(
+                (f for f in _enclosing_functions(node, parents)), None
+            )
+            defs_by_scope.setdefault(scope, {})[node.name] = node
+            if node.args.args and node.args.args[0].arg.endswith("_ref"):
+                kernels[node] = None
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt, val = node.targets[0], node.value
+            if (
+                isinstance(tgt, ast.Name)
+                and isinstance(val, ast.Call)
+                and (
+                    (isinstance(val.func, ast.Attribute) and val.func.attr == "partial")
+                    or (isinstance(val.func, ast.Name) and val.func.id == "partial")
+                )
+                and val.args
+                and isinstance(val.args[0], ast.Name)
+            ):
+                scope = next(
+                    (f for f in _enclosing_functions(node, parents)), None
+                )
+                partial_by_scope.setdefault(scope, {})[tgt.id] = val.args[0].id
+
+    def resolve(name: str, scope_chain: list) -> Optional[ast.AST]:
+        seen = set()
+        scopes = scope_chain + [None]
+        while name not in seen:
+            seen.add(name)
+            for s in scopes:
+                if name in defs_by_scope.get(s, {}):
+                    return defs_by_scope[s][name]
+            for s in scopes:
+                if name in partial_by_scope.get(s, {}):
+                    name = partial_by_scope[s][name]
+                    break
+            else:
+                return None
+        return None
+
+    for pc in [
+        n
+        for n in ast.walk(tree)
+        if isinstance(n, ast.Call) and _is_attr_call(n, aliases, "pallas", "pallas_call")
+    ]:
+        if pc.args and isinstance(pc.args[0], ast.Name):
+            target = resolve(pc.args[0].id, _enclosing_functions(pc, parents))
+            if target is not None:
+                kernels[target] = None
+    return list(kernels)
+
+
+@rule("PK004")
+def pk004_kernel_body(tree: ast.AST, src: str, path: str) -> list[Finding]:
+    """Kernel bodies must stay on-device: no host numpy ops, no ``.item()``
+    or ``block_until_ready`` syncs, no ``print``, and no accumulation into a
+    Python float (which silently hoists the loop to trace-time host math).
+    """
+    aliases = ModuleAliases(tree)
+    np_names = aliases.names_for("np")
+    findings: list[Finding] = []
+    for kfn in _kernel_functions(tree, aliases):
+        float_inits: set[str] = set()
+        for node in ast.walk(kfn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt = node.targets[0]
+                if (
+                    isinstance(tgt, ast.Name)
+                    and isinstance(node.value, ast.Constant)
+                    and isinstance(node.value.value, float)
+                ):
+                    float_inits.add(tgt.id)
+        for node in ast.walk(kfn):
+            if isinstance(node, ast.Attribute) and (
+                isinstance(node.value, ast.Name) and node.value.id in np_names
+            ):
+                findings.append(
+                    Finding(
+                        "PK004",
+                        f"host numpy op `{ast.unparse(node)}` inside a kernel "
+                        "body (use jnp / jax.lax)",
+                        path, node.lineno, node.col_offset,
+                    )
+                )
+            elif isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr in (
+                    "item",
+                    "block_until_ready",
+                ):
+                    findings.append(
+                        Finding(
+                            "PK004",
+                            f"host sync `.{f.attr}()` inside a kernel body",
+                            path, node.lineno, node.col_offset,
+                        )
+                    )
+                elif isinstance(f, ast.Name) and f.id == "print":
+                    findings.append(
+                        Finding(
+                            "PK004",
+                            "print() inside a kernel body (use pl.debug_print)",
+                            path, node.lineno, node.col_offset,
+                        )
+                    )
+                elif (
+                    isinstance(f, ast.Name)
+                    and f.id == "float"
+                    and node.args
+                    and not isinstance(node.args[0], ast.Constant)
+                ):
+                    findings.append(
+                        Finding(
+                            "PK004",
+                            "float(...) on a traced value inside a kernel body",
+                            path, node.lineno, node.col_offset,
+                        )
+                    )
+            elif isinstance(node, ast.AugAssign):
+                tgt = node.target
+                if isinstance(tgt, ast.Name) and tgt.id in float_inits:
+                    findings.append(
+                        Finding(
+                            "PK004",
+                            f"Python-float accumulation into `{tgt.id}` inside a "
+                            "kernel body (initialize with jnp.zeros and "
+                            "accumulate in a VMEM scratch or fori_loop carry)",
+                            path, node.lineno, node.col_offset,
+                        )
+                    )
+    return findings

@@ -1,0 +1,131 @@
+"""Opt-in runtime sanitizers for serving/kernel tests.
+
+Where rules_pallas/rules_engine check source TEXT, these check a LIVE engine:
+
+* :func:`no_recompiles` — fail if a code region traced anything new
+  (per-family compile counts via ``engine.compile_stats()``).
+* :func:`assert_compile_budget` — the ratchet: an engine's lifetime prefill
+  trace count must stay within O(log max_len) buckets per (prefix-offset,
+  frontend) variant.
+* :func:`guarded_decode` — run the decode loop under
+  ``jax.transfer_guard("disallow")``: any device transfer OUTSIDE the
+  engine's explicit ``# sync-point`` sites (which wrap themselves in
+  ``transfer_guard("allow")``) raises instead of silently stalling.
+* :func:`page_invariant_checks` — wrap ``engine.step`` so
+  ``check_page_invariants()`` (refcount/block-table/free-list audit) runs
+  every N steps instead of only when a test remembers to call it.
+
+All are context managers designed for test bodies::
+
+    with guarded_decode(), no_recompiles(engine), page_invariant_checks(engine):
+        while engine.step():
+            pass
+    assert_compile_budget(engine)
+
+This module imports jax and is NOT pulled in by the ``python -m
+repro.analysis`` CLI, which stays stdlib-only.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+
+import jax
+
+__all__ = [
+    "assert_compile_budget",
+    "guarded_decode",
+    "no_recompiles",
+    "page_invariant_checks",
+]
+
+
+class SanitizerError(AssertionError):
+    """A sanitizer-detected hot-path violation."""
+
+
+@contextlib.contextmanager
+def no_recompiles(engine):
+    """Fail if the region traced any new prefill/decode executable.
+
+    Use around steady-state serving (after warmup): every trace inside the
+    region is a recompile the paper's latency numbers never paid for.
+    """
+    before = engine.compile_stats()
+    yield engine
+    after = engine.compile_stats()
+    for key in ("prefill_traces", "decode_traces"):
+        if after[key] > before[key]:
+            raise SanitizerError(
+                f"recompile sanitizer: {key} grew {before[key]} -> "
+                f"{after[key]} inside a no-recompile region "
+                f"(new traces: {after})"
+            )
+
+
+def compile_budget(max_len: int, variants: int) -> int:
+    """The ratchet bound: distinct power-of-two prompt buckets (min 8) plus
+    the capacity bucket, per (prefix-offset, frontend) variant."""
+    buckets = max(1, int(math.log2(max(max_len, 8))) - 2) + 1
+    return max(1, variants) * buckets
+
+
+def assert_compile_budget(engine, max_len: int | None = None) -> dict:
+    """Ratchet an engine's lifetime prefill trace count against the bucket
+    bound. Returns the compile stats it validated (for test logging)."""
+    stats = engine.compile_stats()
+    if max_len is None:
+        max_len = engine.max_len
+    budget = compile_budget(max_len, stats.get("prefill_variants", 1))
+    if stats["prefill_traces"] > budget:
+        raise SanitizerError(
+            f"compile-budget sanitizer: {stats['prefill_traces']} prefill "
+            f"traces exceed the O(log max_len) budget {budget} for "
+            f"max_len={max_len}, variants="
+            f"{stats.get('prefill_variants', 1)} (buckets: "
+            f"{stats['prefill_buckets']}) — prompt bucketing is leaking "
+            "shapes"
+        )
+    return stats
+
+
+@contextlib.contextmanager
+def guarded_decode():
+    """Disallow implicit device transfers for the region. The engine's
+    sanctioned ``# sync-point`` sites run under their own
+    ``transfer_guard("allow")`` scopes, so only UNsanctioned transfers trip
+    the guard."""
+    with jax.transfer_guard("disallow"):
+        yield
+
+
+@contextlib.contextmanager
+def page_invariant_checks(engine, every: int = 1):
+    """Audit page-allocator invariants inside the serving loop.
+
+    Monkeypatches ``engine.step`` so ``check_page_invariants()`` runs after
+    every ``every``-th step (and once more on exit), turning the existing
+    debug hook into an always-on sanitizer for regression tests. No-op for
+    dense (non-paged) engines.
+    """
+    if getattr(engine, "allocator", None) is None:
+        yield engine
+        return
+    orig_step = engine.step
+    count = 0
+
+    def checked_step(*args, **kwargs):
+        nonlocal count
+        out = orig_step(*args, **kwargs)
+        count += 1
+        if count % every == 0:
+            engine.check_page_invariants()
+        return out
+
+    engine.step = checked_step
+    try:
+        yield engine
+        engine.check_page_invariants()
+    finally:
+        engine.step = orig_step

@@ -127,7 +127,9 @@ class CheckpointManager:
         leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
         treedef = leaves_with_path[1]
         keys = [
-            _SEP.join(str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p)))) for p in path)
+            _SEP.join(
+                str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p)))) for p in path
+            )
             for path, _ in leaves_with_path[0]
         ]
         return jax.tree_util.tree_unflatten(treedef, [out_flat[k] for k in keys])

@@ -35,7 +35,9 @@ def groupwise_error_map(x: jax.Array, cfg: QuantConfig) -> jax.Array:
     return jnp.sqrt(jnp.mean(g**2, axis=axis + 1))
 
 
-def error_terms(x, U, V, R, aq: QuantConfig, wq_u: QuantConfig, wq_v: QuantConfig, wq_r: QuantConfig):
+def error_terms(
+    x, U, V, R, aq: QuantConfig, wq_u: QuantConfig, wq_v: QuantConfig, wq_r: QuantConfig
+):
     """The three Eq.-5 terms: activation / low-rank / residual errors."""
     w_hat = U @ V + R
     e_x = quant_error(x, aq)

@@ -110,7 +110,9 @@ def quantize(x: jax.Array, cfg: QuantConfig, scale: Optional[jax.Array] = None) 
     s = jnp.expand_dims(scale, gaxis)
     q = jnp.clip(jnp.round(g / s), -cfg.qmax, cfg.qmax)
     q = q.reshape(x.shape).astype(jnp.int8)
-    return QTensor(q=q, scale=scale, bits=cfg.bits, group_size=cfg.group_size, axis=cfg.axis % x.ndim)
+    return QTensor(
+        q=q, scale=scale, bits=cfg.bits, group_size=cfg.group_size, axis=cfg.axis % x.ndim
+    )
 
 
 def dequantize(t: QTensor, dtype=jnp.float32) -> jax.Array:

@@ -47,6 +47,7 @@ from __future__ import annotations
 import json
 import os
 import time
+import warnings
 from pathlib import Path
 from typing import Callable, Optional
 
@@ -157,9 +158,27 @@ class TuneCache:
             if p.exists():
                 try:
                     doc = json.loads(p.read_text())
-                except (OSError, json.JSONDecodeError):
+                except (OSError, json.JSONDecodeError) as e:
+                    warnings.warn(
+                        f"ignoring unreadable tune cache {p}: {e} "
+                        "(falling back to heuristic blocks)",
+                        stacklevel=3,
+                    )
                     doc = {}
-                if doc.get("schema") != SCHEMA:
+                if not isinstance(doc, dict):
+                    warnings.warn(
+                        f"ignoring tune cache {p}: expected a JSON object, "
+                        f"got {type(doc).__name__} (falling back to heuristic blocks)",
+                        stacklevel=3,
+                    )
+                    doc = {}
+                elif doc and doc.get("schema") != SCHEMA:
+                    warnings.warn(
+                        f"ignoring tune cache {p}: schema "
+                        f"{doc.get('schema')!r} != {SCHEMA} "
+                        "(falling back to heuristic blocks)",
+                        stacklevel=3,
+                    )
                     doc = {}
             else:
                 doc = {}
@@ -171,13 +190,24 @@ class TuneCache:
 
     def lookup(self, key: str) -> Optional[tuple[int, int, int]]:
         kind = key.split("/", 1)[0]
-        entry = self._load(kind)["entries"].get(key)
-        if entry is None:
+        entries = self._load(kind).get("entries")
+        entry = entries.get(key) if isinstance(entries, dict) else None
+        if not isinstance(entry, dict):
             return None
         blocks = entry.get("blocks")
         if not (isinstance(blocks, list) and len(blocks) == 3):
             return None
-        return tuple(int(b) for b in blocks)
+        try:
+            return tuple(int(b) for b in blocks)
+        except (TypeError, ValueError):
+            # garbage values inside a well-shaped entry: treat as a miss (the
+            # dispatch layer degrades to heuristic blocks, never crashes)
+            warnings.warn(
+                f"ignoring malformed tune-cache entry {key!r}: "
+                f"blocks={blocks!r}",
+                stacklevel=2,
+            )
+            return None
 
     def store(self, key: str, blocks: tuple[int, int, int], **meta) -> None:
         kind = key.split("/", 1)[0]

@@ -51,6 +51,11 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.autotune import DECODE_M_MAX, get_blocks
+from repro.kernels.contracts import (
+    check_twinquant_group_pack,
+    check_twinquant_pack,
+    check_w4a16_pack,
+)
 from repro.kernels.ref import (
     TwinQuantGroupWeights,
     TwinQuantWeights,
@@ -114,11 +119,22 @@ def set_fusion(enabled: bool) -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class Route:
-    """A routing decision: which schedule, which blocks, and why."""
+    """A routing decision: which schedule, which blocks, and why.
+
+    ``code`` is the machine-readable fallback reason. For kernel paths it is
+    ``"ok"``; for ref routes it names WHY the oracle ran — ``forced`` /
+    ``k_group`` / ``rank_rgroup`` (shape can never tile) vs
+    ``decode_untileable`` / ``prefill_untileable`` (heuristic_blocks /
+    TuneCache yielded no viable blocks for an otherwise kernel-eligible
+    shape). The counters record ref routes as ``<kind>/ref[<code>]`` in
+    addition to ``<kind>/ref``, so ``routing()`` deltas distinguish an
+    intentional oracle route from a block-selection failure.
+    """
 
     path: str  # "prefill" | "decode" | "ref"
     blocks: Optional[tuple[int, int, int]]  # (bm, bn, bk); None for ref
     reason: str
+    code: str = "ok"
 
 
 # ---------------------------------------------------------------------------
@@ -137,9 +153,15 @@ def reset_dispatch_counters() -> None:
     _counters.clear()
 
 
-def _record(kind: str, path: str) -> None:
-    key = f"{kind}/{path}"
+def _record(kind: str, route: Route) -> None:
+    key = f"{kind}/{route.path}"
     _counters[key] = _counters.get(key, 0) + 1
+    if route.path == PATH_REF:
+        # ref routes additionally record their machine-readable fallback
+        # reason, so a block-selection failure is distinguishable from an
+        # intentional oracle route in routing() deltas
+        rkey = f"{kind}/ref[{route.code}]"
+        _counters[rkey] = _counters.get(rkey, 0) + 1
 
 
 # ---------------------------------------------------------------------------
@@ -152,17 +174,19 @@ def classify_dual(
 ) -> Route:
     """Route a dual-component (M, K) x (K, N) call by shape regime."""
     if k % group != 0 or group % 2 != 0:
-        return Route(PATH_REF, None, f"K={k} not tileable by group={group}")
+        return Route(PATH_REF, None, f"K={k} not tileable by group={group}", "k_group")
     if rank % rgroup != 0 or rgroup % 2 != 0:
-        return Route(PATH_REF, None, f"rank={rank} not tileable by rgroup={rgroup}")
+        return Route(
+            PATH_REF, None, f"rank={rank} not tileable by rgroup={rgroup}", "rank_rgroup"
+        )
     if m <= DECODE_M_MAX:
         blocks = get_blocks("dual_decode", m, n, k, group, rank)
         if blocks is None:
-            return Route(PATH_REF, None, f"N={n} not 128-aligned")
+            return Route(PATH_REF, None, f"N={n} not 128-aligned", "decode_untileable")
         return Route(PATH_DECODE, blocks, f"M={m}<={DECODE_M_MAX}")
     blocks = get_blocks("dual_prefill", m, n, k, group, rank)
     if blocks is None:
-        return Route(PATH_REF, None, f"(N={n}, K={k}) not tileable")
+        return Route(PATH_REF, None, f"(N={n}, K={k}) not tileable", "prefill_untileable")
     return Route(PATH_PREFILL, blocks, f"M={m}>{DECODE_M_MAX}")
 
 
@@ -182,30 +206,36 @@ def classify_dual_group(
     total. Anything untileable routes to the per-segment oracle.
     """
     if k % group != 0 or group % 2 != 0:
-        return Route(PATH_REF, None, f"K={k} not tileable by group={group}")
+        return Route(PATH_REF, None, f"K={k} not tileable by group={group}", "k_group")
     for rj, gr in zip(seg_r, rgroups):
         if rj % gr != 0 or gr % 2 != 0:
-            return Route(PATH_REF, None, f"rank={rj} not tileable by rgroup={gr}")
+            return Route(
+                PATH_REF, None, f"rank={rj} not tileable by rgroup={gr}", "rank_rgroup"
+            )
     ngcd = math.gcd(*seg_n)
     rank = sum(seg_r)
     if m <= DECODE_M_MAX:
         blocks = get_blocks("dual_decode_fused", m, ngcd, k, group, rank)
         if blocks is None:
-            return Route(PATH_REF, None, f"gcd(N)={ngcd} not 128-aligned")
+            return Route(
+                PATH_REF, None, f"gcd(N)={ngcd} not 128-aligned", "decode_untileable"
+            )
         return Route(PATH_DECODE, blocks, f"M={m}<={DECODE_M_MAX}")
     blocks = get_blocks("dual_prefill_fused", m, ngcd, k, group, rank)
     if blocks is None:
-        return Route(PATH_REF, None, f"(gcd(N)={ngcd}, K={k}) not tileable")
+        return Route(
+            PATH_REF, None, f"(gcd(N)={ngcd}, K={k}) not tileable", "prefill_untileable"
+        )
     return Route(PATH_PREFILL, blocks, f"M={m}>{DECODE_M_MAX}")
 
 
 def classify_w4a16(m: int, n: int, k: int, group: int) -> Route:
     """Route a weight-only call: the prefill-style kernel or the oracle."""
     if k % group != 0 or group % 2 != 0:
-        return Route(PATH_REF, None, f"K={k} not tileable by group={group}")
+        return Route(PATH_REF, None, f"K={k} not tileable by group={group}", "k_group")
     blocks = get_blocks("w4a16", m, n, k, group)
     if blocks is None:
-        return Route(PATH_REF, None, f"(N={n}, K={k}) not tileable")
+        return Route(PATH_REF, None, f"(N={n}, K={k}) not tileable", "prefill_untileable")
     return Route(PATH_PREFILL, blocks, "weight-only kernel schedule")
 
 
@@ -257,10 +287,14 @@ def quant_linear(
     """
     k = x.shape[-1]
     n = w.ndim_out
+    # pack-consistency contract: a malformed pack (fields disagreeing with
+    # each other or with the activation's K) raises a ContractError diagnostic
+    # instead of silently falling back to ref or producing garbage numerics
+    check_twinquant_pack(w, k)
     x2, batch_shape, m = _flatten(x)
     explicit = block_m is not None or block_n is not None or block_k is not None
     if impl == "ref":
-        route = Route(PATH_REF, None, "forced impl=ref")
+        route = Route(PATH_REF, None, "forced impl=ref", "forced")
     elif explicit:
         base = get_blocks("dual_prefill", m, n, k, w.group, w.rank) or (
             min(128, m), 128, w.group,
@@ -271,7 +305,7 @@ def quant_linear(
             impl = "kernel"
     else:
         route = classify_dual(m, n, k, w.group, w.rgroup, w.rank)
-    _record("dual", route.path)
+    _record("dual", route)
 
     if interpret is None:
         interpret = default_interpret()
@@ -313,12 +347,15 @@ def fused_linear(
         biases = (None,) * gw.n_segments
     assert len(biases) == gw.n_segments, (len(biases), gw.n_segments)
     k = x.shape[-1]
+    # pack-consistency contract (see quant_linear): malformed fused packs get
+    # a diagnostic, not a silent fallback
+    check_twinquant_group_pack(gw, k)
     x2, batch_shape, m = _flatten(x)
     if impl == "ref":
-        route = Route(PATH_REF, None, "forced impl=ref")
+        route = Route(PATH_REF, None, "forced impl=ref", "forced")
     else:
         route = classify_dual_group(m, k, gw.group, gw.seg_n, gw.seg_r, gw.rgroups)
-    _record("dual_fused", route.path)
+    _record("dual_fused", route)
 
     if interpret is None:
         interpret = default_interpret()
@@ -357,10 +394,12 @@ def w4a16_linear(
     """Weight-only quantized linear: (..., K) -> (..., N) bf16, routed."""
     k = x.shape[-1]
     n = wp.shape[-1]
+    # pack-consistency contract (see quant_linear)
+    check_w4a16_pack(wp, ws, k, group)
     x2, batch_shape, m = _flatten(x)
     explicit = block_m is not None or block_n is not None or block_k is not None
     if impl == "ref":
-        route = Route(PATH_REF, None, "forced impl=ref")
+        route = Route(PATH_REF, None, "forced impl=ref", "forced")
     elif explicit:
         base = get_blocks("w4a16", m, n, k, group) or (min(128, m), 128, group)
         blocks = (block_m or base[0], block_n or base[1], block_k or base[2])
@@ -369,7 +408,7 @@ def w4a16_linear(
             impl = "kernel"
     else:
         route = classify_w4a16(m, n, k, group)
-    _record("w4a16", route.path)
+    _record("w4a16", route)
 
     if interpret is None:
         interpret = default_interpret()

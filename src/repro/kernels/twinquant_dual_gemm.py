@@ -46,6 +46,7 @@ from jax.experimental.pallas import tpu as pltpu
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 from repro.core.quantization import qmax_for_bits
+from repro.kernels.contracts import validate_dual_gemm, validate_dual_gemm_group
 from repro.kernels.ref import TwinQuantGroupWeights, TwinQuantWeights
 
 __all__ = ["dual_gemm", "dual_gemm_group", "DEFAULT_BLOCKS"]
@@ -180,8 +181,9 @@ def dual_gemm(
     n = w.ndim_out
     r = w.rank
     G, gr = w.group, w.rgroup
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (m, n, k)
-    assert block_k % G == 0 and r % gr == 0 and gr % 2 == 0
+    # grid-coverage/divisibility + VMEM-budget contracts (raise ContractError
+    # with the violated relation before Mosaic sees the launch)
+    validate_dual_gemm(m, n, k, r, G, gr, block_m, block_n, block_k)
     n_k = k // block_k
 
     grid = (m // block_m, n // block_n, n_k)
@@ -263,11 +265,9 @@ def dual_gemm_group(
     n_segs = len(seg_n)
     r_total = gw.rank
     n_total = gw.ndim_out
-    assert m % block_m == 0 and k % block_k == 0, (m, k)
-    assert block_k % G == 0
-    for nj, rj, gr in zip(seg_n, seg_r, grs):
-        assert nj % block_n == 0, (nj, block_n)
-        assert rj % gr == 0 and gr % 2 == 0, (rj, gr)
+    # grid-coverage/divisibility + VMEM-budget contracts (per-segment checks
+    # included: block_n must never straddle a segment boundary)
+    validate_dual_gemm_group(m, k, G, seg_n, seg_r, grs, block_m, block_n, block_k)
     n_k = k // block_k
     bm, bn, bk = block_m, block_n, block_k
     gpb = bk // G  # scale groups per K block

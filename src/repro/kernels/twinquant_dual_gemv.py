@@ -38,6 +38,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quantization import qmax_for_bits
 from repro.kernels.autotune import DECODE_M_MAX
+from repro.kernels.contracts import validate_dual_gemv, validate_dual_gemv_group
 from repro.kernels.ref import TwinQuantGroupWeights, TwinQuantWeights
 
 # jax renamed TPUCompilerParams -> CompilerParams; support both vintages
@@ -151,9 +152,9 @@ def dual_gemv(
     n = w.ndim_out
     r = w.rank
     G, gr = w.group, w.rgroup
-    assert m <= DECODE_M_MAX, (m, DECODE_M_MAX)
-    assert n % block_n == 0 and k % G == 0, (m, n, k)
-    assert r % gr == 0 and gr % 2 == 0
+    # divisibility + resident-panel VMEM contracts (raise ContractError with
+    # the violated relation before Mosaic sees the launch)
+    validate_dual_gemv(m, n, k, r, G, gr, block_n, decode_m_max=DECODE_M_MAX)
 
     kernel = functools.partial(
         _dual_gemv_kernel,
@@ -222,11 +223,9 @@ def dual_gemv_group(
     seg_n, seg_r, grs = gw.seg_n, gw.seg_r, gw.rgroups
     n_segs = len(seg_n)
     r_total = gw.rank
-    assert m <= DECODE_M_MAX, (m, DECODE_M_MAX)
-    assert k % G == 0, (k, G)
-    for nj, rj, gr in zip(seg_n, seg_r, grs):
-        assert nj % block_n == 0, (nj, block_n)
-        assert rj % gr == 0 and gr % 2 == 0, (rj, gr)
+    # divisibility + resident-panel VMEM contracts (per-segment checks
+    # included: block_n must never straddle a segment boundary)
+    validate_dual_gemv_group(m, k, G, seg_n, seg_r, grs, block_n, decode_m_max=DECODE_M_MAX)
     n_groups = k // G
     bn = block_n
     # static segment tables: N-block ownership, rank offsets, H-scale offsets

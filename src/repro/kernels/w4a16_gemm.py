@@ -19,6 +19,8 @@ from jax.experimental.pallas import tpu as pltpu
 # jax renamed TPUCompilerParams -> CompilerParams; support both vintages
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
+from repro.kernels.contracts import validate_w4a16
+
 __all__ = ["w4a16_gemm"]
 
 
@@ -67,8 +69,9 @@ def w4a16_gemm(
     """x: (M, K) bf16; wp: (K/2, N) packed int4; ws: (K/G, N) f32 -> (M, N) bf16."""
     m, k = x.shape
     n = wp.shape[1]
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
-    assert block_k % group == 0
+    # grid-coverage/divisibility + VMEM-budget contracts (raise ContractError
+    # with the violated relation before Mosaic sees the launch)
+    validate_w4a16(m, n, k, group, block_m, block_n, block_k)
     n_k = k // block_k
 
     kernel = functools.partial(_w4a16_kernel, bk=block_k, G=group, n_k=n_k)

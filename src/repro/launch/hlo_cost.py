@@ -260,7 +260,8 @@ class HloCost:
                 # counting the full result overcounts by S per decode step
                 res_elems = shape_elems(ins.shape)
                 for inner in self.comps[cm.group(1)]:
-                    if inner.opcode == "dynamic-update-slice" and shape_elems(inner.shape) == res_elems:
+                    is_dus = inner.opcode == "dynamic-update-slice"
+                    if is_dus and shape_elems(inner.shape) == res_elems:
                         iops = inner.operands()
                         upd = self.symtab[cm.group(1)].get(iops[1], "") if len(iops) > 1 else ""
                         b = 2 * shape_bytes(upd)
@@ -269,7 +270,10 @@ class HloCost:
         for pos, op in enumerate(ins.operands()):
             if pos in eff:
                 b += eff[pos]
-            elif inplace_dus and shape_elems(self.symtab[comp].get(op, "")) == shape_elems(ins.shape):
+            elif (
+                inplace_dus
+                and shape_elems(self.symtab[comp].get(op, "")) == shape_elems(ins.shape)
+            ):
                 pass  # the aliased big operand — not re-read
             else:
                 b += shape_bytes(self.symtab[comp].get(op, ""))

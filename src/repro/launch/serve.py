@@ -526,7 +526,7 @@ class ContinuousBatchingEngine:
         self._prefill_traces[key] = self._prefill_traces.get(key, 0) + 1
         t0 = time.monotonic()
         logits, sub = self._prefill(self.params, jnp.asarray(toks), self._sub_template, **kwargs)
-        last = np.asarray(logits[0, -1].astype(jnp.float32))  # sync point
+        last = np.asarray(logits[0, -1].astype(jnp.float32))  # sync-point
         self.stats["prefill_s"] += time.monotonic() - t0
         self.stats["prefill_tokens"] += s_real
         return last, sub, bucket
@@ -625,10 +625,14 @@ class ContinuousBatchingEngine:
         if self.allocator is not None:
             self.allocator.release([int(p) for p in self._bt[i] if p >= 0])
             self._bt[i, :] = -1
-            self.state["bt"] = jnp.asarray(self._bt)
-            # neutralize the freed slot: pos 0 + unmapped block table means
-            # its lock-step garbage decode attends nothing and writes nowhere
-            self.state["pos"] = self.state["pos"].at[i].set(0)
+            # block-table upload is a sanctioned eviction-time transfer: the
+            # transfer-guard sanitizer keeps the rest of the decode loop
+            # transfer-free (see analysis/sanitizers.guarded_decode)
+            with jax.transfer_guard("allow"):
+                self.state["bt"] = jnp.asarray(self._bt)
+                # neutralize the freed slot: pos 0 + unmapped block table means
+                # its lock-step garbage decode attends nothing and writes nowhere
+                self.state["pos"] = self.state["pos"].at[i].set(0)
 
     def step(self) -> int:
         """Admit queued work, sample one token per active slot, then one
@@ -639,7 +643,8 @@ class ContinuousBatchingEngine:
         if not active:
             return 0
         tok = np.zeros((self.batch, 1), np.int32)
-        pos = np.asarray(self.state["pos"])  # next write offset per slot
+        with jax.transfer_guard("allow"):
+            pos = np.asarray(self.state["pos"])  # sync-point: next write offset per slot
         live = []
         for i in active:
             req = self.slots[i]
@@ -657,8 +662,9 @@ class ContinuousBatchingEngine:
                 live.append(i)
         if live:
             t0 = time.monotonic()
-            logits, self.state = self._decode(self.params, self.state, jnp.asarray(tok))
-            last = np.asarray(logits[:, -1].astype(jnp.float32))  # sync point
+            with jax.transfer_guard("allow"):
+                logits, self.state = self._decode(self.params, self.state, jnp.asarray(tok))
+                last = np.asarray(logits[:, -1].astype(jnp.float32))  # sync-point
             self.stats["decode_s"] += time.monotonic() - t0
             self.stats["decode_steps"] += 1
             self.stats["decode_tokens"] += len(live)
@@ -703,6 +709,9 @@ class ContinuousBatchingEngine:
             "prefill_traces": len(self._prefill_traces),
             "prefill_calls": sum(self._prefill_traces.values()),
             "prefill_buckets": sorted({k[0] for k in self._prefill_traces}),
+            # distinct (prefix-offset, frontend) variants: the recompile
+            # sanitizer's budget is O(log max_len) buckets PER variant
+            "prefill_variants": len({k[1:] for k in self._prefill_traces}),
             "decode_traces": 1 if self.stats["decode_steps"] else 0,
         }
 

@@ -216,7 +216,8 @@ def decode_state_specs(cfg: ModelConfig, state_tree, ctx: MeshContext, *,
         if "shared_" in s or s.endswith(("k", "v", "xk", "xv")) and len(shape) == 5:
             # (L, B, S, KV, hd)
             if seq_shard:
-                return _fit(P(None, None, tuple(ctx.dp_axes) + ((m,) if m else ()), None, None), shape, ctx)
+                spec = P(None, None, tuple(ctx.dp_axes) + ((m,) if m else ()), None, None)
+                return _fit(spec, shape, ctx)
             kv = shape[3]
             if m and kv % _axis_size(ctx, m) == 0:
                 return _fit(P(None, dp, None, m, None), shape, ctx)
@@ -224,7 +225,8 @@ def decode_state_specs(cfg: ModelConfig, state_tree, ctx: MeshContext, *,
         if s.endswith(("ckv", "krope")) and len(shape) == 4:
             # MLA latent cache (L, B, S, r): batch over dp, seq over model
             if seq_shard:
-                return _fit(P(None, None, tuple(ctx.dp_axes) + ((m,) if m else ()), None), shape, ctx)
+                spec = P(None, None, tuple(ctx.dp_axes) + ((m,) if m else ()), None)
+                return _fit(spec, shape, ctx)
             return _fit(P(None, dp, m, None), shape, ctx)
         if s.endswith(("mC", "mn", "mm")):
             # xlstm matrix state (..., B, H, dh[, dh]): batch dp, value dim model

@@ -257,7 +257,8 @@ def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> ja
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.var(xf, axis=-1, keepdims=True)
-    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype) + b.astype(x.dtype)
+    norm = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return norm * w.astype(x.dtype) + b.astype(x.dtype)
 
 
 def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
@@ -682,7 +683,8 @@ def attention_decode_ro(p: dict, x: jax.Array, cfg: ModelConfig, k_cache, v_cach
     ps = jnp.exp(logit_s - m)
     den = jnp.sum(pc, axis=-1, keepdims=True) + ps
     out = jnp.einsum("bkgst,btkh->bskgh", (pc / den).astype(v_cache.dtype), v_cache)
-    out = out + (ps / den)[..., 0][..., None].transpose(0, 3, 1, 2, 4).astype(vt.dtype) * vt[:, :, :, None, :]
+    self_w = (ps / den)[..., 0][..., None].transpose(0, 3, 1, 2, 4).astype(vt.dtype)
+    out = out + self_w * vt[:, :, :, None, :]
     out = out.reshape(b, sq, h, hd)
     return linear(p["o"], out.reshape(b, sq, h * hd)), kt, vt
 

@@ -255,7 +255,9 @@ def count_params(cfg: ModelConfig):
     expert = 3 * d * cfg.d_ff_expert
     nd, nm = cfg.first_k_dense, cfg.n_layers - cfg.first_k_dense
     shared = cfg.n_shared_experts * expert
-    total = nd * (attn + dense_mlp) + nm * (attn + cfg.n_experts * expert + shared + d * cfg.n_experts)
+    total = nd * (attn + dense_mlp) + nm * (
+        attn + cfg.n_experts * expert + shared + d * cfg.n_experts
+    )
     active = nd * (attn + dense_mlp) + nm * (attn + cfg.top_k * expert + shared + d * cfg.n_experts)
     emb = cfg.padded_vocab * d * 2
     return total + emb, active + emb

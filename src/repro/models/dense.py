@@ -65,7 +65,9 @@ def _embed(params, cfg: ModelConfig, tokens: jax.Array, patches=None) -> jax.Arr
 def head_fn(params, cfg: ModelConfig):
     """Chunk-applicable unembed: (B, c, D) -> (B, c, V)."""
     if cfg.tie_embeddings:
-        return lambda xc: jnp.einsum("bsd,vd->bsv", xc, C.embed_attend(params["embed"]).astype(xc.dtype))
+        return lambda xc: jnp.einsum(
+            "bsd,vd->bsv", xc, C.embed_attend(params["embed"]).astype(xc.dtype)
+        )
     return lambda xc: C.linear(params["head"], xc)
 
 

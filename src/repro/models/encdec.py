@@ -33,7 +33,8 @@ def _gelu_mlp_init(key, d, f):
 
 
 def _gelu_mlp(p, x):
-    return C.linear(p["down"], jax.nn.gelu(C.linear(p["up"], x).astype(jnp.float32)).astype(x.dtype))
+    h = jax.nn.gelu(C.linear(p["up"], x).astype(jnp.float32)).astype(x.dtype)
+    return C.linear(p["down"], h)
 
 
 def _enc_layer_init(key, cfg):
@@ -130,7 +131,8 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, frames: jax.Array
         body = jax.checkpoint(body)
     x, _ = jax.lax.scan(body, x, params["dec_layers"])
     x = _ln(params["ln_f"], x, cfg.norm_eps)
-    return jnp.einsum("bsd,vd->bsv", x, C.embed_attend(params["embed"]).astype(x.dtype))  # tied head
+    # tied head
+    return jnp.einsum("bsd,vd->bsv", x, C.embed_attend(params["embed"]).astype(x.dtype))
 
 
 def _hidden(params: dict, cfg: ModelConfig, tokens: jax.Array, frames: jax.Array):

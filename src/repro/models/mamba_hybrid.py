@@ -416,10 +416,14 @@ def prefill(params, cfg: ModelConfig, tokens, state, length=None):
 
 def count_params(cfg: ModelConfig):
     d, di, n, h_ssm = cfg.d_model, cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads
-    m_layer = d * (2 * di + 2 * n + h_ssm) + cfg.ssm_conv * (di + 2 * n) + 3 * h_ssm + di * d + di + d
+    m_layer = (
+        d * (2 * di + 2 * n + h_ssm) + cfg.ssm_conv * (di + 2 * n) + 3 * h_ssm + di * d + di + d
+    )
     n_seg, every, rest = _segments(cfg)
     d2, hhd = 2 * d, cfg.n_heads * cfg.head_dim
     shared = 3 * d2 * hhd + hhd * hhd + 2 * d2 * cfg.d_ff + cfg.d_ff * hhd + 2 * d2
     adapters = n_seg * hhd * d
-    total = cfg.n_layers * m_layer + (shared if n_seg else 0) + adapters + cfg.padded_vocab * d * 2 + d
+    total = (
+        cfg.n_layers * m_layer + (shared if n_seg else 0) + adapters + cfg.padded_vocab * d * 2 + d
+    )
     return total, total

@@ -1,0 +1,285 @@
+"""quantcheck self-tests: every rule must flag its known-bad fixture, stay
+quiet on the idiomatic-good twin, and the full catalog must run clean on the
+repo's own src/ tree (the blocking `analyze` CI lane contract)."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze_source, all_rules, render_json
+from repro.analysis.core import analyze_paths
+
+REPO = Path(__file__).resolve().parents[1]
+
+HEADER = """
+import functools
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+"""
+
+
+def findings_for(snippet: str, rule: str | None = None):
+    out = analyze_source(HEADER + snippet, "fixture.py")
+    if rule is not None:
+        out = [f for f in out if f.rule == rule]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PK001: index_map arity / block-rank / purity
+# ---------------------------------------------------------------------------
+
+GOOD_WRAPPER = """
+def _kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+def launch(x, m, n, bm, bn):
+    validate_blocks(m, n, bm, bn)
+    return pl.pallas_call(
+        _kern,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda mi, ni: (mi, ni))],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+    )(x)
+"""
+
+
+def test_good_wrapper_is_clean():
+    assert findings_for(GOOD_WRAPPER) == []
+
+
+def test_pk001_arity_mismatch():
+    bad = GOOD_WRAPPER.replace(
+        "in_specs=[pl.BlockSpec((bm, bn), lambda mi, ni: (mi, ni))]",
+        "in_specs=[pl.BlockSpec((bm, bn), lambda mi: (mi, 0))]",
+    )
+    msgs = [f.message for f in findings_for(bad, "PK001")]
+    assert any("grid has rank 2" in m for m in msgs), msgs
+
+
+def test_pk001_block_rank_mismatch():
+    bad = GOOD_WRAPPER.replace(
+        "in_specs=[pl.BlockSpec((bm, bn), lambda mi, ni: (mi, ni))]",
+        "in_specs=[pl.BlockSpec((bm, bn), lambda mi, ni: (mi, ni, 0))]",
+    )
+    msgs = [f.message for f in findings_for(bad, "PK001")]
+    assert any("3 block coordinates" in m for m in msgs), msgs
+
+
+def test_pk001_impure_index_map():
+    bad = GOOD_WRAPPER.replace(
+        "lambda mi, ni: (mi, ni))]",
+        "lambda mi, ni: (mi, int(np.sqrt(ni))))]",
+    )
+    msgs = [f.message for f in findings_for(bad, "PK001")]
+    assert any("impure index_map" in m for m in msgs), msgs
+
+
+def test_pk001_jnp_where_is_pure():
+    good = GOOD_WRAPPER.replace(
+        "lambda mi, ni: (mi, ni))]",
+        "lambda mi, ni: (mi, jnp.where(ni == 0, ni, 0)))]",
+    )
+    assert findings_for(good, "PK001") == []
+
+
+# ---------------------------------------------------------------------------
+# PK002: unguarded integer-division block shapes
+# ---------------------------------------------------------------------------
+
+
+def test_pk002_unguarded_division():
+    bad = GOOD_WRAPPER.replace("validate_blocks(m, n, bm, bn)\n    ", "").replace(
+        "pl.BlockSpec((bm, bn), lambda mi, ni: (mi, ni))]",
+        "pl.BlockSpec((bm, bn // 2), lambda mi, ni: (mi, ni))]",
+    )
+    msgs = [f.message for f in findings_for(bad, "PK002")]
+    assert any("bn // 2" in m for m in msgs), msgs
+
+
+def test_pk002_assert_guard_accepted():
+    guarded = GOOD_WRAPPER.replace(
+        "validate_blocks(m, n, bm, bn)",
+        "assert bn % 2 == 0",
+    ).replace(
+        "pl.BlockSpec((bm, bn), lambda mi, ni: (mi, ni))]",
+        "pl.BlockSpec((bm, bn // 2), lambda mi, ni: (mi, ni))]",
+    )
+    # the grid divisions lost their guard with the validate call removed and
+    # are still flagged; the asserted `bn // 2` division must NOT be
+    msgs = [f.message for f in findings_for(guarded, "PK002")]
+    assert not any("bn // 2" in m for m in msgs), msgs
+    assert any("m // bm" in m for m in msgs), msgs
+
+
+def test_pk002_contract_call_accepted():
+    # the validate_* call in GOOD_WRAPPER guards ALL divisions in the launch
+    guarded = GOOD_WRAPPER.replace(
+        "pl.BlockSpec((bm, bn), lambda mi, ni: (mi, ni))]",
+        "pl.BlockSpec((bm, bn // 2), lambda mi, ni: (mi, ni))]",
+    )
+    assert findings_for(guarded, "PK002") == []
+
+
+# ---------------------------------------------------------------------------
+# PK003: pinned-panel specs must be constant-zero maps
+# ---------------------------------------------------------------------------
+
+
+def test_pk003_nonzero_pinned_spec():
+    bad = GOOD_WRAPPER.replace(
+        "in_specs=[pl.BlockSpec((bm, bn), lambda mi, ni: (mi, ni))]",
+        "in_specs=[pl.BlockSpec((bm, bn), lambda mi, ni: (1, 0))]",
+    )
+    msgs = [f.message for f in findings_for(bad, "PK003")]
+    assert any("must return zeros" in m for m in msgs), msgs
+
+
+def test_pk003_zero_pinned_spec_ok():
+    good = GOOD_WRAPPER.replace(
+        "in_specs=[pl.BlockSpec((bm, bn), lambda mi, ni: (mi, ni))]",
+        "in_specs=[pl.BlockSpec((bm, bn), lambda mi, ni: (0, 0))]",
+    )
+    assert findings_for(good, "PK003") == []
+
+
+# ---------------------------------------------------------------------------
+# PK004: kernel-body hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_pk004_host_ops_in_kernel():
+    bad = """
+def _kern(x_ref, o_ref):
+    v = np.sum(x_ref[...])
+    v2 = x_ref[...].item()
+    o_ref[...] = x_ref[...] * v * v2
+"""
+    msgs = [f.message for f in findings_for(bad, "PK004")]
+    assert any("host numpy op" in m for m in msgs), msgs
+    assert any(".item()" in m for m in msgs), msgs
+
+
+def test_pk004_python_float_accumulation():
+    bad = """
+def _kern(x_ref, o_ref):
+    acc = 0.0
+    for g in range(4):
+        acc += float(x_ref[0, g])
+    o_ref[0, 0] = acc
+"""
+    msgs = [f.message for f in findings_for(bad, "PK004")]
+    assert any("Python-float accumulation" in m for m in msgs), msgs
+
+
+def test_pk004_resolves_partial_kernels():
+    # a kernel bound via functools.partial and launched by name is still seen
+    bad = """
+def _impl(x_ref, o_ref, *, c):
+    bad = np.ones(3)
+    o_ref[...] = x_ref[...] * c * bad[0]
+
+def launch(x, m, n):
+    kernel = functools.partial(_impl, c=2)
+    return pl.pallas_call(
+        kernel,
+        grid=(m, n),
+        in_specs=[pl.BlockSpec((1, 1), lambda mi, ni: (mi, ni))],
+        out_specs=pl.BlockSpec((1, 1), lambda mi, ni: (mi, ni)),
+        out_shape=None,
+    )(x)
+"""
+    msgs = [f.message for f in findings_for(bad, "PK004")]
+    assert any("host numpy op" in m for m in msgs), msgs
+
+
+# ---------------------------------------------------------------------------
+# EN001/EN002: engine step hygiene
+# ---------------------------------------------------------------------------
+
+ENGINE_FIXTURE = """
+class ToyEngine:
+    def step(self):
+        tok = np.zeros((4, 1), np.int32)
+        pos = np.asarray(self.state["pos"])
+        logits = self.decode(tok)
+        last = np.asarray(logits)  # sync-point
+        return last, pos
+"""
+
+
+def test_en001_unmarked_sync_flagged_marked_allowed():
+    found = findings_for(ENGINE_FIXTURE, "EN001")
+    # np.zeros is not a sync; the unmarked np.asarray is; the marked one isn't
+    assert len(found) == 1, [f.human() for f in found]
+    assert "np.asarray" in found[0].message
+
+
+def test_en002_jit_in_step():
+    bad = """
+class ToyEngine:
+    def step(self):
+        f = jax.jit(self._fn)
+        return f()
+"""
+    msgs = [f.message for f in findings_for(bad, "EN002")]
+    assert any("jax.jit constructed" in m for m in msgs), msgs
+
+
+def test_en_rules_ignore_non_engine_classes():
+    harmless = ENGINE_FIXTURE.replace("ToyEngine", "ToyDriver")
+    assert findings_for(harmless, "EN001") == []
+
+
+# ---------------------------------------------------------------------------
+# catalog / CLI / repo-clean contracts
+# ---------------------------------------------------------------------------
+
+
+def test_rule_catalog_complete():
+    assert set(all_rules()) == {"PK001", "PK002", "PK003", "PK004", "EN001", "EN002"}
+
+
+def test_repo_src_is_clean():
+    findings, n_files = analyze_paths([str(REPO / "src")])
+    assert n_files > 0
+    assert findings == [], "\n".join(f.human() for f in findings)
+
+
+def test_json_report_shape():
+    findings, n = analyze_paths([str(REPO / "src" / "repro" / "kernels")])
+    doc = json.loads(render_json(findings, n))
+    assert doc["schema"] == 1 and doc["files"] == n and doc["findings"] == []
+
+
+@pytest.mark.parametrize("clean", [True, False])
+def test_cli_exit_codes(tmp_path, clean):
+    target = tmp_path / "mod.py"
+    if clean:
+        target.write_text("x = 1\n")
+    else:
+        target.write_text(HEADER + ENGINE_FIXTURE)
+    report = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(target), "--json", str(report)],
+        capture_output=True,
+        text=True,
+        cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert proc.returncode == (0 if clean else 1), proc.stdout + proc.stderr
+    doc = json.loads(report.read_text())
+    assert (len(doc["findings"]) == 0) == clean
+
+
+def test_parse_error_is_a_finding():
+    bad = "def broken(:\n"
+    found = analyze_source(bad, "broken.py")
+    assert found and found[0].rule == "PARSE"

@@ -98,7 +98,9 @@ def test_decomposition_reconstructs_exactly():
     key = jax.random.PRNGKey(0)
     w = jax.random.normal(key, (64, 48))
     d = decompose(w, rank=8)
-    np.testing.assert_allclose(np.asarray(d.reconstruct()), np.asarray(w * d.lam[:, None]), atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(d.reconstruct()), np.asarray(w * d.lam[:, None]), atol=1e-4
+    )
 
 
 def test_svd_rank_reduces_residual_energy():

@@ -18,6 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.sanitizers import (
+    assert_compile_budget,
+    guarded_decode,
+    page_invariant_checks,
+)
 from repro.configs import ModelConfig, get_config
 from repro.launch.serve import (
     ContinuousBatchingEngine,
@@ -56,18 +61,25 @@ def _solo(cfg, params, prompt, max_new=8):
 
 
 def _interleaved_paged(cfg, params, a, b, max_new, **engine_kwargs):
-    """Admit b while a is mid-generation on a paged engine; return outputs."""
+    """Admit b while a is mid-generation on a paged engine; return outputs.
+
+    The whole serving loop runs under the page-invariant sanitizer (the
+    allocator audit fires after EVERY step, not just at the end), and the
+    post-admission decode phase under the transfer-guard sanitizer."""
     eng = ContinuousBatchingEngine(
         cfg, params, batch_slots=2, max_len=64, paged=True, **engine_kwargs
     )
-    ra = Request(jnp.asarray(a, jnp.int32), max_new=max_new)
-    eng.submit(ra)
-    for _ in range(2):
-        eng.step()
-    rb = Request(jnp.asarray(b, jnp.int32), max_new=max_new)
-    eng.submit(rb)
-    eng.run_until_done()
-    eng.check_page_invariants()
+    with page_invariant_checks(eng):
+        ra = Request(jnp.asarray(a, jnp.int32), max_new=max_new)
+        eng.submit(ra)
+        for _ in range(2):
+            eng.step()
+        rb = Request(jnp.asarray(b, jnp.int32), max_new=max_new)
+        eng.submit(rb)
+        # all admissions done: any device transfer from here on that is not a
+        # marked sync-point is a hidden decode stall and raises
+        with guarded_decode():
+            eng.run_until_done()
     assert ra.done and rb.done
     return ra.out, rb.out, eng
 
@@ -441,5 +453,7 @@ def test_bucketed_prefill_compile_stats(params):
     assert cs["prefill_calls"] == len(prompts)
     assert cs["prefill_traces"] <= 3, cs  # buckets 8 and 16 only
     assert set(cs["prefill_buckets"]) <= {8, 16}
+    # the ratchet form of the same bound: O(log max_len) per variant
+    assert_compile_budget(eng)
     for p, r in zip(prompts, reqs):
         assert r.out == _solo(CFG, params, p, max_new=3)

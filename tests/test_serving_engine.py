@@ -167,3 +167,38 @@ def test_engine_recurrent_family():
     eng.run_until_done()
     assert ra.out == solo_a
     assert rb.out == solo_b
+
+
+def test_decode_loop_sanitized(params):
+    """The steady-state decode loop passes the hot-path sanitizers: no device
+    transfers outside the marked sync-points, no recompiles after warmup, and
+    the lifetime prefill trace count inside the bucket ratchet."""
+    from repro.analysis.sanitizers import (
+        SanitizerError,
+        assert_compile_budget,
+        guarded_decode,
+        no_recompiles,
+    )
+
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64)
+    ra = Request(jnp.asarray(list(range(10, 18)), jnp.int32), max_new=6)
+    rb = Request(jnp.asarray([3, 4, 5], jnp.int32), max_new=6)
+    eng.submit(ra)
+    eng.submit(rb)
+    eng.step()  # warmup: traces the decode executable
+    with guarded_decode(), no_recompiles(eng):
+        eng.run_until_done()
+    assert ra.done and rb.done
+    assert_compile_budget(eng)
+
+    # the recompile sanitizer actually bites: a NEW bucket inside the guarded
+    # region (a 33-token prompt forces the 64 bucket) must raise
+    eng2 = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64)
+    eng2.submit(Request(jnp.asarray([1, 2, 3], jnp.int32), max_new=2))
+    eng2.step()
+    with pytest.raises(SanitizerError, match="prefill_traces"):
+        with no_recompiles(eng2):
+            eng2.submit(
+                Request(jnp.asarray(list(range(1, 34)), jnp.int32), max_new=2)
+            )
+            eng2.run_until_done()
