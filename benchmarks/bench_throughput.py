@@ -225,18 +225,120 @@ def run_paged(fused: bool = True) -> dict:
     return out
 
 
-def run(quick: bool = False, fused: bool = True, paged: bool = False) -> dict:
+def run_burst(fused: bool = True) -> dict:
+    """Ragged-engine burst lane: 3 steady decoders + 1 long-prompt burst.
+
+    The unified step schedules decode rows FIRST and fills the rest of the
+    token budget with prompt chunks, so admitting a long prompt must not
+    displace a single decode token — ``min_decode_per_step`` during
+    admission equals the steady decoder count (deterministic; a drop is a
+    scheduling bug and fails here, not a metric). Wall-clock decode tok/s in
+    the admission region vs the steady region (``burst_ratio``) is the flat
+    decode-latency claim compare.py gates: one padded launch shape means
+    streaming a prompt in costs chunk rows, not extra executables."""
+    from repro.configs import QuantSpec
+    from repro.core.twinquant import fuse_params, quantize_params
+    from repro.kernels.dispatch import set_fusion
+    from repro.launch.serve import ContinuousBatchingEngine, Request
+    from repro.models import dense
+
+    cfg = BENCH_CFG
+    params = dense.init_params(cfg, jax.random.PRNGKey(0))
+    qparams = quantize_params(params, cfg, QuantSpec(mode="w4a4", rank=32))
+    if fused:
+        qparams = fuse_params(qparams)
+    prev = set_fusion(fused)
+    try:
+        eng = ContinuousBatchingEngine(
+            cfg, qparams, batch_slots=4, max_len=256, paged=True, page_size=16,
+            ragged=True, token_budget=64,
+        )
+        if not eng.ragged:
+            raise RuntimeError("burst lane requires ragged mode (fell back?)")
+        steady = [
+            Request(jnp.asarray([(11 * k + 5 + t) % cfg.vocab for t in range(8)],
+                                jnp.int32), max_new=48)
+            for k in range(3)
+        ]
+        for r in steady:
+            eng.submit(r)
+        eng.step()  # warmup: prefills all steady prompts, traces the step
+        assert all(r._last_logits is not None for r in steady)
+
+        # steady region: decoders only, fixed number of steps
+        steady_tokens = []
+        t0 = time.monotonic()
+        for _ in range(8):
+            before = eng.stats["decode_tokens"]
+            eng.step()
+            steady_tokens.append(eng.stats["decode_tokens"] - before)
+        steady_dt = time.monotonic() - t0
+
+        # burst: one long prompt streams in as chunks while decode continues
+        burst = Request(
+            jnp.asarray([(7 * t + 3) % cfg.vocab for t in range(160)], jnp.int32),
+            max_new=8,
+        )
+        eng.submit(burst)
+        burst_tokens = []
+        t0 = time.monotonic()
+        while burst._last_logits is None:
+            before = eng.stats["decode_tokens"]
+            eng.step()
+            burst_tokens.append(eng.stats["decode_tokens"] - before)
+        burst_dt = time.monotonic() - t0
+        eng.run_until_done()
+        eng.check_page_invariants()
+        cs = eng.compile_stats()
+    finally:
+        set_fusion(prev)
+
+    steady_tok_s = sum(steady_tokens) / max(steady_dt, 1e-9)
+    burst_tok_s = sum(burst_tokens) / max(burst_dt, 1e-9)
+    out = {
+        "steady_decoders": len(steady),
+        "steady_decode_tok_s": steady_tok_s,
+        "burst_decode_tok_s": burst_tok_s,
+        "burst_ratio": burst_tok_s / max(steady_tok_s, 1e-9),
+        "admission_steps": len(burst_tokens),
+        "min_decode_per_step": min(burst_tokens),
+        "decode_per_step_flat": min(burst_tokens) == len(steady),
+        "ragged_traces": cs["ragged_traces"],
+        "prefill_traces": cs["prefill_traces"],
+    }
+    if not out["decode_per_step_flat"]:
+        raise RuntimeError(
+            f"burst admission displaced decode tokens: per-step decode counts "
+            f"{burst_tokens} dropped below the {len(steady)} live decoders"
+        )
+    if cs["ragged_traces"] != 1 or cs["prefill_traces"] != 0:
+        raise RuntimeError(
+            f"burst lane traced extra executables (compile stats: {cs})"
+        )
+    emit("throughput/burst", 1e6 / max(burst_tok_s, 1e-9),
+         f"decode={burst_tok_s:.1f}tok/s(admission) vs {steady_tok_s:.1f}(steady) "
+         f"ratio={out['burst_ratio']:.2f} steps={out['admission_steps']} "
+         f"min_decode/step={out['min_decode_per_step']}")
+    return out
+
+
+def run(quick: bool = False, fused: bool = True, paged: bool = False,
+        burst: bool = False) -> dict:
     """``quick=True`` (the CI bench lane) runs only the measured engine
     sweep — the gated metrics; the full run adds the derived roofline grid.
     ``fused`` toggles horizontal projection fusion for the engine sweep;
     ``paged`` adds the paged-vs-dense mixed-prompt workload (the
-    BENCH_PAGED.json lane)."""
+    BENCH_PAGED.json lane); ``burst`` the ragged long-prompt-admission lane
+    (BENCH_BURST.json)."""
     if quick:
-        # the paged quick lane is paged-ONLY: the b{1,4,8} engine sweep
-        # already ran (and was gated) in the BENCH_PR lane, and re-gating a
-        # duplicate sweep would double the exposure to machine-noise one-offs
+        # the paged/burst quick lanes are single-purpose: the b{1,4,8} engine
+        # sweep already ran (and was gated) in the BENCH_PR lane, and
+        # re-gating a duplicate sweep would double the exposure to
+        # machine-noise one-offs
         if paged:
             return {"paged": run_paged(fused=fused), "fused": fused}
+        if burst:
+            return {"burst": run_burst(fused=fused), "fused": fused}
         return {"engine_measured": run_engine(fused=fused), "fused": fused}
     cfg = get_config("llama3-8b")
     results = {}
@@ -265,6 +367,8 @@ def run(quick: bool = False, fused: bool = True, paged: bool = False) -> dict:
     out = {"roofline": results, "engine_measured": engine, "fused": fused}
     if paged:
         out["paged"] = run_paged(fused=fused)
+    if burst:
+        out["burst"] = run_burst(fused=fused)
     ART.mkdir(parents=True, exist_ok=True)
     (ART / "bench_throughput.json").write_text(json.dumps(out, indent=2))
     for k, v in results.items():

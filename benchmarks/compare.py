@@ -134,6 +134,48 @@ def check_paged(
     return issues, warns
 
 
+def check_burst(
+    base: dict, cand: dict, min_ratio: float = 0.8
+) -> tuple[list[str], list[str]]:
+    """Burst-lane gate (BENCH_BURST.json): the ragged engine's decode rate
+    must stay flat while a long prompt streams in. Two machine-independent
+    booleans always fail hard — per-step decode counts never dropped below
+    the live decoder count during admission, and the whole lifetime compiled
+    exactly one ragged executable. ``burst_ratio`` (admission decode tok/s /
+    steady decode tok/s, both measured in the same run so the comparison is
+    self-relative) must stay >= ``min_ratio``; while the baseline's burst
+    section carries ``"bootstrap": true`` that check warns instead of
+    failing (same promotion procedure as the paged lane, DESIGN.md §12)."""
+    bu = cand.get("results", {}).get("throughput", {}).get("burst")
+    if bu is None:
+        return [], []
+    issues, warns = [], []
+    if not bu.get("decode_per_step_flat", False):
+        issues.append(
+            "burst: long-prompt admission displaced decode tokens "
+            f"(min {bu.get('min_decode_per_step')}/step with "
+            f"{bu.get('steady_decoders')} live decoders)"
+        )
+    if bu.get("ragged_traces", 0) != 1 or bu.get("prefill_traces", 0) != 0:
+        issues.append(
+            f"burst: expected exactly one ragged executable, got "
+            f"ragged={bu.get('ragged_traces')} prefill={bu.get('prefill_traces')}"
+        )
+    print(f"\n{'burst lane':<24} decode={bu.get('burst_decode_tok_s', 0):.1f}tok/s"
+          f"(admission) vs {bu.get('steady_decode_tok_s', 0):.1f}(steady) "
+          f"ratio={bu.get('burst_ratio', 0):.2f} "
+          f"steps={bu.get('admission_steps')} "
+          f"min_decode/step={bu.get('min_decode_per_step')}")
+    bburst = base.get("results", {}).get("throughput", {}).get("burst")
+    bootstrap = bburst is None or bool(bburst.get("bootstrap"))
+    if bu.get("burst_ratio", 0.0) < min_ratio:
+        msg = (f"burst: admission decode rate ratio "
+               f"{bu.get('burst_ratio', 0.0):.2f} < {min_ratio:.2f} "
+               "(decode latency not flat under chunked prefill)")
+        (warns if bootstrap else issues).append(msg)
+    return issues, warns
+
+
 def check_launches(base: dict, cand: dict) -> list[str]:
     """Launch-count ratchet: decode launches per traced step must not grow."""
     errors = []
@@ -168,12 +210,29 @@ def main() -> None:
     ap.add_argument("--paged-only", action="store_true",
                     help="candidate is the paged-only lane (BENCH_PAGED.json): "
                          "run just the paged sanity checks, no engine-sweep gate")
+    ap.add_argument("--burst-only", action="store_true",
+                    help="candidate is the burst lane (BENCH_BURST.json): "
+                         "run just the ragged burst checks, no engine-sweep gate")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
         base = json.load(f)
     with open(args.candidate) as f:
         cand = json.load(f)
+
+    if args.burst_only:
+        failures, warns = check_burst(base, cand)
+        if cand.get("results", {}).get("throughput", {}).get("burst") is None:
+            failures.append("burst section missing from candidate")
+        for msg in warns:
+            print(f"WARN (burst lane, not gating): {msg}", file=sys.stderr)
+        if failures:
+            print("\nBENCH GATE FAILED:", file=sys.stderr)
+            for msg in failures:
+                print(f"  - {msg}", file=sys.stderr)
+            raise SystemExit(1)
+        print("\nbench gate (burst lane): ok")
+        return
 
     if args.paged_only:
         failures, warns = check_paged(base, cand, args.max_regress)
@@ -217,11 +276,15 @@ def main() -> None:
     failures += check_launches(base, cand)
     paged_failures, paged_warnings = check_paged(base, cand, args.max_regress)
     failures += paged_failures
+    burst_failures, burst_warnings = check_burst(base, cand)
+    failures += burst_failures
 
     for msg in warnings:
         print(f"WARN (bootstrap baseline, not gating): {msg}", file=sys.stderr)
     for msg in paged_warnings:
         print(f"WARN (paged lane, not gating): {msg}", file=sys.stderr)
+    for msg in burst_warnings:
+        print(f"WARN (burst lane, not gating): {msg}", file=sys.stderr)
     if failures:
         print("\nBENCH GATE FAILED:", file=sys.stderr)
         for msg in failures:

@@ -51,6 +51,12 @@ def main() -> None:
              "workload, paged vs dense engines) to the throughput module — "
              "the BENCH_PAGED.json artifact",
     )
+    ap.add_argument(
+        "--burst", action="store_true",
+        help="add the ragged burst lane (steady decoders + long-prompt "
+             "admission through the unified ragged step) to the throughput "
+             "module — the BENCH_BURST.json artifact",
+    )
     ap.add_argument("--out", default=None, help="write combined results JSON here")
     args = ap.parse_args()
 
@@ -81,7 +87,7 @@ def main() -> None:
         try:
             if name == "throughput":
                 results[name] = mods[name].run(quick=args.quick, fused=args.fused,
-                                               paged=args.paged)
+                                               paged=args.paged, burst=args.burst)
             elif name in QUICK_MODULES:
                 results[name] = mods[name].run(quick=args.quick)
             else:

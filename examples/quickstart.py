@@ -4,11 +4,19 @@
 2. Smooth + SVD-decompose + learn (Q, G) with the three-stage calibration.
 3. Show the paper's Table-3 ordering at layer level:
        naive 4-bit  >  +LowRank  >  +Hadamard  >  TwinQuant   (output error)
-4. Pack the transformed components to int4 and run the fused dual-component
-   kernel (interpret mode on CPU) — verifying it matches the jnp oracle.
+4. Pack the transformed components to int4 and run them through the ROUTED
+   dispatch layer (kernels/dispatch.py) — the production entry point that
+   picks a kernel schedule per shape and records it in the dispatch
+   counters — then force the Pallas kernel (interpret mode on CPU) and
+   verify it matches the jnp oracle bit for bit.
 
-Run: PYTHONPATH=src python examples/quickstart.py
+Run:        PYTHONPATH=src python examples/quickstart.py
+CI smoke:   PYTHONPATH=src python examples/quickstart.py --smoke
+(--smoke shrinks the layer and calibration steps so the example executes in
+seconds; same code path, same assertions.)
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -17,14 +25,23 @@ from repro.core.calibration import CalibConfig, calibrate_layer, layer_quant_con
 from repro.core.errors import total_delta, zeta_gain
 from repro.core.quantization import QuantConfig, dequantize, quantize
 from repro.core.transforms import hadamard_matrix
-from repro.kernels.ops import pack_twinquant_weights, twinquant_matmul
-from repro.kernels.ref import dual_gemm_ref
+from repro.kernels.dispatch import (
+    dispatch_counters,
+    quant_linear,
+    reset_dispatch_counters,
+)
+from repro.kernels.ref import dual_gemm_ref, pack_twinquant_weights
 
 
-def main():
+def main(smoke: bool = False):
     key = jax.random.PRNGKey(0)
-    k1, k2, k3, k4 = jax.random.split(key, 4)
-    M, N, RANK, SAMPLES = 256, 256, 32, 512
+    k1, k2, k3, _ = jax.random.split(key, 4)
+    if smoke:
+        M, N, RANK, SAMPLES = 128, 128, 16, 128
+        cal_steps = dict(steps_global=8, steps_invert=8, steps_joint=4)
+    else:
+        M, N, RANK, SAMPLES = 256, 256, 32, 512
+        cal_steps = dict(steps_global=60, steps_invert=60, steps_joint=30)
 
     # --- an LLM-like layer: a few high-magnitude input channels
     w = jax.random.normal(k1, (M, N)) * 0.05
@@ -34,7 +51,7 @@ def main():
     x = x.at[:, outliers].mul(6.0)
 
     print("== TwinQuant quickstart ==")
-    cfg = CalibConfig(rank=RANK, steps_global=60, steps_invert=60, steps_joint=30)
+    cfg = CalibConfig(rank=RANK, **cal_steps)
     res = calibrate_layer(x, w, cfg)
     aq, uq, vq, rq = layer_quant_configs(M, RANK, cfg)
     x_hat = x / res.decomp.lam[None, :]
@@ -66,14 +83,21 @@ def main():
     print(f" activation flattening gain zeta(Q) = {float(zeta_gain(x_hat, res.Q)):.2f}")
     assert e_twin <= e_had <= naive
 
-    # --- pack + fused kernel (TPU-target, validated in interpret mode here)
+    # --- pack + the routed quantized linear (the serving entry point)
     U2, V2, R2 = res.Q.T @ U @ res.G, res.G_inv @ V, res.Q.T @ R
     pack = pack_twinquant_weights(U2, V2, R2, a_bits=4)
     xq_in = (x_hat @ res.Q).astype(jnp.bfloat16)
-    y_kernel = twinquant_matmul(xq_in, pack, block_m=128, block_n=128, block_k=256)
+    reset_dispatch_counters()
+    y_routed = quant_linear(xq_in, pack)  # impl="auto": classify + record
+    routes = ", ".join(f"{k}:{v}" for k, v in sorted(dispatch_counters().items()))
+    print(f" dispatch routed the pack as: {routes}")
+    # force the Pallas kernel (interpret mode on CPU) against the jnp oracle
+    y_kernel = quant_linear(xq_in, pack, impl="kernel")
     y_oracle = dual_gemm_ref(xq_in, pack)
     exact = bool(jnp.all(y_kernel == y_oracle))
     print(f" fused dual-component kernel == oracle: {exact}")
+    assert exact
+    assert y_routed.shape == y_oracle.shape
     y_ref = x_hat @ w_hat  # the layer's true (smoothed) fp32 output
     rel = float(
         jnp.linalg.norm(y_oracle.astype(jnp.float32) - y_ref) / jnp.linalg.norm(y_ref)
@@ -84,4 +108,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + few calibration steps (CI example-smoke)")
+    main(**vars(ap.parse_args()))

@@ -1,7 +1,7 @@
 """quantcheck core: findings, the rule registry, file walking, reporting.
 
 The analyzer is a self-contained stdlib-``ast`` lint pass with repo-specific
-rules (see rules_pallas.py / rules_engine.py). It deliberately imports
+rules (see rules_pallas.py / rules_engine.py / rules_docs.py). It deliberately imports
 nothing from jax or the rest of ``repro`` at analysis time, so it can run in
 a bare CI lane (the blocking ``analyze`` job) before any heavyweight deps
 resolve.
@@ -72,7 +72,7 @@ def all_rules() -> dict[str, RuleFn]:
     """The registered rule catalog (imports the rule modules on first use)."""
     # imported lazily so core stays importable without the rules (and so the
     # rules can import core without a cycle)
-    from repro.analysis import rules_engine, rules_pallas  # noqa: F401
+    from repro.analysis import rules_docs, rules_engine, rules_pallas  # noqa: F401
 
     return dict(_RULES)
 

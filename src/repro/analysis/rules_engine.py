@@ -32,6 +32,8 @@ _STEP_FN_NAMES = (
     "prefill_step",
     "_prefill_step",
     "_run_prefill",
+    "ragged_step",
+    "_step_ragged",
 )
 
 
@@ -46,7 +48,8 @@ def _line_allowlisted(src_lines: list[str], node: ast.AST) -> bool:
 @rule("EN001")
 def en001_decode_syncs(tree: ast.AST, src: str, path: str) -> list[Finding]:
     """No ``np.asarray`` / ``np.array`` / ``.item()`` / ``block_until_ready``
-    / ``jax.device_get`` in an engine's per-token ``step`` method, outside
+    / ``jax.device_get`` in an engine's per-token ``step`` method (or any
+    ``_step*`` variant, e.g. the ragged engine's ``_step_ragged``), outside
     lines explicitly marked ``# sync-point``. Every unmarked transfer is a
     hidden decode-loop stall."""
     aliases = ModuleAliases(tree)
@@ -61,7 +64,7 @@ def en001_decode_syncs(tree: ast.AST, src: str, path: str) -> list[Finding]:
         for meth in cls.body:
             if not (
                 isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef))
-                and meth.name == "step"
+                and (meth.name == "step" or meth.name.startswith("_step"))
             ):
                 continue
             for node in ast.walk(meth):
@@ -89,7 +92,7 @@ def en001_decode_syncs(tree: ast.AST, src: str, path: str) -> list[Finding]:
                     findings.append(
                         Finding(
                             "EN001",
-                            f"host sync {label} in {cls.name}.step outside the "
+                            f"host sync {label} in {cls.name}.{meth.name} outside the "
                             f"`{SYNC_POINT_MARK}` allowlist — a hidden "
                             "decode-loop stall (mark the line or move the "
                             "transfer out of the loop)",

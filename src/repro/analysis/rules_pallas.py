@@ -129,8 +129,11 @@ def pk001_index_maps(tree: ast.AST, src: str, path: str) -> list[Finding]:
     the launch grid rank and whose returned tuple matches the block rank.
 
     Pure means: parameters, constants, arithmetic/comparison/conditional
-    expressions, and ``jnp.where`` — no other calls, no attribute access, no
-    subscripts, no side effects. Impure index maps are re-evaluated by the
+    expressions, ``jnp.where``, and subscripts whose base is a lambda
+    parameter (scalar-prefetched operands — ``PrefetchScalarGridSpec``
+    appends them to the index-map arguments precisely so maps can read
+    them) — no other calls, no attribute access, no subscripts of free
+    names, no side effects. Impure index maps are re-evaluated by the
     pipeline emitter and silently break block prefetch.
     """
     aliases = ModuleAliases(tree)
@@ -180,6 +183,9 @@ def pk001_index_maps(tree: ast.AST, src: str, path: str) -> list[Finding]:
 
 def _purity_findings(lam: ast.Lambda, jnp_names: set[str], path: str) -> list[Finding]:
     allowed_attrs: set[ast.AST] = set()
+    params = {a.arg for a in lam.args.args}
+    if lam.args.vararg is not None:
+        params.add(lam.args.vararg.arg)
     findings: list[Finding] = []
     for node in ast.walk(lam.body):
         if isinstance(node, ast.Call):
@@ -206,10 +212,17 @@ def _purity_findings(lam: ast.Lambda, jnp_names: set[str], path: str) -> list[Fi
                 n for n in ast.walk(node.func) if isinstance(n, ast.Attribute)
             )
         elif isinstance(node, ast.Subscript):
+            # subscripting a lambda PARAMETER is the scalar-prefetch idiom
+            # (PrefetchScalarGridSpec passes the prefetched refs as trailing
+            # index-map arguments); anything else stays banned
+            if isinstance(node.value, ast.Name) and node.value.id in params:
+                continue
             findings.append(
                 Finding(
                     "PK001",
-                    "impure index_map: subscript expressions are not allowed",
+                    "impure index_map: only subscripts of lambda parameters "
+                    "(scalar-prefetched operands) are allowed, got "
+                    f"`{ast.unparse(node)}`",
                     path, node.lineno, node.col_offset,
                 )
             )

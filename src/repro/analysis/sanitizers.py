@@ -55,8 +55,8 @@ def no_recompiles(engine):
     before = engine.compile_stats()
     yield engine
     after = engine.compile_stats()
-    for key in ("prefill_traces", "decode_traces"):
-        if after[key] > before[key]:
+    for key in ("prefill_traces", "decode_traces", "ragged_traces"):
+        if after.get(key, 0) > before.get(key, 0):
             raise SanitizerError(
                 f"recompile sanitizer: {key} grew {before[key]} -> "
                 f"{after[key]} inside a no-recompile region "
@@ -73,8 +73,23 @@ def compile_budget(max_len: int, variants: int) -> int:
 
 def assert_compile_budget(engine, max_len: int | None = None) -> dict:
     """Ratchet an engine's lifetime prefill trace count against the bucket
-    bound. Returns the compile stats it validated (for test logging)."""
+    bound. Returns the compile stats it validated (for test logging).
+
+    A ragged engine is held to a far tighter bar: the unified step is ONE
+    token-budget-shaped executable, so ragged + prefill traces together must
+    not exceed 2 (the single ragged trace, plus at most one legacy prefill
+    trace if a caller mixed modes)."""
     stats = engine.compile_stats()
+    if getattr(engine, "ragged", False):
+        total = stats.get("ragged_traces", 0) + stats["prefill_traces"]
+        if total > 2:
+            raise SanitizerError(
+                f"compile-budget sanitizer: ragged engine traced {total} "
+                f"executables (ragged={stats.get('ragged_traces', 0)}, "
+                f"prefill={stats['prefill_traces']}); the unified step must "
+                "compile once per token budget"
+            )
+        return stats
     if max_len is None:
         max_len = engine.max_len
     budget = compile_budget(max_len, stats.get("prefill_variants", 1))

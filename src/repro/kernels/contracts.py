@@ -46,6 +46,7 @@ import jax.numpy as jnp
 __all__ = [
     "ContractError",
     "VMEM_BUDGET_BYTES",
+    "check_ragged_args",
     "check_twinquant_group_pack",
     "check_twinquant_pack",
     "check_vmem",
@@ -55,6 +56,7 @@ __all__ = [
     "validate_dual_gemm_group",
     "validate_dual_gemv",
     "validate_dual_gemv_group",
+    "validate_ragged_attention",
     "validate_w4a16",
     "vmem_footprint",
 ]
@@ -359,6 +361,90 @@ def validate_w4a16(
         ("out", (block_m, block_n), jnp.bfloat16, "out"),
         ("acc_s", (block_m, block_n), jnp.float32, "scratch"),
     ], budget=budget)
+
+
+def validate_ragged_attention(
+    t: int, h: int, kvh: int, hd: int, b: int, maxp: int, page: int,
+    *, kind: str = "ragged", budget: Optional[int] = None,
+) -> None:
+    """Contract for the ragged-attention launch (one mixed prefill/decode
+    token batch of T rows attending paged KV pools through block tables).
+
+    The schedule pins the whole (T, H*hd) query panel, the (T, KV*hd)
+    in-batch K/V rows, the f32 online-softmax state, and the output in VMEM
+    while streaming one (page, KV*hd) K/V page pair per grid step — so T
+    (the engine token budget) is the knob that blows the budget, not the
+    sequence length."""
+    positive(t, "T (token batch rows)", kind=kind)
+    positive(page, "page_size", kind=kind)
+    positive(maxp, "max_pages (block-table width)", kind=kind)
+    positive(b, "B (engine slots)", kind=kind)
+    divisible(h, kvh, "n_heads % n_kv_heads", kind=kind,
+              hint="GQA groups share each KV head across h//kvh query heads")
+    check_vmem(kind, [
+        ("q", (t, h * hd), jnp.bfloat16, "pinned"),
+        ("k_page", (1, page, kvh * hd), jnp.bfloat16, "streamed"),
+        ("v_page", (1, page, kvh * hd), jnp.bfloat16, "streamed"),
+        ("k_tok", (t, kvh * hd), jnp.bfloat16, "pinned"),
+        ("v_tok", (t, kvh * hd), jnp.bfloat16, "pinned"),
+        ("meta", (5 * t,), jnp.int32, "pinned"),
+        ("out", (t, h * hd), jnp.bfloat16, "out"),
+        ("m_s", (t, h), jnp.float32, "scratch"),
+        ("l_s", (t, h), jnp.float32, "scratch"),
+        ("acc_s", (t, h * hd), jnp.float32, "scratch"),
+    ], budget=budget)
+
+
+def check_ragged_args(q, kp, vp, kt, vt, bt, slot, pos, ctx,
+                      *, kind: str = "ragged") -> None:
+    """Shape/dtype consistency contract for a ragged-attention call.
+
+    ``q (T, H, hd)`` / ``kt, vt (T, KV, hd)`` are the current step's rows,
+    ``kp, vp (P, page, KV, hd)`` the paged pools of ONE layer, ``bt (B,
+    maxp)`` the block tables and ``slot/pos (T,)`` / ``ctx (B,)`` the ragged
+    row metadata (slot == B marks a pad row). Malformed combinations raise
+    before any routing decision is made."""
+    problems = []
+    if q.ndim != 3:
+        problems.append(f"q: expected (T, H, hd), got {tuple(q.shape)}")
+    if kt.ndim != 3 or vt.ndim != 3 or kt.shape != vt.shape:
+        problems.append(
+            f"kt/vt: expected matching (T, KV, hd), got {tuple(kt.shape)} "
+            f"vs {tuple(vt.shape)}"
+        )
+    if kp.ndim != 4 or vp.ndim != 4 or kp.shape != vp.shape:
+        problems.append(
+            f"kp/vp: expected matching (P, page, KV, hd) pools, got "
+            f"{tuple(kp.shape)} vs {tuple(vp.shape)}"
+        )
+    if bt.ndim != 2:
+        problems.append(f"bt: expected (B, max_pages), got {tuple(bt.shape)}")
+    if problems:
+        raise ContractError(f"[{kind}] malformed ragged call:\n  " + "\n  ".join(problems))
+    t, _, hd = q.shape
+    if kt.shape[0] != t or kt.shape[2] != hd:
+        problems.append(
+            f"kt rows/head_dim {tuple(kt.shape)} disagree with q {tuple(q.shape)}"
+        )
+    if kp.shape[2] != kt.shape[1] or kp.shape[3] != hd:
+        problems.append(
+            f"pool trailing dims {tuple(kp.shape[2:])} != in-batch (KV, hd)="
+            f"({kt.shape[1]}, {hd})"
+        )
+    if q.shape[1] % kt.shape[1] != 0:
+        problems.append(
+            f"n_heads {q.shape[1]} not a multiple of n_kv_heads {kt.shape[1]}"
+        )
+    if slot.shape != (t,) or pos.shape != (t,):
+        problems.append(
+            f"slot/pos: expected ({t},), got {tuple(slot.shape)} / {tuple(pos.shape)}"
+        )
+    if ctx.shape != (bt.shape[0],):
+        problems.append(
+            f"ctx: expected ({bt.shape[0]},) to match bt rows, got {tuple(ctx.shape)}"
+        )
+    if problems:
+        raise ContractError(f"[{kind}] malformed ragged call:\n  " + "\n  ".join(problems))
 
 
 # ---------------------------------------------------------------------------

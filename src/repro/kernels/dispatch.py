@@ -72,12 +72,14 @@ __all__ = [
     "Route",
     "classify_dual",
     "classify_dual_group",
+    "classify_ragged",
     "classify_w4a16",
     "default_interpret",
     "dispatch_counters",
     "fused_linear",
     "fusion_enabled",
     "quant_linear",
+    "ragged_attention",
     "reset_dispatch_counters",
     "set_fusion",
     "w4a16_linear",
@@ -85,10 +87,14 @@ __all__ = [
 
 PATH_PREFILL = "prefill"
 PATH_DECODE = "decode"
+PATH_KERNEL = "kernel"
 PATH_REF = "ref"
 
 
 def default_interpret() -> bool:
+    """True when Pallas would run in interpret mode (CPU backend) — the
+    ``impl="auto"`` paths then execute the oracle's exact numerics while
+    still recording the routed schedule."""
     return jax.default_backend() == "cpu"
 
 
@@ -150,6 +156,7 @@ def dispatch_counters() -> dict[str, int]:
 
 
 def reset_dispatch_counters() -> None:
+    """Zero the process-global routing counters (test/bench bookkeeping)."""
     _counters.clear()
 
 
@@ -227,6 +234,33 @@ def classify_dual_group(
             PATH_REF, None, f"(gcd(N)={ngcd}, K={k}) not tileable", "prefill_untileable"
         )
     return Route(PATH_PREFILL, blocks, f"M={m}>{DECODE_M_MAX}")
+
+
+def classify_ragged(t: int, h: int, kvh: int, hd: int, b: int, maxp: int,
+                    page: int) -> Route:
+    """Route a ragged-attention call (kind ``ragged``).
+
+    The kernel has one schedule (grid over ``(B, max_pages + 1)``, whole
+    token panel resident), so classification is a viability check, not a
+    regime choice: GQA-incompatible head counts route ref (``hd_unaligned``
+    also covers head dims the TPU lane layout can't tile), and a token
+    budget whose resident panels blow the VMEM budget routes ref (``vmem``).
+    """
+    from repro.kernels.contracts import ContractError, validate_ragged_attention
+
+    if h % kvh != 0:
+        return Route(PATH_REF, None, f"H={h} not grouped by KV={kvh}", "hd_unaligned")
+    if hd % 8 != 0:
+        return Route(
+            PATH_REF, None, f"head_dim={hd} not lane-tileable", "hd_unaligned"
+        )
+    try:
+        validate_ragged_attention(t, h, kvh, hd, b, maxp, page)
+    except ContractError:
+        return Route(
+            PATH_REF, None, f"T={t} resident panels exceed VMEM budget", "vmem"
+        )
+    return Route(PATH_KERNEL, None, f"ragged schedule (T={t}, maxp={maxp})")
 
 
 def classify_w4a16(m: int, n: int, k: int, group: int) -> Route:
@@ -426,6 +460,61 @@ def w4a16_linear(
     return _finish(y, m, batch_shape, n, bias)
 
 
+def ragged_attention(
+    q: jax.Array,
+    kp: jax.Array,
+    vp: jax.Array,
+    kt: jax.Array,
+    vt: jax.Array,
+    bt: jax.Array,
+    slot: jax.Array,
+    pos: jax.Array,
+    ctx: jax.Array,
+    *,
+    impl: str = "auto",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Routed ragged paged attention: one launch for a mixed token batch.
+
+    ``q (T, H, hd)`` / ``kt, vt (T, KV, hd)`` are this step's post-RoPE rows,
+    ``kp, vp (P, page, KV, hd)`` one layer's paged K/V pools, ``bt (B,
+    maxp)`` the block tables, ``slot/pos (T,)`` the ragged row metadata
+    (``slot == B`` marks padding) and ``ctx (B,)`` each slot's committed
+    prefix length. Returns the (T, H, hd) attention output; pad rows are
+    garbage and must be discarded by the caller.
+
+    Routing kind is ``ragged`` (paths ``kernel`` / ``ref``); like the linear
+    entries, ``impl="auto"`` on CPU records the routed schedule but executes
+    the jnp oracle.
+    """
+    from repro.kernels.contracts import check_ragged_args
+    from repro.kernels.ragged_attention import (
+        ragged_attention_kernel,
+        ragged_attention_ref,
+    )
+
+    check_ragged_args(q, kp, vp, kt, vt, bt, slot, pos, ctx)
+    t, h, hd = q.shape
+    kvh = kt.shape[1]
+    b, maxp = bt.shape
+    if impl == "ref":
+        route = Route(PATH_REF, None, "forced impl=ref", "forced")
+    else:
+        route = classify_ragged(t, h, kvh, hd, b, maxp, kp.shape[1])
+    _record("ragged", route)
+
+    if interpret is None:
+        interpret = default_interpret()
+    run_kernel = route.path != PATH_REF and (
+        impl == "kernel" or (impl == "auto" and not interpret)
+    )
+    if not run_kernel:
+        return ragged_attention_ref(q, kp, vp, kt, vt, bt, slot, pos, ctx)
+    return ragged_attention_kernel(
+        q, kp, vp, kt, vt, bt, slot, pos, ctx, interpret=interpret
+    )
+
+
 class QuantLinear:
     """A routed quantized linear layer bound to one weight pack.
 
@@ -445,8 +534,10 @@ class QuantLinear:
         return quant_linear(x, self.w, self.bias, impl=impl)
 
     def route_for(self, shape: tuple[int, ...]) -> Route:
-        # same M computation as quant_linear's _flatten: inspection and
-        # execution can never disagree on the shape regime
+        """Routing decision for an activation of ``shape``, without running.
+
+        Uses the same M computation as quant_linear's _flatten: inspection
+        and execution can never disagree on the shape regime."""
         return classify_dual(
             _flatten_m(shape), self.w.ndim_out, shape[-1],
             self.w.group, self.w.rgroup, self.w.rank,
@@ -476,6 +567,7 @@ class QuantLinearGroup:
         return fused_linear(x, self.gw, self.biases, impl=impl)
 
     def route_for(self, shape: tuple[int, ...]) -> Route:
+        """Routing decision for an activation of ``shape``, without running."""
         gw = self.gw
         return classify_dual_group(
             _flatten_m(shape), shape[-1], gw.group, gw.seg_n, gw.seg_r, gw.rgroups

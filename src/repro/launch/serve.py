@@ -33,6 +33,12 @@ Engine architecture (DESIGN.md §10, §14):
   the per-slot mask / unmapped block-table rows. A request stopped by cache
   capacity before producing ``max_new`` tokens is flagged ``truncated``.
 * Sampling is per-request (greedy / temperature / top-k) on the host.
+* **Ragged mode** (``ragged=True``, requires paged + a family with
+  ``ragged_step``): chunked prefill and decode are unified into ONE launch
+  per engine step over a flat token batch capped at ``token_budget`` —
+  decode latency stays flat while long prompts stream in, and the prefill
+  bucket inventory collapses to a single token-budget trace. See
+  docs/serving.md for the full lifecycle.
 """
 
 from __future__ import annotations
@@ -53,6 +59,9 @@ from repro.models.registry import get_model
 
 
 def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """Bind cfg into the family's prefill: (params, tokens (B, S), state,
+    **frontend) -> (last-position logits, filled state). The engine jits one
+    instance per engine; the bucketed admission path drives it."""
     model = get_model(cfg)
 
     def prefill_step(params, tokens, state, **frontend):
@@ -62,12 +71,29 @@ def make_prefill_step(cfg: ModelConfig) -> Callable:
 
 
 def make_decode_step(cfg: ModelConfig) -> Callable:
+    """Bind cfg into the family's decode step: (params, state, tokens (B, 1))
+    -> (logits (B, 1, V), new state). The ``decode_*`` / ``long_*`` dry-run
+    cells lower exactly this function."""
     model = get_model(cfg)
 
     def decode_step(params, state, tokens):
         return model.decode_step(params, cfg, state, tokens)
 
     return decode_step
+
+
+def make_ragged_step(cfg: ModelConfig) -> Callable:
+    """Bind cfg into the family's unified ragged step (ragged engine mode):
+    (params, state, tokens (T,), slot (T,), pos (T,), ctx (B,), logit_idx
+    (B,)) -> (logits (B, V), new state). One launch carries every live
+    slot's scheduled tokens — prefill chunks and decode tokens together.
+    Only families exposing ``ragged_step`` (dense/moe) support it."""
+    model = get_model(cfg)
+
+    def ragged_step(params, state, tokens, slot, pos, ctx, logit_idx):
+        return model.ragged_step(params, cfg, state, tokens, slot, pos, ctx, logit_idx)
+
+    return ragged_step
 
 
 # ---------------------------------------------------------------------------
@@ -87,6 +113,12 @@ class SamplingParams:
 
 @dataclasses.dataclass(eq=False)
 class Request:
+    """One generation request: a prompt, a token quota, and sampling params.
+
+    The engine writes results back onto the object: ``out`` (generated token
+    ids), ``done``, and ``truncated`` (stopped by cache capacity before
+    filling ``max_new``). Fields prefixed ``_`` are engine-private."""
+
     prompt: Any  # (S,) int32
     max_new: int = 16
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
@@ -99,6 +131,10 @@ class Request:
     # engine-private
     _last_logits: Any = dataclasses.field(default=None, repr=False)
     _rng: Any = dataclasses.field(default=None, repr=False)
+    # ragged mode: prompt tokens already written to the cache (chunk cursor)
+    # and the prompt as a host int32 array, cached at admission
+    _filled: int = dataclasses.field(default=0, repr=False)
+    _prompt: Any = dataclasses.field(default=None, repr=False)
 
 
 # ---------------------------------------------------------------------------
@@ -124,13 +160,17 @@ class PageAllocator:
 
     @property
     def n_free(self) -> int:
+        """Pages currently on the free list."""
         return len(self.free)
 
     @property
     def n_used(self) -> int:
+        """Pages currently mapped or cached (refcount > 0)."""
         return self.n_pages - len(self.free)
 
     def alloc(self, n: int) -> Optional[list[int]]:
+        """Take ``n`` pages off the free list at ref=1; None if the pool
+        cannot satisfy the request (admission then waits for evictions)."""
         if n > len(self.free):
             return None
         pages = [self.free.popleft() for _ in range(n)]
@@ -141,11 +181,15 @@ class PageAllocator:
         return pages
 
     def share(self, pages) -> None:
+        """Add one reference to each already-referenced page (prefix-cache
+        reuse in a new slot, or cache registration)."""
         for p in pages:
             assert self.ref[p] > 0, f"sharing unreferenced page {p}"
             self.ref[p] += 1
 
     def release(self, pages) -> None:
+        """Drop one reference per page; fully-unreferenced pages return to
+        the free list."""
         for p in pages:
             assert self.ref[p] > 0, f"double release of page {p}"
             self.ref[p] -= 1
@@ -153,6 +197,8 @@ class PageAllocator:
                 self.free.append(p)
 
     def audit(self) -> None:
+        """Assert the free list and refcounts partition the pool (no leaks,
+        no double-maps, no duplicated free entries)."""
         free = set(self.free)
         assert len(free) == len(self.free), "free list contains duplicates"
         for p in range(self.n_pages):
@@ -377,12 +423,23 @@ class ContinuousBatchingEngine:
     (``bucket_prompts``), so prefill compiles O(log max_len) executables
     instead of one per distinct prompt length; ``compile_stats()`` reports
     the inventory.
+
+    ``ragged=True`` (requires ``paged=True`` and a family exposing
+    ``ragged_step``; dense/moe) replaces the bucketed-prefill + lock-step
+    split entirely: every ``step()`` concatenates the scheduled tokens of
+    ALL live slots — one decode token per decoding slot plus prompt chunks
+    for admitting slots, capped at ``token_budget`` — into one flat ragged
+    batch and runs ONE launch over it. Long prompts are chunked across
+    steps, so decode latency stays flat during admission, and the whole
+    engine compiles a single token-budget-shaped executable instead of the
+    O(log max_len) prefill bucket inventory (docs/serving.md).
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4, max_len: int = 128,
                  paged: bool = False, page_size: int = 16, n_pages: Optional[int] = None,
                  prefix_caching: bool = True, bucket_prompts: bool = True,
-                 on_truncation: str = "warn"):
+                 on_truncation: str = "warn", ragged: bool = False,
+                 token_budget: int = 64):
         if on_truncation not in ("warn", "reject"):
             raise ValueError(f"on_truncation must be 'warn' or 'reject', got {on_truncation!r}")
         self.cfg = cfg
@@ -446,6 +503,35 @@ class ContinuousBatchingEngine:
         self._decode = jax.jit(make_decode_step(cfg))
         self._prefill = jax.jit(make_prefill_step(cfg))
         self._prefill_traces: dict[tuple, int] = {}
+        # unified ragged step (chunked prefill + decode in one launch)
+        self.ragged = False
+        self.token_budget = int(token_budget)
+        self._ragged_traces: dict[int, int] = {}
+        if ragged:
+            ok = (
+                self.allocator is not None
+                and self._extra_rows == 0
+                and getattr(self.model, "ragged_step", None) is not None
+            )
+            if not ok:
+                warnings.warn(
+                    "ragged=True needs paged mode and a family with a "
+                    "ragged_step (dense/moe); falling back to bucketed "
+                    "prefill + lock-step decode",
+                    stacklevel=2,
+                )
+            else:
+                if self.token_budget < batch_slots:
+                    raise ValueError(
+                        f"token_budget ({self.token_budget}) must be >= "
+                        f"batch_slots ({batch_slots}) so every decoding slot "
+                        f"gets a row each step"
+                    )
+                self.ragged = True
+                self._ragged = jax.jit(make_ragged_step(cfg))
+                # host mirror of per-slot committed rows: the ragged loop
+                # never downloads state["pos"] (no per-step sync for it)
+                self._pos_host = np.zeros(batch_slots, np.int32)
         self.stats = {
             "prefill_tokens": 0, "prefill_s": 0.0,
             "decode_tokens": 0, "decode_steps": 0, "decode_s": 0.0,
@@ -540,7 +626,50 @@ class ContinuousBatchingEngine:
                 return  # page-gated: the head request waits for evictions
             self.queue.popleft()
 
+    def _admit_one_ragged(self, req: Request, i: int) -> bool:
+        """Ragged-mode admission: reserve the request's pages (prefix-cache
+        hits included) and park it in slot ``i`` with its chunk cursor at the
+        first uncached prompt token. No prefill call happens here — the
+        prompt is streamed through subsequent ``_step_ragged`` launches in
+        token-budget-sized chunks."""
+        prompt = np.asarray(req.prompt, np.int32)
+        n = len(prompt)
+        need = min(n + req.max_new, self.max_len)
+        n_res = -(-need // self.page_size)
+        m_tok, shared = 0, []
+        if self.prefix_cache is not None and not req.frontend:
+            self.stats["prefix_lookups"] += 1
+            # no power-of-two bucketing of the match: chunk scheduling is
+            # position-exact, so any matched page count costs zero extra
+            # traces (the single token-budget executable covers all offsets)
+            m_tok, shared = self.prefix_cache.match(prompt)
+        self.allocator.share(shared)
+        pages = self.allocator.alloc(n_res - len(shared))
+        if pages is None and self.prefix_cache is not None:
+            self.prefix_cache.evict(n_res - len(shared))
+            pages = self.allocator.alloc(n_res - len(shared))
+        if pages is None:
+            self.allocator.release(shared)
+            return False  # admission gated on free pages
+        if m_tok:
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += m_tok
+        row = shared + pages
+        self._bt[i, :] = -1
+        self._bt[i, : len(row)] = row
+        with jax.transfer_guard("allow"):
+            self.state["bt"] = jnp.asarray(self._bt)
+        req._prompt = prompt
+        req._filled = m_tok
+        self._pos_host[i] = m_tok
+        req._last_logits = None
+        req._rng = np.random.default_rng(req.sampling.seed)
+        self.slots[i] = req
+        return True
+
     def _admit_one(self, req: Request, i: int) -> bool:
+        if self.ragged:
+            return self._admit_one_ragged(req, i)
         if self.allocator is None:
             last, sub, _ = self._run_prefill(req, np.asarray(req.prompt, np.int32))
             self.state = self._insert(self.state, sub, i)
@@ -633,11 +762,110 @@ class ContinuousBatchingEngine:
                 # neutralize the freed slot: pos 0 + unmapped block table means
                 # its lock-step garbage decode attends nothing and writes nowhere
                 self.state["pos"] = self.state["pos"].at[i].set(0)
+        if self.ragged:
+            self._pos_host[i] = 0
+
+    def _step_ragged(self) -> int:
+        """One unified ragged engine step (docs/serving.md): sample + schedule
+        one decode token per decoding slot FIRST (decode rows are never
+        displaced by admission), fill the remaining token budget with prompt
+        chunks FIFO across admitting slots, then run ONE ``ragged_step``
+        launch over the flat batch. Pad rows carry the sentinel slot id B and
+        are inert in attention and cache writes."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        budget = self.token_budget
+        tokens = np.zeros(budget, np.int32)
+        slot = np.full(budget, self.batch, np.int32)  # pad sentinel = B
+        pos = np.zeros(budget, np.int32)
+        logit_idx = np.zeros(self.batch, np.int32)
+        row = 0
+        decode_rows: list[int] = []
+        # decode tokens first: a slot mid-generation gets its row every step
+        for i in active:
+            req = self.slots[i]
+            if req._last_logits is None:
+                continue  # still prefilling — chunks scheduled below
+            nxt = self._sample(req)
+            req.out.append(nxt)
+            # quota filled (or no cache row left for the new token): evict
+            # BEFORE the launch — its next logits would be discarded anyway
+            if len(req.out) >= req.max_new:
+                self._evict(i, req, truncated=False)
+            elif int(self._pos_host[i]) >= self.max_len:
+                self._evict(i, req, truncated=True)
+            else:
+                tokens[row] = nxt
+                slot[row] = i
+                pos[row] = self._pos_host[i]
+                logit_idx[i] = row
+                decode_rows.append(i)
+                row += 1
+        # prompt chunks fill whatever budget decode left, FIFO across slots
+        chunks: list[tuple[int, int]] = []  # (slot, tokens scheduled)
+        n_chunk = 0
+        for i in active:
+            req = self.slots[i]
+            if req is None or req._last_logits is not None:
+                continue
+            space = budget - row
+            if space <= 0:
+                break
+            take = min(space, len(req._prompt) - req._filled)
+            tokens[row : row + take] = req._prompt[req._filled : req._filled + take]
+            slot[row : row + take] = i
+            pos[row : row + take] = self._pos_host[i] + np.arange(take, dtype=np.int32)
+            if req._filled + take == len(req._prompt):
+                logit_idx[i] = row + take - 1  # last prompt token's logits
+            chunks.append((i, take))
+            n_chunk += take
+            row += take
+        if row == 0:
+            self._admit()
+            return len(active)
+        t0 = time.monotonic()
+        with jax.transfer_guard("allow"):
+            logits, self.state = self._ragged(
+                self.params, self.state, jnp.asarray(tokens), jnp.asarray(slot),
+                jnp.asarray(pos), jnp.asarray(self._pos_host.copy()),
+                jnp.asarray(logit_idx),
+            )
+            last = np.asarray(logits.astype(jnp.float32))  # sync-point: per-slot logits download
+        dt = time.monotonic() - t0
+        # split wall time by scheduled-token share so both tok/s stay honest
+        self.stats["decode_s"] += dt * len(decode_rows) / row
+        self.stats["prefill_s"] += dt * n_chunk / row
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += len(decode_rows)
+        self.stats["prefill_tokens"] += n_chunk
+        self._ragged_traces[budget] = self._ragged_traces.get(budget, 0) + 1
+        for i in decode_rows:
+            self._pos_host[i] += 1
+            self.slots[i]._last_logits = last[i]
+        for i, take in chunks:
+            req = self.slots[i]
+            self._pos_host[i] += take
+            req._filled += take
+            if req._filled == len(req._prompt):
+                req._last_logits = last[i]
+                # deferred prefix registration: the prompt's pages are only
+                # fully written once its last chunk lands
+                if self.prefix_cache is not None and not req.frontend:
+                    self.prefix_cache.register(
+                        req._prompt, [int(p) for p in self._bt[i] if p >= 0]
+                    )
+        self._admit()
+        return len(active)
 
     def step(self) -> int:
         """Admit queued work, sample one token per active slot, then one
-        lock-step decode for the slots that still need logits. Returns the
-        number of slots that produced a token."""
+        lock-step decode for the slots that still need logits (ragged mode:
+        one unified chunked-prefill + decode launch, see ``_step_ragged``).
+        Returns the number of slots that were live at entry."""
+        if self.ragged:
+            return self._step_ragged()
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
@@ -676,6 +904,8 @@ class ContinuousBatchingEngine:
     # -- drivers ------------------------------------------------------------
 
     def run_until_done(self, max_steps: int = 100_000) -> None:
+        """Drive ``step()`` until no slot is live and the queue is empty (or
+        ``max_steps`` is hit — the runaway guard for stuck tests)."""
         for _ in range(max_steps):
             if self.step() == 0 and not self.queue:
                 return
@@ -712,7 +942,11 @@ class ContinuousBatchingEngine:
             # distinct (prefix-offset, frontend) variants: the recompile
             # sanitizer's budget is O(log max_len) buckets PER variant
             "prefill_variants": len({k[1:] for k in self._prefill_traces}),
-            "decode_traces": 1 if self.stats["decode_steps"] else 0,
+            "decode_traces": 1 if (self.stats["decode_steps"] and not self.ragged) else 0,
+            # ragged mode compiles ONE token-budget-shaped executable for
+            # everything (chunked prefill + decode); the compile-budget
+            # sanitizer asserts ragged_traces + prefill_traces <= 2
+            "ragged_traces": len(self._ragged_traces),
         }
 
     def memory(self) -> dict:

@@ -547,6 +547,56 @@ def scatter_token_pages(pool: jax.Array, t: jax.Array, bt: jax.Array,
     return pool.at[:, page_id, pos % page].set(t[:, :, 0].astype(pool.dtype), mode="drop")
 
 
+def scatter_rows_pages(pool: jax.Array, t: jax.Array, bt: jax.Array,
+                       slot: jax.Array, pos: jax.Array) -> jax.Array:
+    """Scatter a ragged step's T rows into their slots' pages.
+
+    pool (lead, P, page, ...), t (lead, T, ...), bt (B, maxp), slot (T,)
+    with pad sentinel >= B, pos (T,). Row ``i`` lands in page
+    ``bt[slot_i, pos_i // page]`` at offset ``pos_i % page``; pad rows,
+    rows past the block table, and unmapped pages are dropped through the
+    same ``n_pages`` OOB sentinel as :func:`scatter_token_pages` (-1 would
+    wrap into the last page)."""
+    page = pool.shape[2]
+    n_pages = pool.shape[1]
+    b, maxp = bt.shape
+    pi = pos // page
+    page_id = bt[jnp.clip(slot, 0, b - 1), jnp.minimum(pi, maxp - 1)]
+    ok = (slot < b) & (pi < maxp) & (page_id >= 0)
+    page_id = jnp.where(ok, page_id, n_pages)
+    return pool.at[:, page_id, pos % page].set(t.astype(pool.dtype), mode="drop")
+
+
+def ragged_attn(p: dict, h: jax.Array, cfg: ModelConfig, kp: jax.Array,
+                vp: jax.Array, bt: jax.Array, slot: jax.Array,
+                pos: jax.Array, ctx: jax.Array):
+    """One layer's attention over a ragged mixed prefill/decode token batch.
+
+    ``h (1, T, D)`` holds every live request's scheduled tokens for this
+    engine step, flat; ``slot/pos (T,)`` map each row to its engine slot and
+    absolute position (``slot == B`` is padding), ``ctx (B,)`` is each
+    slot's committed cache length and ``kp/vp (P, page, KV, hd)`` are one
+    layer's page pools behind the block tables ``bt (B, maxp)``. The fused
+    q/k/v group launch runs ONCE over all T rows (prefill chunks and decode
+    tokens share it — the engine-level analog of the dual-GEMM fusion), then
+    the routed ragged-attention kernel attends cache prefix + same-slot
+    in-batch causal prefix. Returns (out (1, T, D), k_t (T, KV, hd), v_t)
+    with k_t/v_t post-RoPE, ready for the page scatter."""
+    from repro.kernels.dispatch import ragged_attention
+
+    _, t, _ = h.shape
+    hh, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = linear_group(p, ("q", "k", "v"), "qkv", h)
+    q = q.reshape(1, t, hh, hd)
+    k = k.reshape(1, t, kvh, hd)
+    v = v.reshape(1, t, kvh, hd)
+    tables = rope_tables(pos[None, :], hd, cfg.rope_fraction, cfg.rope_theta)
+    q = apply_rope(q, tables)
+    k = apply_rope(k, tables)
+    out = ragged_attention(q[0], kp, vp, k[0], v[0], bt, slot, pos, ctx)
+    return linear(p["o"], out.reshape(1, t, hh * hd)), k[0], v[0]
+
+
 def select_at_length(x: jax.Array, length) -> jax.Array:
     """Last REAL position of each row: x (B, S, D), length (B,) or scalar ->
     (B, 1, D). ``length=None`` means the whole row is real (no padding)."""

@@ -216,6 +216,48 @@ def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
     return _unembed(params, cfg, x), new_state
 
 
+def ragged_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array,
+                slot: jax.Array, pos: jax.Array, ctx: jax.Array,
+                logit_idx: jax.Array):
+    """One unified ragged engine step: prefill chunks + decode tokens of all
+    live slots in a single launch over a flat (T,) token batch.
+
+    ``tokens/slot/pos (T,)`` are the ragged rows (``slot == B`` marks
+    padding), ``ctx (B,)`` each slot's committed cache length at step start,
+    ``logit_idx (B,)`` the row whose logits each slot wants back (its decode
+    token, or the last prompt token of a chunk that completes the prompt —
+    garbage for idle slots, the engine ignores those). Requires the paged
+    state ("bt" + page pools): chunked prefill is exact because a token's
+    K/V depend only on tokens at positions <= its own, all of which are
+    either committed pages or earlier rows of this same batch. Returns
+    (logits (B, V), new_state); new pos is ctx + per-slot scheduled counts.
+    """
+    x = C.embed_lookup(params["embed"], tokens[None, :])
+
+    def body(x, lp_cache):
+        lp, kc, vc = lp_cache
+        h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        att, kt, vt = C.ragged_attn(
+            lp["attn"], h, cfg, kc, vc, state["bt"], slot, pos, ctx
+        )
+        x = x + att
+        x = x + C.mlp_apply(lp["mlp"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+        return x, (kt, vt)
+
+    x, (kts, vts) = jax.lax.scan(body, x, (params["layers"], state["k"], state["v"]))
+    b = ctx.shape[0]
+    counts = jnp.sum(
+        slot[None, :] == jnp.arange(b, dtype=jnp.int32)[:, None], axis=1
+    )
+    new_state = {
+        **state,
+        "k": C.scatter_rows_pages(state["k"], kts, state["bt"], slot, pos),
+        "v": C.scatter_rows_pages(state["v"], vts, state["bt"], slot, pos),
+        "pos": ctx.astype(jnp.int32) + counts.astype(jnp.int32),
+    }
+    return _unembed(params, cfg, x[0][logit_idx][None])[0], new_state
+
+
 # ---------------------------------------------------------------------------
 # parameter counting (roofline MODEL_FLOPS)
 # ---------------------------------------------------------------------------

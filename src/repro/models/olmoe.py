@@ -127,6 +127,40 @@ def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
     return D._unembed(params, cfg, x), new_state
 
 
+def ragged_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array,
+                slot: jax.Array, pos: jax.Array, ctx: jax.Array,
+                logit_idx: jax.Array):
+    """Unified ragged engine step for the MoE family; semantics as in
+    models/dense.ragged_step. Pad rows route through the experts and consume
+    expert capacity exactly like bucketed-prefill pad tokens (the documented
+    PR-4 capacity caveat) — keep capacity_factor generous relative to the
+    token budget when exact oracle equality matters."""
+    x = C.embed_lookup(params["embed"], tokens[None, :])
+
+    def body(x, lp_cache):
+        lp, kc, vc = lp_cache
+        h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        att, kt, vt = C.ragged_attn(
+            lp["attn"], h, cfg, kc, vc, state["bt"], slot, pos, ctx
+        )
+        x = x + att
+        m, _ = moe_ffn(lp["moe"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg)
+        return x + m, (kt, vt)
+
+    x, (kts, vts) = jax.lax.scan(body, x, (params["layers"], state["k"], state["v"]))
+    b = ctx.shape[0]
+    counts = jnp.sum(
+        slot[None, :] == jnp.arange(b, dtype=jnp.int32)[:, None], axis=1
+    )
+    new_state = {
+        **state,
+        "k": C.scatter_rows_pages(state["k"], kts, state["bt"], slot, pos),
+        "v": C.scatter_rows_pages(state["v"], vts, state["bt"], slot, pos),
+        "pos": ctx.astype(jnp.int32) + counts.astype(jnp.int32),
+    }
+    return D._unembed(params, cfg, x[0][logit_idx][None])[0], new_state
+
+
 def count_params(cfg: ModelConfig):
     d, hd = cfg.d_model, cfg.head_dim
     attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d

@@ -18,6 +18,12 @@ pages, so a prefix-cache hit prefills only the suffix. ``decode_step``
 transparently serves the paged state layout (``models.common.
 init_paged_state``): the presence of a block table ``state["bt"]`` switches
 the cache read/write to page gather/scatter at trace time.
+
+Families whose attention state is page-addressable AND whose forward is a
+plain GQA stack additionally expose ``ragged_step(params, cfg, state,
+tokens, slot, pos, ctx, logit_idx)`` — the unified chunked-prefill + decode
+step the ragged engine mode uses (docs/serving.md). Families without the
+attribute fall back to bucketed prefill + lock-step decode.
 """
 
 from __future__ import annotations
@@ -47,6 +53,7 @@ _DENSE = SimpleNamespace(
     init_decode_state=dense.init_decode_state,
     prefill=dense.prefill,
     decode_step=dense.decode_step,
+    ragged_step=dense.ragged_step,
     count_params=dense.count_params,
 )
 
@@ -70,6 +77,7 @@ _FAMILIES = {
         init_decode_state=olmoe.init_decode_state,
         prefill=olmoe.prefill,
         decode_step=olmoe.decode_step,
+        ragged_step=olmoe.ragged_step,
         count_params=olmoe.count_params,
     ),
     "mla_moe": SimpleNamespace(

@@ -238,13 +238,118 @@ def test_en_rules_ignore_non_engine_classes():
     assert findings_for(harmless, "EN001") == []
 
 
+def test_en001_polices_step_variants():
+    # the ragged engine's _step_ragged is a per-token hot path like step()
+    ragged = ENGINE_FIXTURE.replace("def step(self):", "def _step_ragged(self):")
+    found = findings_for(ragged, "EN001")
+    assert len(found) == 1 and "_step_ragged" in found[0].message, \
+        [f.human() for f in found]
+
+
+def test_en002_covers_ragged_step_names():
+    bad = """
+def _step_ragged(self):
+    return jax.jit(self._fn)()
+"""
+    msgs = [f.message for f in findings_for(bad, "EN002")]
+    assert any("jax.jit constructed" in m for m in msgs), msgs
+
+
+# ---------------------------------------------------------------------------
+# PK001: scalar-prefetch subscripts in index maps
+# ---------------------------------------------------------------------------
+
+
+PREFETCH_WRAPPER = """
+def _kern(bt_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+def launch(bt, x, b, maxp, page, d):
+    validate_blocks(b, maxp, page, d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, maxp),
+        in_specs=[
+            pl.BlockSpec((1, page, d), lambda bi, ji, bts: (bts[bi, ji], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, page, d), lambda bi, ji, bts: (bi, 0, 0)),
+    )
+    return pl.pallas_call(
+        _kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, page, d), jnp.float32),
+    )(bt, x)
+"""
+
+
+def test_pk001_param_subscript_allowed():
+    # PrefetchScalarGridSpec appends prefetched refs to the index-map args:
+    # subscripting those PARAMETERS (block-table lookups) is the idiom
+    assert findings_for(PREFETCH_WRAPPER, "PK001") == []
+
+
+def test_pk001_free_name_subscript_still_flagged():
+    bad = GOOD_WRAPPER.replace(
+        "lambda mi, ni: (mi, ni))]",
+        "lambda mi, ni: (table[mi], ni))]",
+    )
+    msgs = [f.message for f in findings_for(bad, "PK001")]
+    assert any("subscripts of lambda parameters" in m for m in msgs), msgs
+
+
+# ---------------------------------------------------------------------------
+# DC001: docstring coverage of the documented API surface
+# ---------------------------------------------------------------------------
+
+DOCS_FIXTURE = '''
+"""Module docstring."""
+
+def public_fn():
+    """Documented."""
+
+class PublicClass:
+    """Documented class."""
+
+    def documented(self):
+        """Documented method."""
+
+    def _private(self):
+        pass
+'''
+
+
+def test_dc001_clean_surface_passes():
+    out = analyze_source(DOCS_FIXTURE, "src/repro/launch/serve.py")
+    assert [f for f in out if f.rule == "DC001"] == []
+
+
+def test_dc001_flags_missing_docstrings():
+    bad = DOCS_FIXTURE.replace('def public_fn():\n    """Documented."""',
+                               "def public_fn():\n    pass")
+    bad = bad.replace('def documented(self):\n        """Documented method."""',
+                      "def documented(self):\n        pass")
+    out = [f for f in analyze_source(bad, "src/repro/kernels/dispatch.py")
+           if f.rule == "DC001"]
+    names = " ".join(f.message for f in out)
+    assert "public_fn" in names and "PublicClass.documented" in names
+    assert len(out) == 2, [f.human() for f in out]
+
+
+def test_dc001_ignores_uncovered_paths():
+    bad = "def undocumented():\n    pass\n"
+    out = analyze_source(bad, "src/repro/models/common.py")
+    assert [f for f in out if f.rule == "DC001"] == []
+
+
 # ---------------------------------------------------------------------------
 # catalog / CLI / repo-clean contracts
 # ---------------------------------------------------------------------------
 
 
 def test_rule_catalog_complete():
-    assert set(all_rules()) == {"PK001", "PK002", "PK003", "PK004", "EN001", "EN002"}
+    assert set(all_rules()) == {
+        "PK001", "PK002", "PK003", "PK004", "EN001", "EN002", "DC001",
+    }
 
 
 def test_repo_src_is_clean():

@@ -1,0 +1,290 @@
+"""Unified ragged engine step tests (docs/serving.md, DESIGN.md §16).
+
+The correctness bar for ragged mode is the same A/B oracle paging is held
+to, one level up: serving a request through the RAGGED engine — its prompt
+chunked to the token budget and its rows sharing launches with other
+requests' decode tokens — must be token-for-token identical to serving it
+alone through the bucketed engine. On top of that: the ragged attention
+kernel agrees with its jnp reference on a mixed decode/chunk/pad batch, the
+dispatch layer records the ``ragged`` routing kind, a whole serving
+lifetime compiles exactly ONE ragged executable (the compile-budget
+sanitizer's ≤ 2 bound, vs O(log S_max) prefill buckets), decode throughput
+never dips while a long prompt streams in, and the engine is loud (warn /
+raise) rather than silently wrong when ragged mode cannot be used.
+
+Chunk-boundary numerics: multi-chunk prompts carry one f32 reassociation
+per chunk boundary vs the oracle's single fused dot (see
+kernels/ragged_attention.py), so the interleave workloads here are pinned
+to seeds/lengths verified token-identical for BOTH families.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizers import (
+    assert_compile_budget,
+    guarded_decode,
+    no_recompiles,
+    page_invariant_checks,
+)
+from repro.configs import ModelConfig
+from repro.kernels import dispatch
+from repro.kernels.ragged_attention import (
+    ragged_attention_kernel,
+    ragged_attention_ref,
+)
+from repro.launch.serve import ContinuousBatchingEngine, Request
+from repro.models import dense, olmoe
+
+jax.config.update("jax_platform_name", "cpu")
+
+DCFG = ModelConfig(
+    name="tiny-ragged", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, remat=False,
+)
+# capacity_factor=4.0: ragged pad rows route through experts and consume
+# capacity, so the tiny config needs headroom to stay drop-free
+MCFG = ModelConfig(
+    name="tiny-ragged-moe", family="moe", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, vocab=256, remat=False,
+    n_experts=4, top_k=2, d_ff_expert=64, capacity_factor=4.0,
+)
+
+
+@pytest.fixture(scope="module")
+def dparams():
+    return dense.init_params(DCFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def mparams():
+    return olmoe.init_params(MCFG, jax.random.PRNGKey(1))
+
+
+def _prompts(lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, 200, size=n).tolist() for n in lens]
+
+
+def _solo(cfg, params, prompt, max_new=6):
+    """Bucketed-engine solo serving: the token-equality oracle."""
+    eng = ContinuousBatchingEngine(cfg, params, batch_slots=1, max_len=64)
+    req = Request(jnp.asarray(prompt, jnp.int32), max_new=max_new)
+    eng.serve([req])
+    assert req.done
+    return req.out
+
+
+def _ragged_interleaved(cfg, params, prompts, token_budget=16, max_new=6):
+    """Submit-then-step each prompt so chunked prefills overlap live decodes;
+    the whole loop runs under the page-invariant sanitizer and the decode
+    drain under the transfer guard."""
+    eng = ContinuousBatchingEngine(
+        cfg, params, batch_slots=3, max_len=64, paged=True,
+        ragged=True, token_budget=token_budget,
+    )
+    reqs = [Request(jnp.asarray(p, jnp.int32), max_new=max_new) for p in prompts]
+    with page_invariant_checks(eng):
+        for r in reqs:
+            eng.submit(r)
+            eng.step()
+        with guarded_decode():
+            eng.run_until_done()
+    assert all(r.done for r in reqs)
+    return eng, reqs
+
+
+def _mixed_batch(seed=3):
+    """A ragged batch with every row species: one decode row, two prompt
+    chunks mid-stream (one with cache behind it, one starting cold), pads."""
+    rng = np.random.default_rng(seed)
+    B, maxp, page, T, KV, H, hd = 3, 4, 8, 16, 2, 4, 16
+    P = B * maxp
+
+    def f(*s):
+        return jnp.asarray(rng.standard_normal(s), jnp.bfloat16)
+
+    q, kt, vt = f(T, H, hd), f(T, KV, hd), f(T, KV, hd)
+    kp, vp = f(P, page, KV, hd), f(P, page, KV, hd)
+    ctx = np.array([13, 5, 0], np.int32)
+    perm = rng.permutation(P)
+    bt = np.full((B, maxp), -1, np.int32)
+    for b in range(B):
+        n_pg = -(-int(ctx[b]) // page) + 1  # committed pages + one being written
+        bt[b, :n_pg] = perm[b * maxp : b * maxp + n_pg]
+    slot = np.full(T, B, np.int32)
+    pos = np.zeros(T, np.int32)
+    slot[0], pos[0] = 0, 13                      # decode row
+    slot[1:7], pos[1:7] = 1, np.arange(5, 11)    # chunk continuing past cache
+    slot[7:14], pos[7:14] = 2, np.arange(0, 7)   # first chunk of a cold prompt
+    args = (q, kp, vp, kt, vt, jnp.asarray(bt), jnp.asarray(slot),
+            jnp.asarray(pos), jnp.asarray(ctx))
+    return args, slot < B
+
+
+# ---------------------------------------------------------------------------
+# kernel vs reference, dispatch routing
+# ---------------------------------------------------------------------------
+
+
+def test_ragged_kernel_matches_ref_interpret():
+    """Pallas kernel (interpret mode) vs jnp oracle on a mixed batch: pad
+    rows are excluded (their output is garbage by contract)."""
+    args, real = _mixed_batch()
+    ref = np.asarray(ragged_attention_ref(*args), np.float32)
+    ker = np.asarray(ragged_attention_kernel(*args, interpret=True), np.float32)
+    # kernel accumulates fused-f32 while decode-like ref rows round split-bf16,
+    # so agreement is to bf16 tolerance, not bitwise
+    np.testing.assert_allclose(ker[real], ref[real], atol=0.03, rtol=0.05)
+
+
+def test_dispatch_records_ragged_kind():
+    """The routed entry point classifies under kind ``ragged`` and the
+    counters distinguish kernel routes from forced-ref routes."""
+    args, _ = _mixed_batch()
+    dispatch.reset_dispatch_counters()
+    dispatch.ragged_attention(*args)
+    dispatch.ragged_attention(*args, impl="ref")
+    c = dispatch.dispatch_counters()
+    assert c.get("ragged/kernel") == 1, c
+    assert c.get("ragged/ref") == 1 and c.get("ragged/ref[forced]") == 1, c
+
+
+# ---------------------------------------------------------------------------
+# chunk-budget edge cases (prompt vs token_budget boundary)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_prompt", [16, 17])
+def test_prompt_at_and_over_budget(dparams, n_prompt):
+    """A prompt exactly AT the budget prefills in one launch; one token OVER
+    spills a 1-token second chunk. Both must match the bucketed oracle, and
+    both compile the same single ragged executable."""
+    (prompt,) = _prompts([n_prompt])
+    eng = ContinuousBatchingEngine(
+        DCFG, dparams, batch_slots=3, max_len=64, paged=True,
+        ragged=True, token_budget=16,
+    )
+    req = Request(jnp.asarray(prompt, jnp.int32), max_new=6)
+    eng.serve([req])
+    assert req.out == _solo(DCFG, dparams, prompt)
+    cs = eng.compile_stats()
+    assert cs["ragged_traces"] == 1 and cs["prefill_traces"] == 0, cs
+
+
+# ---------------------------------------------------------------------------
+# the acceptance bar: interleaved token equality vs the bucketed oracle
+# ---------------------------------------------------------------------------
+
+
+def test_ragged_interleaved_token_equality_dense(dparams):
+    prompts = _prompts((5, 23, 17, 9))
+    oracles = [_solo(DCFG, dparams, p) for p in prompts]
+    eng, reqs = _ragged_interleaved(DCFG, dparams, prompts)
+    for k, (r, o) in enumerate(zip(reqs, oracles)):
+        assert r.out == o, (k, r.out, o)
+    cs = assert_compile_budget(eng)
+    assert cs["ragged_traces"] == 1 and cs["decode_traces"] == 0, cs
+
+
+def test_ragged_interleaved_token_equality_moe(mparams):
+    """Same bar for the routed-expert family: chunk rows and pad rows flow
+    through the capacity-bounded MoE FFN without perturbing token outputs."""
+    prompts = _prompts((5, 23, 17, 9))
+    oracles = [_solo(MCFG, mparams, p) for p in prompts]
+    eng, reqs = _ragged_interleaved(MCFG, mparams, prompts)
+    for k, (r, o) in enumerate(zip(reqs, oracles)):
+        assert r.out == o, (k, r.out, o)
+    assert eng.compile_stats()["ragged_traces"] == 1
+
+
+# ---------------------------------------------------------------------------
+# decode latency: admission must not displace decode tokens
+# ---------------------------------------------------------------------------
+
+
+def test_decode_tokens_never_drop_during_admission(dparams):
+    """Decode rows are scheduled FIRST, prompt chunks fill what remains: a
+    long prompt streaming in over several steps must never cost a live
+    decoder its per-step token."""
+    eng = ContinuousBatchingEngine(
+        DCFG, dparams, batch_slots=3, max_len=64, paged=True,
+        ragged=True, token_budget=16,
+    )
+    steady = [Request(jnp.asarray([7 + k, 11, 13], jnp.int32), max_new=30)
+              for k in range(2)]
+    for r in steady:
+        eng.submit(r)
+    eng.step()  # both 3-token prompts prefill inside one budget
+    assert all(r._last_logits is not None for r in steady)
+    (long_prompt,) = _prompts([40], seed=2)
+    burst = Request(jnp.asarray(long_prompt, jnp.int32), max_new=4)
+    eng.submit(burst)
+    deltas = []
+    while burst._last_logits is None:  # burst still prefilling
+        before = eng.stats["decode_tokens"]
+        eng.step()
+        deltas.append(eng.stats["decode_tokens"] - before)
+    # 40 prompt tokens through a 16-budget with 2 decode rows reserved:
+    # at least 3 admission steps, each still decoding BOTH steady slots
+    assert len(deltas) >= 3, deltas
+    assert all(d == 2 for d in deltas), deltas
+
+
+# ---------------------------------------------------------------------------
+# compile budget: one executable for the whole lifetime
+# ---------------------------------------------------------------------------
+
+
+def test_ragged_single_trace_no_recompiles(dparams):
+    """After the first step's warmup trace, admissions / chunk interleaves /
+    evictions all reuse the ONE token-budget-shaped executable — the
+    no-recompile sanitizer covers the rest of the lifetime."""
+    prompts = _prompts((5, 23, 17, 9))
+    eng = ContinuousBatchingEngine(
+        DCFG, dparams, batch_slots=3, max_len=64, paged=True,
+        ragged=True, token_budget=16,
+    )
+    reqs = [Request(jnp.asarray(p, jnp.int32), max_new=6) for p in prompts]
+    for r in reqs[:2]:
+        eng.submit(r)
+    eng.step()  # the single warmup trace
+    with no_recompiles(eng):
+        for r in reqs[2:]:
+            eng.submit(r)
+        eng.run_until_done()
+    cs = assert_compile_budget(eng)
+    assert cs["ragged_traces"] == 1, cs
+    assert cs["prefill_traces"] == 0 and cs["decode_traces"] == 0, cs
+
+
+# ---------------------------------------------------------------------------
+# loud failure modes
+# ---------------------------------------------------------------------------
+
+
+def test_ragged_without_paged_falls_back_with_warning(dparams):
+    with pytest.warns(UserWarning, match="ragged"):
+        eng = ContinuousBatchingEngine(
+            DCFG, dparams, batch_slots=2, max_len=64, ragged=True
+        )
+    assert not eng.ragged
+    # the fallback engine still serves correctly through the bucketed path
+    (prompt,) = _prompts([7])
+    req = Request(jnp.asarray(prompt, jnp.int32), max_new=4)
+    eng.serve([req])
+    assert req.out == _solo(DCFG, dparams, prompt, max_new=4)
+
+
+def test_ragged_token_budget_validation(dparams):
+    """A budget smaller than the slot count cannot even fit one decode row
+    per slot: rejected at construction, not wedged at runtime."""
+    with pytest.raises(ValueError, match="token_budget"):
+        ContinuousBatchingEngine(
+            DCFG, dparams, batch_slots=4, max_len=64, paged=True,
+            ragged=True, token_budget=2,
+        )
