@@ -180,6 +180,11 @@ def run_paged(fused: bool = True) -> dict:
                 "compile": eng.compile_stats(),
             }
             if mode == "paged":
+                # fault-tolerance accounting: the healthy lane must serve
+                # with zero preemptions/failures — a nonzero count here means
+                # the pool sizing or the admission path regressed
+                results[mode]["preemptions"] = th["requests_preempted"]
+                results[mode]["failures"] = th["requests_failed"]
                 results[mode]["prefix_hit_rate"] = (
                     th["prefix_hits"] / max(th["prefix_lookups"], 1)
                 )
@@ -205,12 +210,20 @@ def run_paged(fused: bool = True) -> dict:
         "peak_cache_bytes_dense": dn["peak_cache_bytes"],
         "peak_below_dense": pg["peak_cache_bytes"] < dn["peak_cache_bytes"],
         "tokens_match": pg["outputs"] == dn["outputs"],
+        "preemptions": pg["preemptions"],
+        "failures": pg["failures"],
         "routing": pg["routing"],
         "compile": pg["compile"],
         "memory": pg["memory"],
     }
     if not out["tokens_match"]:
         raise RuntimeError("paged serving diverged from the dense oracle")
+    if out["failures"] or out["preemptions"]:
+        raise RuntimeError(
+            f"healthy paged lane hit {out['failures']} failures / "
+            f"{out['preemptions']} preemptions — fault paths must not fire "
+            "without injection"
+        )
     if out["routing"].get("dual/decode", 0) == 0:
         raise RuntimeError(
             f"paged decode trace did not route the decode-shaped kernel "

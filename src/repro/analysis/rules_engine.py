@@ -7,7 +7,10 @@ transfers outside the explicit ``# sync-point`` allowlist (the convention in
 logits download, the position read — carries the comment on its line; any
 other transfer is an accidental pipeline stall). EN002 bans ``jax.jit``
 construction inside step/prefill functions, where it would silently rebuild
-an executable per call.
+an executable per call. EN003 requires engine methods that allocate pages to
+release them on every exception path: an ``alloc`` call in a method with no
+``try`` whose handler/finally releases (directly or via the eviction
+helpers) leaks the reservation when admission throws mid-flight.
 """
 
 from __future__ import annotations
@@ -16,7 +19,7 @@ import ast
 
 from repro.analysis.core import Finding, ModuleAliases, rule
 
-__all__ = ["en001_decode_syncs", "en002_jit_in_step"]
+__all__ = ["en001_decode_syncs", "en002_jit_in_step", "en003_alloc_release"]
 
 SYNC_POINT_MARK = "# sync-point"
 
@@ -130,6 +133,72 @@ def en002_jit_in_step(tree: ast.AST, src: str, path: str) -> list[Finding]:
                         f"jax.jit constructed inside `{fn.name}` — per-call jit "
                         "construction rebuilds the executable wrapper every "
                         "step; hoist it to __init__ or module scope",
+                        path, node.lineno, node.col_offset,
+                    )
+                )
+    return findings
+
+
+# methods matching these names count as release-on-exception helpers for
+# EN003: calling one inside an except/finally hands the reservation back
+# through the engine's common exit path
+_RELEASE_FNS = ("release", "_release_slot", "_evict")
+
+
+def _try_releases(meth: ast.AST) -> bool:
+    """True when the method contains a ``try`` whose handlers or ``finally``
+    release pages (directly or through the eviction helpers)."""
+    for node in ast.walk(meth):
+        if not isinstance(node, ast.Try):
+            continue
+        guarded = list(node.finalbody)
+        for h in node.handlers:
+            guarded.extend(h.body)
+        for g in guarded:
+            for sub in ast.walk(g):
+                if (
+                    isinstance(sub, ast.Call)
+                    and isinstance(sub.func, ast.Attribute)
+                    and sub.func.attr in _RELEASE_FNS
+                ):
+                    return True
+    return False
+
+
+@rule("EN003")
+def en003_alloc_release(tree: ast.AST, src: str, path: str) -> list[Finding]:
+    """Engine methods that allocate pages must release them on all exception
+    paths: every ``.alloc(...)`` call in an ``*Engine`` method must be
+    dominated by a ``try`` whose except/finally hands the reservation back
+    (``.release(...)`` directly, or the ``_release_slot`` / ``_evict``
+    helpers). Without one, any exception between allocation and slot insert
+    — a tampered pack raising a ContractError mid-prefill, a NaN guard —
+    leaks the pages for the life of the engine."""
+    findings: list[Finding] = []
+    for cls in ast.walk(tree):
+        if not (isinstance(cls, ast.ClassDef) and "Engine" in cls.name):
+            continue
+        for meth in cls.body:
+            if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            allocs = [
+                node
+                for node in ast.walk(meth)
+                if isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "alloc"
+            ]
+            if not allocs or _try_releases(meth):
+                continue
+            for node in allocs:
+                findings.append(
+                    Finding(
+                        "EN003",
+                        f"page allocation in {cls.name}.{meth.name} with no "
+                        "try/except/finally that releases the reservation — "
+                        "an exception between alloc and slot insert leaks "
+                        "the pages (release in a handler, or route the exit "
+                        "through _release_slot/_evict)",
                         path, node.lineno, node.col_offset,
                     )
                 )

@@ -14,6 +14,10 @@ Where rules_pallas/rules_engine check source TEXT, these check a LIVE engine:
 * :func:`page_invariant_checks` — wrap ``engine.step`` so
   ``check_page_invariants()`` (refcount/block-table/free-list audit) runs
   every N steps instead of only when a test remembers to call it.
+* :func:`lifecycle_checks` — wrap ``engine.submit``/``engine.step`` so the
+  request state machine is audited every step: terminal requests are done,
+  carry their reason codes, and are off the slots/queue; live slots are
+  PREFILL/DECODE; queued requests are QUEUED/PREEMPTED.
 
 All are context managers designed for test bodies::
 
@@ -36,6 +40,7 @@ import jax
 __all__ = [
     "assert_compile_budget",
     "guarded_decode",
+    "lifecycle_checks",
     "no_recompiles",
     "page_invariant_checks",
 ]
@@ -143,4 +148,80 @@ def page_invariant_checks(engine, every: int = 1):
         yield engine
         engine.check_page_invariants()
     finally:
+        engine.step = orig_step
+
+
+@contextlib.contextmanager
+def lifecycle_checks(engine):
+    """Audit the request state machine inside the serving loop.
+
+    Monkeypatches ``engine.submit`` (to learn which requests exist) and
+    ``engine.step`` so after every step, for every request ever submitted:
+
+    * a terminal request (``RequestState.TERMINAL``) has ``done`` set, sits
+      in no slot and not in the queue, and — for FAILED / TIMED_OUT — carries
+      a machine-readable ``error`` code;
+    * a request live in a slot is PREFILL or DECODE;
+    * a queued request is QUEUED or PREEMPTED.
+
+    The chaos suite runs whole fault schedules under this, so any exit path
+    that forgets its bookkeeping fails at the step that broke it.
+    """
+    from repro.launch.serve import RequestState
+
+    seen: list = []
+    orig_submit = engine.submit
+    orig_step = engine.step
+
+    def tracked_submit(req, *args, **kwargs):
+        if all(req is not r for r in seen):
+            seen.append(req)
+        return orig_submit(req, *args, **kwargs)
+
+    def audit() -> None:
+        in_slots = [r for r in engine.slots if r is not None]
+        in_queue = list(engine.queue)
+        for req in seen:
+            rid = req.request_id
+            if req.status in RequestState.TERMINAL:
+                if not req.done:
+                    raise SanitizerError(
+                        f"lifecycle sanitizer: {rid} is {req.status} but not done"
+                    )
+                if any(req is r for r in in_slots) or any(req is r for r in in_queue):
+                    raise SanitizerError(
+                        f"lifecycle sanitizer: terminal request {rid} "
+                        f"({req.status}) still held by a slot or the queue"
+                    )
+                if req.status in (RequestState.FAILED, RequestState.TIMED_OUT) \
+                        and not req.error:
+                    raise SanitizerError(
+                        f"lifecycle sanitizer: {rid} is {req.status} with no "
+                        "error reason code"
+                    )
+            elif any(req is r for r in in_slots):
+                if req.status not in (RequestState.PREFILL, RequestState.DECODE):
+                    raise SanitizerError(
+                        f"lifecycle sanitizer: slot-resident request {rid} is "
+                        f"{req.status}, expected PREFILL/DECODE"
+                    )
+            elif any(req is r for r in in_queue):
+                if req.status not in (RequestState.QUEUED, RequestState.PREEMPTED):
+                    raise SanitizerError(
+                        f"lifecycle sanitizer: queued request {rid} is "
+                        f"{req.status}, expected QUEUED/PREEMPTED"
+                    )
+
+    def checked_step(*args, **kwargs):
+        out = orig_step(*args, **kwargs)
+        audit()
+        return out
+
+    engine.submit = tracked_submit
+    engine.step = checked_step
+    try:
+        yield engine
+        audit()
+    finally:
+        engine.submit = orig_submit
         engine.step = orig_step

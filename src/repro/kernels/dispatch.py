@@ -76,11 +76,13 @@ __all__ = [
     "classify_w4a16",
     "default_interpret",
     "dispatch_counters",
+    "force_ref_enabled",
     "fused_linear",
     "fusion_enabled",
     "quant_linear",
     "ragged_attention",
     "reset_dispatch_counters",
+    "set_force_ref",
     "set_fusion",
     "w4a16_linear",
 ]
@@ -120,6 +122,30 @@ def set_fusion(enabled: bool) -> bool:
     global _fusion_enabled
     prev = _fusion_enabled
     _fusion_enabled = bool(enabled)
+    return prev
+
+
+_force_ref = False
+
+
+def force_ref_enabled() -> bool:
+    """Whether every dispatch entry is forced onto its reference path."""
+    return _force_ref
+
+
+def set_force_ref(enabled: bool) -> bool:
+    """Force every dispatch entry point onto its reference path (as if
+    ``impl="ref"``); returns the previous setting.
+
+    The chaos harness's degraded-mode switch (launch/faults.py): with the
+    flag on, newly-TRACED executables route ``<kind>/ref[forced]`` — the
+    graceful-degradation behavior when a kernel backend is suspect. Effect
+    is trace-time only: executables compiled before the flip keep their
+    routes (jit caching), so flip it before constructing the engine under
+    test."""
+    global _force_ref
+    prev = _force_ref
+    _force_ref = bool(enabled)
     return prev
 
 
@@ -327,7 +353,7 @@ def quant_linear(
     check_twinquant_pack(w, k)
     x2, batch_shape, m = _flatten(x)
     explicit = block_m is not None or block_n is not None or block_k is not None
-    if impl == "ref":
+    if impl == "ref" or _force_ref:
         route = Route(PATH_REF, None, "forced impl=ref", "forced")
     elif explicit:
         base = get_blocks("dual_prefill", m, n, k, w.group, w.rank) or (
@@ -385,7 +411,7 @@ def fused_linear(
     # a diagnostic, not a silent fallback
     check_twinquant_group_pack(gw, k)
     x2, batch_shape, m = _flatten(x)
-    if impl == "ref":
+    if impl == "ref" or _force_ref:
         route = Route(PATH_REF, None, "forced impl=ref", "forced")
     else:
         route = classify_dual_group(m, k, gw.group, gw.seg_n, gw.seg_r, gw.rgroups)
@@ -432,7 +458,7 @@ def w4a16_linear(
     check_w4a16_pack(wp, ws, k, group)
     x2, batch_shape, m = _flatten(x)
     explicit = block_m is not None or block_n is not None or block_k is not None
-    if impl == "ref":
+    if impl == "ref" or _force_ref:
         route = Route(PATH_REF, None, "forced impl=ref", "forced")
     elif explicit:
         base = get_blocks("w4a16", m, n, k, group) or (min(128, m), 128, group)
@@ -497,7 +523,7 @@ def ragged_attention(
     t, h, hd = q.shape
     kvh = kt.shape[1]
     b, maxp = bt.shape
-    if impl == "ref":
+    if impl == "ref" or _force_ref:
         route = Route(PATH_REF, None, "forced impl=ref", "forced")
     else:
         route = classify_ragged(t, h, kvh, hd, b, maxp, kp.shape[1])

@@ -1,0 +1,169 @@
+"""Seeded, deterministic fault injection for the serving engine.
+
+:class:`FaultInjector` is the chaos half of the fault-tolerance contract
+(docs/serving.md "Fault model & request lifecycle"): it perturbs exactly one
+thing, at exactly one point, reproducibly — so ``tests/test_chaos.py`` can
+assert the engine's recovery invariants (unaffected requests bit-identical
+to a fault-free run, allocator audit green after every step) rather than
+merely "it didn't crash". Faults on offer:
+
+* :meth:`deny_alloc` — make ``PageAllocator.alloc`` report exhaustion at the
+  Nth call (admission back-pressure / preemption trigger without actually
+  shrinking the pool);
+* :meth:`force_ref_dispatch` — flip every dispatch entry point onto its
+  reference path (the degraded mode when a kernel backend is suspect);
+* :meth:`tamper_pack` — return a params tree with ONE TwinQuant pack's
+  ``rp`` truncated along K, so the next trace raises a ContractError
+  (exercises the engine's quarantine-on-prefill-exception path);
+* :meth:`corrupt_logits` — poison one slot's row of the downloaded logits at
+  the Nth sync-point tap (exercises the finite-logits guard).
+
+Every injection records a log entry and pushes an undo thunk;
+:meth:`restore` (or exiting the ``with`` block) unwinds them LIFO, so a
+failing test can never leak a fault into the next one.
+
+All injection is host-side (allocator calls, the sync-point logits tap, the
+params pytree before engine construction) — device executables are never
+patched, which is what keeps the injected runs bit-comparable to clean ones.
+"""
+
+from __future__ import annotations
+
+import copy
+from typing import Any
+
+import numpy as np
+
+from repro.kernels import dispatch
+
+# sibling keys the fusion pass may merge at engine construction
+# (core.twinquant.FUSE_GROUPS): tampering one of THOSE packs would crash
+# fuse_params before the engine even exists, which is a different failure
+# than the mid-prefill ContractError the chaos suite wants to exercise
+_FUSABLE_KEYS = frozenset(
+    {"q", "k", "v", "gate", "up", "wq_a", "wkv_a", "qkv", "gate_up", "wqkv_a"}
+)
+
+
+def _is_pack(d: Any) -> bool:
+    return isinstance(d, dict) and "rp" in d
+
+
+class FaultInjector:
+    """Deterministic, seeded fault injection with LIFO undo.
+
+    Use as a context manager so faults can't outlive the test::
+
+        with FaultInjector(seed=0) as fi:
+            fi.deny_alloc(engine, at_call=3)
+            engine.serve(requests)
+    """
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+        self.log: list[dict] = []
+        self._undo: list = []
+
+    # -- bookkeeping --------------------------------------------------------
+
+    def _note(self, kind: str, **info) -> None:
+        self.log.append({"kind": kind, **info})
+
+    def restore(self) -> None:
+        """Unwind every active injection, most recent first."""
+        while self._undo:
+            self._undo.pop()()
+
+    def __enter__(self) -> "FaultInjector":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.restore()
+
+    # -- faults -------------------------------------------------------------
+
+    def deny_alloc(self, engine, at_call: int, count: int = 1) -> None:
+        """Make the engine's ``PageAllocator.alloc`` report exhaustion
+        (return None) for calls ``at_call .. at_call+count-1`` (1-based),
+        counted from now. ``count=0`` denies every call from ``at_call`` on.
+        The free list itself is untouched — this is pure back-pressure."""
+        allocator = engine.allocator
+        orig = allocator.alloc
+        state = {"calls": 0}
+
+        def flaky_alloc(n):
+            state["calls"] += 1
+            c = state["calls"]
+            if c >= at_call and (count == 0 or c < at_call + count):
+                self._note("deny_alloc", call=c, n=n)
+                return None
+            return orig(n)
+
+        allocator.alloc = flaky_alloc
+
+        def undo():
+            allocator.alloc = orig
+
+        self._undo.append(undo)
+
+    def force_ref_dispatch(self) -> None:
+        """Route every dispatch entry traced from now on to its reference
+        path (``<kind>/ref[forced]``). Trace-time only: flip BEFORE building
+        the engine under test (jit-cached executables keep their routes)."""
+        prev = dispatch.set_force_ref(True)
+        self._note("force_ref_dispatch", prev=prev)
+        self._undo.append(lambda: dispatch.set_force_ref(prev))
+
+    def tamper_pack(self, params) -> Any:
+        """Return a deep copy of ``params`` with ONE TwinQuant pack's ``rp``
+        truncated along its K axis — a malformed pack the dispatch contract
+        layer rejects with a ContractError at the next trace. Only
+        non-fusable packs (e.g. attention output, MLP down) are candidates,
+        so the corruption surfaces inside engine prefill, not in the fusion
+        pass at construction. The victim is chosen by the injector's rng."""
+        tampered = copy.deepcopy(params)
+        packs: list[tuple[str, dict]] = []
+
+        def walk(tree, path):
+            if isinstance(tree, dict):
+                for key, sub in tree.items():
+                    if _is_pack(sub) and key not in _FUSABLE_KEYS:
+                        packs.append((f"{path}/{key}", sub))
+                    elif isinstance(sub, dict):
+                        walk(sub, f"{path}/{key}")
+
+        walk(tampered, "")
+        if not packs:
+            raise ValueError("tamper_pack: no non-fusable TwinQuant pack in params")
+        path, pack = packs[self.rng.integers(len(packs))]
+        pack["rp"] = pack["rp"][..., :-1, :]
+        self._note("tamper_pack", path=path, rp_shape=tuple(pack["rp"].shape))
+        return tampered
+
+    def corrupt_logits(self, slot: int, at_call: int = 1, tag: str = "decode",
+                       value: float = float("nan")) -> None:
+        """Poison slot ``slot``'s row of the downloaded logits at the Nth
+        sync-point tap whose tag matches (``"prefill"`` / ``"decode"`` /
+        ``"ragged"``; 1-based count). The array is copied before writing, so
+        nothing upstream (device buffers, other rows' bytes) is touched —
+        which is exactly why the rest of the batch must stay bit-identical."""
+        from repro.models import common as C
+
+        state = {"calls": 0}
+
+        def tap(last, t):
+            if t != tag:
+                return last
+            state["calls"] += 1
+            if state["calls"] != at_call:
+                return last
+            self._note("corrupt_logits", slot=slot, tag=t, call=at_call)
+            last = np.array(last, copy=True)
+            if last.ndim == 1:
+                last[:] = value
+            else:
+                last[slot, :] = value
+            return last
+
+        prev = C.set_logits_tap(tap)
+        self._undo.append(lambda: C.set_logits_tap(prev))

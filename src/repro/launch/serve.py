@@ -39,6 +39,20 @@ Engine architecture (DESIGN.md §10, §14):
   decode latency stays flat while long prompts stream in, and the prefill
   bucket inventory collapses to a single token-budget trace. See
   docs/serving.md for the full lifecycle.
+* **Request lifecycle** is an explicit state machine (:class:`RequestState`:
+  ``QUEUED -> PREFILL -> DECODE -> {DONE, FAILED, CANCELLED, TIMED_OUT,
+  PREEMPTED}``) with per-request error capture (``req.error`` holds a
+  machine-readable reason code), ``engine.cancel(request_id)``, per-request
+  deadlines (``deadline_steps`` / ``deadline_s``), and — in paged mode with
+  ``preemption=True`` — preempt + requeue under page pressure: the victim's
+  pages are released, its generated tokens are kept, and it re-enqueues
+  with prompt+generated as the new prefix so the prefix cache restores the
+  shared pages copy-free on readmission. Every exit path (done, failed,
+  cancelled, timed out, preempted, stalled) releases pages and neutralizes
+  bt/pos through the same ``_release_slot`` helper. A finite-logits guard
+  at the sanctioned sync points quarantines a slot producing NaN/Inf logits
+  (``status=FAILED``, ``error="nan_logits"``) without perturbing the rest
+  of the batch. See docs/serving.md "Fault model & request lifecycle".
 """
 
 from __future__ import annotations
@@ -111,13 +125,89 @@ class SamplingParams:
     seed: int = 0
 
 
+class RequestState:
+    """Explicit request lifecycle states (docs/serving.md "Fault model").
+
+    ``NEW -> QUEUED -> PREFILL -> DECODE -> {DONE, FAILED, CANCELLED,
+    TIMED_OUT}`` with ``PREEMPTED`` as the requeue detour (``PREFILL/DECODE
+    -> PREEMPTED -> PREFILL`` on readmission). ``TERMINAL`` is the set of
+    states a request never leaves; the engine enforces the transition table
+    so an illegal edge is a loud bug, not silent state drift."""
+
+    NEW = "NEW"
+    QUEUED = "QUEUED"
+    PREFILL = "PREFILL"
+    DECODE = "DECODE"
+    DONE = "DONE"
+    FAILED = "FAILED"
+    CANCELLED = "CANCELLED"
+    TIMED_OUT = "TIMED_OUT"
+    PREEMPTED = "PREEMPTED"
+    TERMINAL = frozenset({DONE, FAILED, CANCELLED, TIMED_OUT})
+
+
+_TRANSITIONS: dict[str, frozenset] = {
+    RequestState.NEW: frozenset({RequestState.QUEUED}),
+    RequestState.QUEUED: frozenset({
+        RequestState.PREFILL, RequestState.CANCELLED, RequestState.TIMED_OUT,
+    }),
+    RequestState.PREFILL: frozenset({
+        RequestState.DECODE, RequestState.FAILED, RequestState.CANCELLED,
+        RequestState.TIMED_OUT, RequestState.PREEMPTED,
+    }),
+    RequestState.DECODE: frozenset({
+        RequestState.DONE, RequestState.FAILED, RequestState.CANCELLED,
+        RequestState.TIMED_OUT, RequestState.PREEMPTED,
+    }),
+    RequestState.PREEMPTED: frozenset({
+        RequestState.PREFILL, RequestState.CANCELLED, RequestState.TIMED_OUT,
+    }),
+    RequestState.DONE: frozenset(),
+    RequestState.FAILED: frozenset(),
+    RequestState.CANCELLED: frozenset(),
+    RequestState.TIMED_OUT: frozenset(),
+}
+
+# terminal state -> the stats counter it bumps
+_FINISH_COUNTER = {
+    RequestState.DONE: "requests_done",
+    RequestState.FAILED: "requests_failed",
+    RequestState.CANCELLED: "requests_cancelled",
+    RequestState.TIMED_OUT: "requests_timed_out",
+}
+
+
+class _SlotFault(RuntimeError):
+    """Internal: a slot-attributable fault detected during admission (e.g.
+    non-finite prefill logits); carries the machine-readable reason code."""
+
+    def __init__(self, code: str, detail: str):
+        super().__init__(detail)
+        self.code = code
+        self.detail = detail
+
+
+def _fault_of(e: Exception) -> tuple[str, str]:
+    """(code, detail) for an exception caught on a slot-attributable path."""
+    if isinstance(e, _SlotFault):
+        return e.code, e.detail
+    return "prefill_exception", f"{type(e).__name__}: {e}"
+
+
 @dataclasses.dataclass(eq=False)
 class Request:
     """One generation request: a prompt, a token quota, and sampling params.
 
     The engine writes results back onto the object: ``out`` (generated token
-    ids), ``done``, and ``truncated`` (stopped by cache capacity before
-    filling ``max_new``). Fields prefixed ``_`` are engine-private."""
+    ids), ``status`` (a :class:`RequestState` value), ``done`` (reached a
+    terminal state), ``truncated`` (stopped by cache capacity before filling
+    ``max_new``), and — on FAILED/TIMED_OUT exits — ``error`` (machine-
+    readable reason code, e.g. ``nan_logits`` / ``deadline_steps``) plus
+    ``error_detail`` (human-readable context). ``request_id`` is assigned at
+    ``submit()`` when not provided; ``priority`` orders preemption victims
+    (lower preempts first); ``deadline_steps`` / ``deadline_s`` bound the
+    request's lifetime in engine steps / wall-clock seconds from submission.
+    Fields prefixed ``_`` are engine-private."""
 
     prompt: Any  # (S,) int32
     max_new: int = 16
@@ -128,6 +218,14 @@ class Request:
     # set at eviction when the request hit cache capacity before filling its
     # max_new quota (prompt_len + max_new > engine.max_len)
     truncated: bool = False
+    # lifecycle (docs/serving.md "Fault model & request lifecycle")
+    request_id: Optional[str] = None  # assigned at submit() when None
+    priority: int = 0  # preemption picks the lowest-priority victim first
+    deadline_steps: Optional[int] = None  # engine steps allowed after submit
+    deadline_s: Optional[float] = None  # wall-clock budget after submit
+    status: str = RequestState.NEW
+    error: Optional[str] = None  # machine-readable failure reason code
+    error_detail: Optional[str] = None
     # engine-private
     _last_logits: Any = dataclasses.field(default=None, repr=False)
     _rng: Any = dataclasses.field(default=None, repr=False)
@@ -135,11 +233,35 @@ class Request:
     # and the prompt as a host int32 array, cached at admission
     _filled: int = dataclasses.field(default=0, repr=False)
     _prompt: Any = dataclasses.field(default=None, repr=False)
+    # host copy of the ORIGINAL prompt (set at submit); preemption rebuilds
+    # the effective prompt as _prompt_host + out without device transfers
+    _prompt_host: Any = dataclasses.field(default=None, repr=False)
+    # resolved deadlines (absolute engine step / monotonic time), set at submit
+    _deadline_step: Any = dataclasses.field(default=None, repr=False)
+    _deadline_t: Any = dataclasses.field(default=None, repr=False)
+    _preemptions: int = dataclasses.field(default=0, repr=False)
 
 
 # ---------------------------------------------------------------------------
 # paged-pool host bookkeeping (DESIGN.md §14)
 # ---------------------------------------------------------------------------
+
+
+class AllocatorError(AssertionError):
+    """A page-allocator bookkeeping violation — double release, unknown page
+    id, or sharing an unreferenced page — raised with the page id and its
+    refcount spelled out instead of silently corrupting the free list.
+    Subclasses ``AssertionError`` so callers treating allocator misuse as an
+    assertion failure keep working."""
+
+
+class EngineStalledError(RuntimeError):
+    """``run_until_done`` exhausted its step budget with live work remaining.
+
+    The still-live requests have already been marked ``TIMED_OUT`` (pages
+    released, error code ``engine_stalled``) by the time this raises, so a
+    wedged engine cannot be mistaken for a drained one and never leaks its
+    page reservations."""
 
 
 class PageAllocator:
@@ -150,7 +272,9 @@ class PageAllocator:
     pages, ``share`` adds a reference (prefix reuse / cache registration),
     ``release`` drops one and returns fully-freed pages to the free list.
     ``audit`` asserts the free list and refcounts partition the pool — the
-    no-leak / no-double-map invariant the churn tests exercise."""
+    no-leak / no-double-map invariant the churn tests exercise. Misuse
+    (double release, unknown ids, sharing unreferenced pages) raises
+    :class:`AllocatorError` with the offending page and refcount."""
 
     def __init__(self, n_pages: int):
         self.n_pages = n_pages
@@ -180,18 +304,43 @@ class PageAllocator:
         self.peak_used = max(self.peak_used, self.n_used)
         return pages
 
+    def _known(self, p: int, op: str) -> int:
+        p = int(p)
+        if not 0 <= p < self.n_pages:
+            raise AllocatorError(
+                f"{op} of unknown page {p}: valid page ids are "
+                f"0..{self.n_pages - 1}"
+            )
+        return p
+
     def share(self, pages) -> None:
         """Add one reference to each already-referenced page (prefix-cache
-        reuse in a new slot, or cache registration)."""
+        reuse in a new slot, or cache registration). Sharing an unknown or
+        unreferenced page raises :class:`AllocatorError` — an unreferenced
+        page may already be recycled into another slot's timeline."""
         for p in pages:
-            assert self.ref[p] > 0, f"sharing unreferenced page {p}"
+            p = self._known(p, "share")
+            if self.ref[p] <= 0:
+                raise AllocatorError(
+                    f"sharing unreferenced page {p} (refcount "
+                    f"{int(self.ref[p])}): only mapped or cached pages can "
+                    "take another reference"
+                )
             self.ref[p] += 1
 
     def release(self, pages) -> None:
         """Drop one reference per page; fully-unreferenced pages return to
-        the free list."""
+        the free list. Releasing an unknown page or a page whose refcount is
+        already zero raises :class:`AllocatorError` (a double release would
+        put the page on the free list twice and hand it to two slots)."""
         for p in pages:
-            assert self.ref[p] > 0, f"double release of page {p}"
+            p = self._known(p, "release")
+            if self.ref[p] <= 0:
+                raise AllocatorError(
+                    f"double release of page {p} (refcount already "
+                    f"{int(self.ref[p])}): the page is on the free list and "
+                    "releasing it again would corrupt the pool"
+                )
             self.ref[p] -= 1
             if self.ref[p] == 0:
                 self.free.append(p)
@@ -278,13 +427,22 @@ class PrefixCache:
             e.tick = self._tick
             parent = e.eid
 
-    def evict(self, n_free_needed: int) -> int:
+    def evict(self, n_free_needed: int, protect=()) -> int:
         """Drop LRU leaf entries (an inner entry is only evictable once its
         children are gone) until the allocator has ``n_free_needed`` free
-        pages or nothing evictable remains. Returns entries evicted."""
+        pages or nothing evictable remains. Returns entries evicted.
+
+        ``protect`` is a collection of page ids that must survive: under
+        preemption, the pages an admission attempt just MATCHED are a
+        preempted request's resume ticket, and evicting them to fund that
+        same (possibly failing) allocation would destroy the copy-free
+        restore for zero gain."""
         evicted = 0
         while self.allocator.n_free < n_free_needed:
-            leaves = [e for e in self.entries.values() if e.children == 0]
+            leaves = [
+                e for e in self.entries.values()
+                if e.children == 0 and e.page not in protect
+            ]
             if not leaves:
                 break
             e = min(leaves, key=lambda e: e.tick)
@@ -439,7 +597,7 @@ class ContinuousBatchingEngine:
                  paged: bool = False, page_size: int = 16, n_pages: Optional[int] = None,
                  prefix_caching: bool = True, bucket_prompts: bool = True,
                  on_truncation: str = "warn", ragged: bool = False,
-                 token_budget: int = 64):
+                 token_budget: int = 64, preemption: bool = False):
         if on_truncation not in ("warn", "reject"):
             raise ValueError(f"on_truncation must be 'warn' or 'reject', got {on_truncation!r}")
         self.cfg = cfg
@@ -459,6 +617,11 @@ class ContinuousBatchingEngine:
         self.paged = paged
         self.bucket_prompts = bucket_prompts
         self.on_truncation = on_truncation
+        # preempt + requeue under page pressure (paged mode only): opt-in so
+        # the no-preemption admission behavior stays the A/B baseline
+        self.preemption = bool(preemption)
+        self._steps = 0  # lifetime engine steps (deadline_steps clock)
+        self._next_rid = 0
         # frontend row inflation: vlm prefill prepends n_patches rows to the
         # decoder cache, so capacity/page math must count them with the prompt
         self._extra_rows = cfg.n_patches if cfg.family == "vlm" else 0
@@ -536,6 +699,8 @@ class ContinuousBatchingEngine:
             "prefill_tokens": 0, "prefill_s": 0.0,
             "decode_tokens": 0, "decode_steps": 0, "decode_s": 0.0,
             "requests_done": 0, "requests_truncated": 0,
+            "requests_failed": 0, "requests_cancelled": 0,
+            "requests_timed_out": 0, "requests_preempted": 0,
             "prefix_lookups": 0, "prefix_hits": 0, "prefix_hit_tokens": 0,
         }
         # dispatch-counter baseline: routing() reports the delta, i.e. the
@@ -553,12 +718,24 @@ class ContinuousBatchingEngine:
         queue or slot state, so one bad request can never strand a batch
         mid-generation. Re-submitting a request that is already queued or
         live is a no-op."""
-        if req.done:  # already served (e.g. admitted+finished inside one step)
-            return True
+        if req.status in RequestState.TERMINAL or req.done:
+            return True  # already resolved (e.g. admitted+finished inside one step)
         prompt = np.asarray(req.prompt)
         if prompt.ndim != 1:
             raise ValueError(f"prompt must be 1-D (S,), got shape {prompt.shape}")
         n = int(prompt.shape[0])
+        if n and not np.issubdtype(prompt.dtype, np.integer):
+            raise ValueError(
+                f"prompt must hold integer token ids, got dtype {prompt.dtype}"
+            )
+        if n and (int(prompt.min()) < 0 or int(prompt.max()) >= self.cfg.vocab):
+            bad = [int(t) for t in prompt if not 0 <= int(t) < self.cfg.vocab][:8]
+            raise ValueError(
+                f"prompt contains token ids outside the model vocab "
+                f"[0, {self.cfg.vocab}): {bad} — rejected at submit() so "
+                "garbage input fails at the API boundary, not as an XLA "
+                "gather deep inside prefill"
+            )
         rows = n + self._extra_rows  # cache rows the prompt occupies
         if not 1 <= rows < self.max_len:
             raise ValueError(
@@ -581,6 +758,16 @@ class ContinuousBatchingEngine:
                 )
         if any(s is req for s in self.slots) or any(q is req for q in self.queue):
             return any(s is req for s in self.slots)
+        if req.request_id is None:
+            req.request_id = f"req-{self._next_rid}"
+            self._next_rid += 1
+        req._prompt_host = prompt.astype(np.int32)
+        if req.status == RequestState.NEW:
+            self._set_status(req, RequestState.QUEUED)
+        if req.deadline_steps is not None and req._deadline_step is None:
+            req._deadline_step = self._steps + int(req.deadline_steps)
+        if req.deadline_s is not None and req._deadline_t is None:
+            req._deadline_t = time.monotonic() + float(req.deadline_s)
         self.queue.append(req)
         self._admit()
         return any(s is req for s in self.slots)
@@ -613,18 +800,203 @@ class ContinuousBatchingEngine:
         t0 = time.monotonic()
         logits, sub = self._prefill(self.params, jnp.asarray(toks), self._sub_template, **kwargs)
         last = np.asarray(logits[0, -1].astype(jnp.float32))  # sync-point
+        last = C.logits_tap(last, "prefill")
         self.stats["prefill_s"] += time.monotonic() - t0
         self.stats["prefill_tokens"] += s_real
         return last, sub, bucket
 
+    def _check_prefill_logits(self, last: np.ndarray) -> None:
+        """Finite-logits guard on the freshly-downloaded prefill row: a
+        non-finite row fails only THIS request (reason ``nan_logits``), never
+        the batch."""
+        if C.nonfinite_rows(last[None, :], self.cfg.vocab):
+            raise _SlotFault("nan_logits", "non-finite prefill logits")
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _set_status(self, req: Request, new: str) -> None:
+        allowed = _TRANSITIONS.get(req.status, frozenset())
+        if new not in allowed:
+            raise RuntimeError(
+                f"illegal request state transition {req.status} -> {new} "
+                f"(request {req.request_id})"
+            )
+        req.status = new
+
+    def _finish(self, req: Request, status: str,
+                code: Optional[str] = None, detail: Optional[str] = None) -> None:
+        """Terminal host bookkeeping shared by every exit path: transition to
+        ``status``, set ``done``, capture the failure reason, bump the
+        matching stats counter."""
+        self._set_status(req, status)
+        req.done = True
+        if code is not None:
+            req.error = code
+            req.error_detail = detail
+        req._last_logits = None
+        self.stats[_FINISH_COUNTER[status]] += 1
+
+    def _release_slot(self, i: int) -> None:
+        """Release slot ``i``'s pages and neutralize its device state — the
+        ONE reclaim path every exit (done, failed, cancelled, timed out,
+        preempted, stalled) goes through, so no exit can leak pages or leave
+        a stale block-table row attending garbage."""
+        if self.allocator is not None:
+            self.allocator.release([int(p) for p in self._bt[i] if p >= 0])
+            self._bt[i, :] = -1
+            # block-table upload is a sanctioned exit-path transfer: the
+            # transfer-guard sanitizer keeps the rest of the decode loop
+            # transfer-free (see analysis/sanitizers.guarded_decode)
+            with jax.transfer_guard("allow"):
+                self.state["bt"] = jnp.asarray(self._bt)
+                # neutralize the freed slot: pos 0 + unmapped block table means
+                # its lock-step garbage decode attends nothing and writes nowhere
+                self.state["pos"] = self.state["pos"].at[i].set(0)
+        if self.ragged:
+            self._pos_host[i] = 0
+
+    def _effective_prompt(self, req: Request) -> np.ndarray:
+        """The request's prompt as the engine should (re)prefill it now:
+        the original prompt, extended by the generated tokens when the
+        request was preempted mid-generation (host arrays only — no device
+        transfer)."""
+        base = req._prompt_host
+        if base is None:  # direct _admit_one callers that bypassed submit()
+            base = np.asarray(req.prompt, np.int32)
+        if not req.out:
+            return base
+        return np.concatenate([base, np.asarray(req.out, np.int32)])
+
+    def _committed_rows(self, i: int, req: Request) -> int:
+        """Cache rows slot ``i`` has actually written (prompt + generated)."""
+        if self.ragged:
+            return int(self._pos_host[i])
+        return len(req._prompt_host) + self._extra_rows + len(req.out)
+
+    def cancel(self, request) -> bool:
+        """Cancel a queued or live request by ``request_id`` (or the Request
+        object itself). A live request's pages are released and its slot
+        neutralized exactly like an eviction; generated-so-far tokens stay on
+        ``req.out``. Returns True when the request was cancelled, False when
+        it is unknown or already terminal."""
+        req = None
+        if isinstance(request, Request):
+            req = request
+        else:
+            for r in list(self.queue) + [s for s in self.slots if s is not None]:
+                if r.request_id == request:
+                    req = r
+                    break
+        if req is None or req.status in RequestState.TERMINAL:
+            return False
+        for i, s in enumerate(self.slots):
+            if s is req:
+                self.slots[i] = None
+                self._release_slot(i)
+                self._finish(req, RequestState.CANCELLED)
+                return True
+        try:
+            self.queue.remove(req)
+        except ValueError:
+            return False  # not queued, not live: nothing to cancel
+        self._finish(req, RequestState.CANCELLED)
+        return True
+
+    def _deadline_code(self, req: Request, now: float) -> Optional[str]:
+        if req._deadline_step is not None and self._steps > req._deadline_step:
+            return "deadline_steps"
+        if req._deadline_t is not None and now >= req._deadline_t:
+            return "deadline_s"
+        return None
+
+    def _expire_deadlines(self) -> None:
+        """TIME_OUT every queued or live request whose step/wall-clock
+        deadline has passed; live slots release pages through the common
+        exit path. Runs at the top of every engine step."""
+        now = time.monotonic()
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            code = self._deadline_code(req, now)
+            if code:
+                self.slots[i] = None
+                self._release_slot(i)
+                self._finish(req, RequestState.TIMED_OUT, code,
+                             f"deadline expired at engine step {self._steps}")
+        if any(self._deadline_code(q, now) for q in self.queue):
+            keep: deque[Request] = deque()
+            for q in self.queue:
+                code = self._deadline_code(q, now)
+                if code:
+                    self._finish(q, RequestState.TIMED_OUT, code,
+                                 f"deadline expired at engine step {self._steps} "
+                                 "while queued")
+                else:
+                    keep.append(q)
+            self.queue = keep
+
+    def _preempt(self, i: int, req: Request) -> None:
+        """Preempt slot ``i``: register its fully-written pages under
+        prompt+generated (so readmission restores them copy-free from the
+        prefix cache), release the slot's page reservation, keep the
+        generated tokens, and re-enqueue. A resumed greedy request emits
+        tokens identical to an uninterrupted run — the effective prompt IS
+        the uninterrupted timeline."""
+        committed = self._committed_rows(i, req)
+        eff = self._effective_prompt(req)
+        if self.prefix_cache is not None and not req.frontend:
+            row = [int(p) for p in self._bt[i] if p >= 0]
+            self.prefix_cache.register(eff[:committed], row)
+        self._set_status(req, RequestState.PREEMPTED)
+        req._preemptions += 1
+        self.stats["requests_preempted"] += 1
+        self.slots[i] = None
+        self._release_slot(i)
+        req._last_logits = None
+        req._filled = 0
+        req._prompt = None
+        self.queue.append(req)
+
+    def _preempt_for(self, head: Request, admitted: list) -> bool:
+        """Pick and preempt one victim so the page-starved ``head`` can
+        admit: the lowest-priority live slot, ties broken by longest
+        remaining quota. Only a STRICTLY lower-priority slot is eligible —
+        equal-priority preemption could ping-pong two requests that each
+        need the whole pool, whereas strict ordering makes every preemption
+        chain finite. Slots admitted during this admission pass and slots
+        about to hit capacity anyway are also exempt. Returns True when a
+        victim was preempted (the caller retries the head)."""
+        if not self.preemption or self.allocator is None:
+            return False
+        victims = [
+            (req.priority, -(req.max_new - len(req.out)), i)
+            for i, req in enumerate(self.slots)
+            if req is not None
+            and all(req is not a for a in admitted)
+            and req.priority < head.priority
+            and self._committed_rows(i, req) + 1 < self.max_len
+        ]
+        if not victims:
+            return False
+        _, _, i = min(victims)
+        self._preempt(i, self.slots[i])
+        return True
+
     def _admit(self) -> None:
+        admitted: list = []
         while self.queue:
             free = [i for i, s in enumerate(self.slots) if s is None]
             if not free:
                 return
-            if not self._admit_one(self.queue[0], free[0]):
-                return  # page-gated: the head request waits for evictions
-            self.queue.popleft()
+            head = self.queue[0]
+            if self._admit_one(head, free[0]):
+                self.queue.popleft()
+                admitted.append(head)
+                continue
+            # page-gated: preempt the cheapest victim and retry the head, or
+            # (preemption off / no eligible victim) wait for evictions
+            if not self._preempt_for(head, admitted):
+                return
 
     def _admit_one_ragged(self, req: Request, i: int) -> bool:
         """Ragged-mode admission: reserve the request's pages (prefix-cache
@@ -632,9 +1004,10 @@ class ContinuousBatchingEngine:
         first uncached prompt token. No prefill call happens here — the
         prompt is streamed through subsequent ``_step_ragged`` launches in
         token-budget-sized chunks."""
-        prompt = np.asarray(req.prompt, np.int32)
+        prompt = self._effective_prompt(req)  # prompt (+generated, if preempted)
         n = len(prompt)
-        need = min(n + req.max_new, self.max_len)
+        remaining = req.max_new - len(req.out)
+        need = min(n + remaining, self.max_len)
         n_res = -(-need // self.page_size)
         m_tok, shared = 0, []
         if self.prefix_cache is not None and not req.frontend:
@@ -646,40 +1019,64 @@ class ContinuousBatchingEngine:
         self.allocator.share(shared)
         pages = self.allocator.alloc(n_res - len(shared))
         if pages is None and self.prefix_cache is not None:
-            self.prefix_cache.evict(n_res - len(shared))
+            # under preemption, never evict the pages this attempt matched —
+            # they are the preempted request's copy-free resume ticket
+            protect = frozenset(shared) if self.preemption else frozenset()
+            self.prefix_cache.evict(n_res - len(shared), protect=protect)
             pages = self.allocator.alloc(n_res - len(shared))
         if pages is None:
             self.allocator.release(shared)
             return False  # admission gated on free pages
-        if m_tok:
-            self.stats["prefix_hits"] += 1
-            self.stats["prefix_hit_tokens"] += m_tok
-        row = shared + pages
-        self._bt[i, :] = -1
-        self._bt[i, : len(row)] = row
-        with jax.transfer_guard("allow"):
-            self.state["bt"] = jnp.asarray(self._bt)
-        req._prompt = prompt
-        req._filled = m_tok
-        self._pos_host[i] = m_tok
-        req._last_logits = None
-        req._rng = np.random.default_rng(req.sampling.seed)
-        self.slots[i] = req
+        self._set_status(req, RequestState.PREFILL)
+        try:
+            if m_tok:
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_hit_tokens"] += m_tok
+            row = shared + pages
+            self._bt[i, :] = -1
+            self._bt[i, : len(row)] = row
+            with jax.transfer_guard("allow"):
+                self.state["bt"] = jnp.asarray(self._bt)
+            req._prompt = prompt
+            req._filled = m_tok
+            self._pos_host[i] = m_tok
+            req._last_logits = None
+            if req._rng is None:  # survive preemption: don't reset the stream
+                req._rng = np.random.default_rng(req.sampling.seed)
+            self.slots[i] = req
+        except Exception as e:
+            # quarantine THIS request, release its whole reservation, and
+            # report the head as consumed so the rest of the queue proceeds
+            self._bt[i, :] = -1
+            with jax.transfer_guard("allow"):
+                self.state["bt"] = jnp.asarray(self._bt)
+            self.allocator.release(shared + pages)
+            self.slots[i] = None
+            self._pos_host[i] = 0
+            self._finish(req, RequestState.FAILED, *_fault_of(e))
         return True
 
     def _admit_one(self, req: Request, i: int) -> bool:
         if self.ragged:
             return self._admit_one_ragged(req, i)
         if self.allocator is None:
-            last, sub, _ = self._run_prefill(req, np.asarray(req.prompt, np.int32))
-            self.state = self._insert(self.state, sub, i)
+            self._set_status(req, RequestState.PREFILL)
+            try:
+                last, sub, _ = self._run_prefill(req, self._effective_prompt(req))
+                self._check_prefill_logits(last)
+                self.state = self._insert(self.state, sub, i)
+            except Exception as e:
+                self._finish(req, RequestState.FAILED, *_fault_of(e))
+                return True  # consumed (quarantined), not page-gated
         else:
-            prompt = np.asarray(req.prompt, np.int32)
+            prompt = self._effective_prompt(req)  # prompt (+generated, if preempted)
             n = len(prompt)
             # reserve the request's full timeline up front (prompt rows incl.
-            # frontend inflation + max_new) so decode never needs a mid-flight
-            # allocation (no preemption path)
-            need = min(n + self._extra_rows + req.max_new, self.max_len)
+            # frontend inflation + remaining quota) so decode never needs a
+            # mid-flight allocation; preemption is the only sanctioned reclaim
+            # path and it releases whole reservations
+            remaining = req.max_new - len(req.out)
+            need = min(n + self._extra_rows + remaining, self.max_len)
             n_res = -(-need // self.page_size)
             m_tok, shared = 0, []
             if self.prefix_cache is not None and not req.frontend:
@@ -701,29 +1098,48 @@ class ContinuousBatchingEngine:
             n_own = n_res - len(shared)
             pages = self.allocator.alloc(n_own)
             if pages is None and self.prefix_cache is not None:
-                self.prefix_cache.evict(n_own)
+                # under preemption, never evict the pages this attempt
+                # matched — they are the resume ticket of a preempted request
+                protect = frozenset(shared) if self.preemption else frozenset()
+                self.prefix_cache.evict(n_own, protect=protect)
                 pages = self.allocator.alloc(n_own)
             if pages is None:
                 self.allocator.release(shared)
                 return False  # admission gated on free pages
-            if m_tok:
-                self.stats["prefix_hits"] += 1
-                self.stats["prefix_hit_tokens"] += m_tok
-            last, sub, bucket = self._run_prefill(req, prompt[m_tok:], off=m_tok,
-                                                  shared_pages=shared)
-            self.state = self._insert(self.state, sub, i)
-            n_write = min(-(-(bucket + self._extra_rows) // self.page_size), len(pages))
-            self.state = self._page_write(
-                self.state, sub, jnp.asarray(pages[:n_write], jnp.int32)
-            )
-            row = shared + pages
-            self._bt[i, :] = -1
-            self._bt[i, : len(row)] = row
-            self.state["bt"] = jnp.asarray(self._bt)
-            if self.prefix_cache is not None and not req.frontend:
-                self.prefix_cache.register(prompt, row)
+            self._set_status(req, RequestState.PREFILL)
+            try:
+                if m_tok:
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefix_hit_tokens"] += m_tok
+                last, sub, bucket = self._run_prefill(req, prompt[m_tok:], off=m_tok,
+                                                      shared_pages=shared)
+                self._check_prefill_logits(last)
+                self.state = self._insert(self.state, sub, i)
+                n_write = min(-(-(bucket + self._extra_rows) // self.page_size),
+                              len(pages))
+                self.state = self._page_write(
+                    self.state, sub, jnp.asarray(pages[:n_write], jnp.int32)
+                )
+                row = shared + pages
+                self._bt[i, :] = -1
+                self._bt[i, : len(row)] = row
+                self.state["bt"] = jnp.asarray(self._bt)
+                if self.prefix_cache is not None and not req.frontend:
+                    self.prefix_cache.register(prompt, row)
+            except Exception as e:
+                # quarantine THIS request (tampered pack, NaN prefill, ...):
+                # hand back the whole reservation, neutralize the row, and
+                # consume the queue head so the fault can't wedge admission
+                self._bt[i, :] = -1
+                with jax.transfer_guard("allow"):
+                    self.state["bt"] = jnp.asarray(self._bt)
+                self.allocator.release(shared + pages)
+                self._finish(req, RequestState.FAILED, *_fault_of(e))
+                return True
         req._last_logits = last
-        req._rng = np.random.default_rng(req.sampling.seed)
+        if req._rng is None:  # survive preemption: don't reset the stream
+            req._rng = np.random.default_rng(req.sampling.seed)
+        self._set_status(req, RequestState.DECODE)
         self.slots[i] = req
         return True
 
@@ -745,25 +1161,12 @@ class ContinuousBatchingEngine:
     # -- decode -------------------------------------------------------------
 
     def _evict(self, i: int, req: Request, truncated: bool) -> None:
-        req.done = True
-        req.truncated = truncated
         self.slots[i] = None
-        self.stats["requests_done"] += 1
+        self._release_slot(i)
+        req.truncated = truncated
         if truncated:
             self.stats["requests_truncated"] += 1
-        if self.allocator is not None:
-            self.allocator.release([int(p) for p in self._bt[i] if p >= 0])
-            self._bt[i, :] = -1
-            # block-table upload is a sanctioned eviction-time transfer: the
-            # transfer-guard sanitizer keeps the rest of the decode loop
-            # transfer-free (see analysis/sanitizers.guarded_decode)
-            with jax.transfer_guard("allow"):
-                self.state["bt"] = jnp.asarray(self._bt)
-                # neutralize the freed slot: pos 0 + unmapped block table means
-                # its lock-step garbage decode attends nothing and writes nowhere
-                self.state["pos"] = self.state["pos"].at[i].set(0)
-        if self.ragged:
-            self._pos_host[i] = 0
+        self._finish(req, RequestState.DONE)
 
     def _step_ragged(self) -> int:
         """One unified ragged engine step (docs/serving.md): sample + schedule
@@ -772,6 +1175,8 @@ class ContinuousBatchingEngine:
         chunks FIFO across admitting slots, then run ONE ``ragged_step``
         launch over the flat batch. Pad rows carry the sentinel slot id B and
         are inert in attention and cache writes."""
+        self._steps += 1
+        self._expire_deadlines()
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
@@ -833,6 +1238,7 @@ class ContinuousBatchingEngine:
                 jnp.asarray(logit_idx),
             )
             last = np.asarray(logits.astype(jnp.float32))  # sync-point: per-slot logits download
+        last = C.logits_tap(last, "ragged")
         dt = time.monotonic() - t0
         # split wall time by scheduled-token share so both tok/s stay honest
         self.stats["decode_s"] += dt * len(decode_rows) / row
@@ -841,15 +1247,33 @@ class ContinuousBatchingEngine:
         self.stats["decode_tokens"] += len(decode_rows)
         self.stats["prefill_tokens"] += n_chunk
         self._ragged_traces[budget] = self._ragged_traces.get(budget, 0) + 1
+        # finite-logits guard at the step's single sync point: a NaN/Inf row
+        # fails only its own slot; every other slot's bytes are untouched
+        bad = set(C.nonfinite_rows(last, self.cfg.vocab))
         for i in decode_rows:
+            req = self.slots[i]
+            if i in bad:
+                self.slots[i] = None
+                self._release_slot(i)
+                self._finish(req, RequestState.FAILED, "nan_logits",
+                             f"non-finite decode logits at engine step {self._steps}")
+                continue
             self._pos_host[i] += 1
-            self.slots[i]._last_logits = last[i]
+            req._last_logits = last[i]
         for i, take in chunks:
             req = self.slots[i]
             self._pos_host[i] += take
             req._filled += take
             if req._filled == len(req._prompt):
+                if i in bad:
+                    self.slots[i] = None
+                    self._release_slot(i)
+                    self._finish(req, RequestState.FAILED, "nan_logits",
+                                 f"non-finite prefill logits at engine step "
+                                 f"{self._steps}")
+                    continue
                 req._last_logits = last[i]
+                self._set_status(req, RequestState.DECODE)
                 # deferred prefix registration: the prompt's pages are only
                 # fully written once its last chunk lands
                 if self.prefix_cache is not None and not req.frontend:
@@ -866,6 +1290,8 @@ class ContinuousBatchingEngine:
         Returns the number of slots that were live at entry."""
         if self.ragged:
             return self._step_ragged()
+        self._steps += 1
+        self._expire_deadlines()
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
@@ -893,22 +1319,58 @@ class ContinuousBatchingEngine:
             with jax.transfer_guard("allow"):
                 logits, self.state = self._decode(self.params, self.state, jnp.asarray(tok))
                 last = np.asarray(logits[:, -1].astype(jnp.float32))  # sync-point
+            last = C.logits_tap(last, "decode")
             self.stats["decode_s"] += time.monotonic() - t0
             self.stats["decode_steps"] += 1
             self.stats["decode_tokens"] += len(live)
+            # finite-logits guard at the step's sync point: quarantine only
+            # the offending slot, every other slot's logits are untouched
+            bad = set(C.nonfinite_rows(last, self.cfg.vocab))
             for i in live:
-                self.slots[i]._last_logits = last[i]
+                req = self.slots[i]
+                if i in bad:
+                    self.slots[i] = None
+                    self._release_slot(i)
+                    self._finish(req, RequestState.FAILED, "nan_logits",
+                                 f"non-finite decode logits at engine step "
+                                 f"{self._steps}")
+                else:
+                    req._last_logits = last[i]
         self._admit()
         return len(active)
 
     # -- drivers ------------------------------------------------------------
 
     def run_until_done(self, max_steps: int = 100_000) -> None:
-        """Drive ``step()`` until no slot is live and the queue is empty (or
-        ``max_steps`` is hit — the runaway guard for stuck tests)."""
+        """Drive ``step()`` until no slot is live and the queue is empty.
+
+        Exhausting ``max_steps`` SURFACES instead of silently stopping: every
+        still-live or still-queued request is marked ``TIMED_OUT`` (error code
+        ``engine_stalled``), its pages are released through the common exit
+        path, and :class:`EngineStalledError` is raised — a wedged engine can
+        never be mistaken for a drained one."""
         for _ in range(max_steps):
             if self.step() == 0 and not self.queue:
                 return
+        stranded: list[str] = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            stranded.append(str(req.request_id))
+            self.slots[i] = None
+            self._release_slot(i)
+            self._finish(req, RequestState.TIMED_OUT, "engine_stalled",
+                         f"run_until_done exhausted {max_steps} steps")
+        while self.queue:
+            req = self.queue.popleft()
+            stranded.append(str(req.request_id))
+            self._finish(req, RequestState.TIMED_OUT, "engine_stalled",
+                         f"run_until_done exhausted {max_steps} steps while queued")
+        raise EngineStalledError(
+            f"engine stalled: run_until_done exhausted {max_steps} steps with "
+            f"{len(stranded)} request(s) unfinished ({', '.join(stranded)}); "
+            "they are marked TIMED_OUT and their pages have been released"
+        )
 
     def serve(self, requests: list[Request], max_steps: int = 100_000) -> list[Request]:
         """Submit all requests and drive the loop to completion. Results ride
@@ -998,6 +1460,9 @@ class ContinuousBatchingEngine:
             assert len(set(row)) == len(row), f"slot {i} maps a page twice: {row}"
             assert self.slots[i] is not None or not row, \
                 f"empty slot {i} still maps pages {row}"
+            assert (self.slots[i] is None
+                    or self.slots[i].status not in RequestState.TERMINAL), \
+                f"slot {i} holds terminal request {self.slots[i].request_id}"
             for p in row:
                 refs[p] += 1
         if self.prefix_cache is not None:

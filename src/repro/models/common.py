@@ -24,14 +24,55 @@ by fusing the sibling packs at trace time — and falls back to per-sibling
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ModelConfig
 
 DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# logits tap + finite guard (serving fault tolerance)
+# ---------------------------------------------------------------------------
+
+# Host-side observation/injection point for freshly-downloaded logits. The
+# serving engine routes every sync-point logits download through
+# ``logits_tap`` so fault-injection harnesses (launch/faults.py) can corrupt
+# one slot's row deterministically, and checks ``nonfinite_rows`` right after
+# to quarantine slots whose logits went NaN/Inf. Identity (zero-cost) unless
+# a tap is installed.
+_logits_tap: Optional[Callable] = None
+
+
+def set_logits_tap(fn: Optional[Callable]) -> Optional[Callable]:
+    """Install ``fn(last, tag) -> last`` as the host logits tap (``None`` to
+    remove). ``last`` is the host np.ndarray just downloaded at a sync point;
+    ``tag`` names the call site (``"prefill"`` / ``"decode"`` / ``"ragged"``).
+    Returns the previously-installed tap so callers can restore it."""
+    global _logits_tap
+    prev = _logits_tap
+    _logits_tap = fn
+    return prev
+
+
+def logits_tap(last: np.ndarray, tag: str) -> np.ndarray:
+    """Route a freshly-downloaded host logits array through the installed
+    tap, if any. Called by the engine at every sync-point download."""
+    if _logits_tap is None:
+        return last
+    return _logits_tap(last, tag)
+
+
+def nonfinite_rows(last: np.ndarray, vocab: int) -> list:
+    """Indices of rows of ``last (..., V)`` holding any NaN/Inf inside the
+    first ``vocab`` columns (padded tail columns are ignored). The engine's
+    finite-logits guard: a non-empty result quarantines those slots."""
+    finite = np.isfinite(last[..., :vocab]).all(axis=-1)
+    return [int(i) for i in np.flatnonzero(~finite.reshape(-1))]
 
 
 # ---------------------------------------------------------------------------

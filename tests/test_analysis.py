@@ -255,6 +255,64 @@ def _step_ragged(self):
     assert any("jax.jit constructed" in m for m in msgs), msgs
 
 
+def test_en003_alloc_without_release_flagged():
+    # known-bad twin: pages allocated, then work that can throw, no handler
+    # that hands the reservation back — the leak EN003 exists to catch
+    bad = """
+class ToyEngine:
+    def _admit_one(self, req, i):
+        pages = self.allocator.alloc(4)
+        if pages is None:
+            return False
+        last = self._run_prefill(req)
+        self.slots[i] = req
+        return True
+"""
+    found = findings_for(bad, "EN003")
+    assert len(found) == 1, [f.human() for f in found]
+    assert "no try/except/finally" in found[0].message
+
+
+def test_en003_release_in_handler_passes():
+    # known-good twins: an except handler releasing directly, and a finally
+    # routing through the eviction helper, both dominate the allocation
+    good_except = """
+class ToyEngine:
+    def _admit_one(self, req, i):
+        pages = self.allocator.alloc(4)
+        try:
+            last = self._run_prefill(req)
+        except Exception:
+            self.allocator.release(pages)
+            raise
+        return True
+"""
+    good_finally = """
+class ToyEngine:
+    def _admit_one(self, req, i):
+        pages = self.allocator.alloc(4)
+        ok = False
+        try:
+            last = self._run_prefill(req)
+            ok = True
+        finally:
+            if not ok:
+                self._release_slot(i)
+        return True
+"""
+    assert findings_for(good_except, "EN003") == []
+    assert findings_for(good_finally, "EN003") == []
+
+
+def test_en003_ignores_non_engine_classes():
+    harmless = """
+class PoolManager:
+    def grab(self):
+        return self.allocator.alloc(4)
+"""
+    assert findings_for(harmless, "EN003") == []
+
+
 # ---------------------------------------------------------------------------
 # PK001: scalar-prefetch subscripts in index maps
 # ---------------------------------------------------------------------------
@@ -348,7 +406,7 @@ def test_dc001_ignores_uncovered_paths():
 
 def test_rule_catalog_complete():
     assert set(all_rules()) == {
-        "PK001", "PK002", "PK003", "PK004", "EN001", "EN002", "DC001",
+        "PK001", "PK002", "PK003", "PK004", "EN001", "EN002", "EN003", "DC001",
     }
 
 

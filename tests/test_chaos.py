@@ -1,0 +1,410 @@
+"""Chaos suite: the fault-tolerance contract under seeded injection.
+
+Every test drives the engine through a deterministic fault —
+allocator exhaustion, forced ref dispatch, a tampered TwinQuant pack, NaN
+logits in one slot, deadlines, cancellation, preemption — and asserts the
+recovery INVARIANTS, not just survival:
+
+* unaffected requests produce tokens bit-identical to a fault-free run;
+* ``allocator.audit()`` / ``check_page_invariants()`` stay green after
+  every step (the page-invariant sanitizer runs inside the loop);
+* every request ends in a terminal state with its machine-readable reason
+  code (the lifecycle sanitizer audits the state machine each step);
+* a preempted-then-resumed greedy request matches its uninterrupted oracle
+  token for token.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizers import (
+    guarded_decode,
+    lifecycle_checks,
+    page_invariant_checks,
+)
+from repro.configs import ModelConfig, QuantSpec
+from repro.core.twinquant import quantize_params
+from repro.launch.faults import FaultInjector
+from repro.launch.serve import (
+    AllocatorError,
+    ContinuousBatchingEngine,
+    EngineStalledError,
+    PageAllocator,
+    Request,
+    RequestState,
+)
+from repro.models import dense, olmoe
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig(
+    name="tiny-chaos", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, remat=False,
+)
+
+# capacity_factor headroom: ragged/interleaved MoE rows must stay drop-free
+MCFG = ModelConfig(
+    name="tiny-chaos-moe", family="moe", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, vocab=256, remat=False,
+    n_experts=4, top_k=2, d_ff_expert=64, capacity_factor=4.0,
+)
+
+# wide enough to pack (scale groups divide d_model): the quantized-engine
+# chaos tests (forced ref routes, tampered packs) need real TwinQuant packs
+QCFG = ModelConfig(
+    name="tiny-chaos-quant", family="dense", n_layers=2, d_model=256,
+    n_heads=4, n_kv_heads=2, head_dim=64, d_ff=512, vocab=260, remat=False,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return dense.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def mparams():
+    return olmoe.init_params(MCFG, jax.random.PRNGKey(1))
+
+
+@pytest.fixture(scope="module")
+def qparams():
+    p = dense.init_params(QCFG, jax.random.PRNGKey(2))
+    return quantize_params(p, QCFG, QuantSpec(mode="w4a4", rank=32))
+
+
+def _prompt(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, 200, size=n).tolist()
+
+
+def _solo(cfg, params, prompt, max_new=8):
+    """Dense-engine solo serving: the correctness oracle."""
+    eng = ContinuousBatchingEngine(cfg, params, batch_slots=1, max_len=64)
+    req = Request(jnp.asarray(prompt, jnp.int32), max_new=max_new)
+    eng.serve([req])
+    assert req.done
+    return req.out
+
+
+# ---------------------------------------------------------------------------
+# lifecycle state machine
+# ---------------------------------------------------------------------------
+
+
+def test_lifecycle_states_and_cancel(params):
+    """QUEUED -> PREFILL -> DECODE -> DONE for a served request; cancel()
+    works both queued and mid-decode, releases pages, and leaves survivors'
+    tokens equal to the solo oracle."""
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64,
+                                   paged=True)
+    a = Request(jnp.asarray(_prompt(12, 1), jnp.int32), max_new=8)
+    b = Request(jnp.asarray(_prompt(12, 2), jnp.int32), max_new=8)
+    c = Request(jnp.asarray(_prompt(12, 3), jnp.int32), max_new=8)
+    assert a.status == RequestState.NEW
+    with lifecycle_checks(eng), page_invariant_checks(eng):
+        for r in (a, b, c):
+            eng.submit(r)
+        assert c.status == RequestState.QUEUED  # only 2 slots
+        eng.step()
+        assert a.status == RequestState.DECODE
+        # cancel c while still queued, b while mid-decode
+        assert eng.cancel(c.request_id)
+        assert eng.cancel(b)
+        assert not eng.cancel(b)  # already terminal: no-op
+        eng.run_until_done()
+    assert a.status == RequestState.DONE and a.done
+    assert b.status == RequestState.CANCELLED and b.error is None
+    assert c.status == RequestState.CANCELLED
+    assert eng.stats["requests_cancelled"] == 2
+    assert a.out == _solo(CFG, params, _prompt(12, 1))
+    # every page came back (the prefix cache may retain registrations)
+    eng.check_page_invariants()
+
+
+def test_deadline_steps_timeout(params):
+    """A request with an exhausted step budget is TIMED_OUT with its reason
+    code, pages come back, and the surviving request matches the oracle."""
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64,
+                                   paged=True)
+    a = Request(jnp.asarray(_prompt(12, 1), jnp.int32), max_new=8)
+    b = Request(jnp.asarray(_prompt(12, 4), jnp.int32), max_new=32,
+                deadline_steps=3)
+    with lifecycle_checks(eng), page_invariant_checks(eng):
+        eng.submit(a)
+        eng.submit(b)
+        eng.run_until_done()
+    assert a.status == RequestState.DONE
+    assert b.status == RequestState.TIMED_OUT and b.done
+    assert b.error == "deadline_steps"
+    assert eng.stats["requests_timed_out"] == 1
+    assert 0 < len(b.out) < 32  # partial output survives the timeout
+    assert a.out == _solo(CFG, params, _prompt(12, 1))
+
+
+def test_run_until_done_exhaustion_surfaces(params):
+    """Exhausting max_steps raises EngineStalledError instead of silently
+    returning: stranded requests are TIMED_OUT (engine_stalled), their pages
+    released, and the allocator audit stays green."""
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=1, max_len=64,
+                                   paged=True)
+    r = Request(jnp.asarray(_prompt(12, 5), jnp.int32), max_new=16)
+    eng.submit(r)
+    with pytest.raises(EngineStalledError, match="engine stalled"):
+        eng.run_until_done(max_steps=3)
+    assert r.status == RequestState.TIMED_OUT and r.done
+    assert r.error == "engine_stalled"
+    # only prefix-cache registrations may still hold pages — the slot's own
+    # references all came back through the common exit path
+    assert eng.allocator.n_used == len(eng.prefix_cache.entries)
+    eng.check_page_invariants()
+
+
+def test_submit_rejects_out_of_vocab(params):
+    """Garbage token ids fail at the API boundary with a clear message, not
+    as an XLA gather deep inside prefill."""
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=1, max_len=64)
+    with pytest.raises(ValueError, match="vocab"):
+        eng.submit(Request(jnp.asarray([3, 999, 5], jnp.int32), max_new=4))
+    with pytest.raises(ValueError, match="vocab"):
+        eng.submit(Request(jnp.asarray([-1, 2], jnp.int32), max_new=4))
+    with pytest.raises(ValueError, match="integer"):
+        eng.submit(Request(jnp.asarray([0.5, 2.0], jnp.float32), max_new=4))
+    assert not eng.queue and all(s is None for s in eng.slots)
+
+
+# ---------------------------------------------------------------------------
+# preemption + requeue
+# ---------------------------------------------------------------------------
+
+
+def test_preempt_resume_matches_uninterrupted_oracle(params):
+    """Page pressure preempts the low-priority request; on readmission the
+    prefix cache restores its written pages copy-free and the resumed greedy
+    output is token-for-token the uninterrupted solo run."""
+    # pool of 3 pages; each request reserves 2, so admitting the second
+    # request REQUIRES preempting the first
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64,
+                                   paged=True, page_size=16, n_pages=3,
+                                   preemption=True)
+    low = Request(jnp.asarray(_prompt(20, 6), jnp.int32), max_new=8, priority=0)
+    with lifecycle_checks(eng), page_invariant_checks(eng):
+        eng.submit(low)
+        for _ in range(3):  # let `low` make real decode progress first
+            eng.step()
+        assert len(low.out) >= 2
+        high = Request(jnp.asarray(_prompt(20, 7), jnp.int32), max_new=8,
+                       priority=1)
+        eng.submit(high)
+        eng.run_until_done()
+    assert eng.stats["requests_preempted"] >= 1
+    assert low._preemptions >= 1
+    assert low.status == RequestState.DONE
+    assert high.status == RequestState.DONE
+    # copy-free resume: readmission matched the preempt-time registration
+    assert eng.stats["prefix_hits"] >= 1
+    assert low.out == _solo(CFG, params, _prompt(20, 6))
+    assert high.out == _solo(CFG, params, _prompt(20, 7))
+
+
+def test_preempt_resume_ragged(params):
+    """Same preempt/resume bar through the unified ragged step."""
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64,
+                                   paged=True, ragged=True, page_size=16,
+                                   n_pages=3, preemption=True)
+    low = Request(jnp.asarray(_prompt(20, 6), jnp.int32), max_new=8, priority=0)
+    with lifecycle_checks(eng), page_invariant_checks(eng):
+        eng.submit(low)
+        for _ in range(4):
+            eng.step()
+        assert len(low.out) >= 1
+        high = Request(jnp.asarray(_prompt(20, 7), jnp.int32), max_new=8,
+                       priority=1)
+        eng.submit(high)
+        eng.run_until_done()
+    assert eng.stats["requests_preempted"] >= 1
+    assert low.status == RequestState.DONE
+    assert high.status == RequestState.DONE
+    assert low.out == _solo(CFG, params, _prompt(20, 6))
+    assert high.out == _solo(CFG, params, _prompt(20, 7))
+
+
+# ---------------------------------------------------------------------------
+# injected faults
+# ---------------------------------------------------------------------------
+
+
+def test_nan_logits_quarantines_only_offending_slot(params):
+    """NaN injected into one slot's decode logits: that request FAILS with
+    reason nan_logits; the other slot's tokens are bit-identical to the
+    fault-free interleaved run."""
+    def interleaved(inject):
+        eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64,
+                                       paged=True)
+        a = Request(jnp.asarray(_prompt(12, 8), jnp.int32), max_new=8)
+        b = Request(jnp.asarray(_prompt(12, 9), jnp.int32), max_new=8)
+        with FaultInjector(seed=0) as fi:
+            if inject:
+                fi.corrupt_logits(slot=1, at_call=3, tag="decode")
+            with lifecycle_checks(eng), page_invariant_checks(eng):
+                eng.submit(a)
+                eng.submit(b)
+                eng.run_until_done()
+        return a, b, eng
+    a0, b0, _ = interleaved(inject=False)
+    a1, b1, eng = interleaved(inject=True)
+    assert b1.status == RequestState.FAILED and b1.done
+    assert b1.error == "nan_logits"
+    assert eng.stats["requests_failed"] == 1
+    assert a1.status == RequestState.DONE
+    assert a1.out == a0.out  # unaffected slot: bit-identical
+    assert b1.out == b0.out[: len(b1.out)]  # victim kept its pre-fault tokens
+
+
+def test_nan_prefill_logits_fail_at_admission(params):
+    """NaN in the prefill logits fails the request at admission (nan_logits)
+    without touching the other slot or leaking its reservation."""
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64,
+                                   paged=True)
+    a = Request(jnp.asarray(_prompt(12, 8), jnp.int32), max_new=8)
+    b = Request(jnp.asarray(_prompt(13, 9), jnp.int32), max_new=8)
+    with FaultInjector(seed=0) as fi:
+        with lifecycle_checks(eng), page_invariant_checks(eng):
+            eng.submit(a)
+            eng.step()  # a admitted cleanly
+            fi.corrupt_logits(slot=0, at_call=1, tag="prefill")
+            eng.submit(b)
+            eng.run_until_done()
+    assert b.status == RequestState.FAILED and b.error == "nan_logits"
+    assert a.status == RequestState.DONE
+    assert a.out == _solo(CFG, params, _prompt(12, 8))
+
+
+def test_alloc_denial_backpressure(params):
+    """A transient allocator outage delays admission but loses nothing: all
+    requests finish with tokens equal to their solo oracles and the audit
+    stays green throughout."""
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64,
+                                   paged=True)
+    reqs = [Request(jnp.asarray(_prompt(12, 10 + k), jnp.int32), max_new=6)
+            for k in range(3)]
+    with FaultInjector(seed=0) as fi:
+        fi.deny_alloc(eng, at_call=2, count=3)
+        with lifecycle_checks(eng), page_invariant_checks(eng):
+            for r in reqs:
+                eng.submit(r)
+            eng.run_until_done()
+    assert [d["kind"] for d in fi.log].count("deny_alloc") >= 1
+    for k, r in enumerate(reqs):
+        assert r.status == RequestState.DONE
+        assert r.out == _solo(CFG, params, _prompt(12, 10 + k), max_new=6)
+
+
+def test_forced_ref_dispatch_degrades_gracefully(qparams):
+    """With every dispatch entry forced onto its reference path, the
+    quantized engine still serves byte-identical tokens, and the routing
+    table shows the machine-readable ref[forced] code."""
+    def run(force):
+        with FaultInjector(seed=0) as fi:
+            if force:
+                fi.force_ref_dispatch()
+            eng = ContinuousBatchingEngine(QCFG, qparams, batch_slots=2,
+                                           max_len=64, paged=True)
+            reqs = [Request(jnp.asarray(_prompt(12, 20 + k), jnp.int32),
+                            max_new=4) for k in range(2)]
+            eng.serve(reqs)
+            return [r.out for r in reqs], eng.routing()
+    out_ref, routes_ref = run(force=True)
+    out_base, _ = run(force=False)
+    assert out_ref == out_base
+    forced = {k: v for k, v in routes_ref.items() if k.endswith("[forced]")}
+    assert forced, f"no ref[forced] routes recorded: {routes_ref}"
+
+
+def test_tampered_pack_is_quarantined(qparams):
+    """A pack corrupted in flight raises a ContractError inside prefill; the
+    engine quarantines the request (FAILED, prefill_exception), releases its
+    reservation, and keeps serving — the EN003 exception path, live."""
+    fi = FaultInjector(seed=0)
+    bad_params = fi.tamper_pack(qparams)
+    assert fi.log[-1]["kind"] == "tamper_pack"
+    # the contract layer rejects the malformed pack eagerly at dispatch
+    eng = ContinuousBatchingEngine(QCFG, bad_params, batch_slots=2,
+                                   max_len=64, paged=True)
+    r = Request(jnp.asarray(_prompt(12, 30), jnp.int32), max_new=4)
+    with lifecycle_checks(eng), page_invariant_checks(eng):
+        eng.submit(r)
+        eng.run_until_done()
+    assert r.status == RequestState.FAILED and r.done
+    assert r.error == "prefill_exception"
+    # the captured detail is the dispatch layer's spelled-out ContractError
+    assert "ContractError" in r.error_detail
+    assert eng.allocator.n_used == 0
+
+
+# ---------------------------------------------------------------------------
+# allocator hardening
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_rejects_unknown_and_unreferenced_pages():
+    """Double release, unknown ids, and sharing a free page all raise a
+    spelled-out AllocatorError naming the page and refcount."""
+    al = PageAllocator(4)
+    pages = al.alloc(2)
+    al.release(pages)
+    with pytest.raises(AllocatorError, match="double release"):
+        al.release([pages[0]])
+    with pytest.raises(AllocatorError, match="unknown page"):
+        al.release([99])
+    with pytest.raises(AllocatorError, match="unknown page"):
+        al.share([-3])
+    with pytest.raises(AllocatorError, match="unreferenced page"):
+        al.share([pages[0]])
+    al.audit()  # failed ops corrupted nothing
+
+
+# ---------------------------------------------------------------------------
+# randomized interleaved schedule (seeded)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg_name", ["dense", "moe"])
+def test_randomized_cancel_timeout_preempt_schedule(cfg_name, params, mparams):
+    """A seeded random schedule of submits, cancels, and deadline expiries
+    under page pressure (preemption on), against the dense and MoE families:
+    every request terminates in a sane state, survivors' tokens equal the
+    solo oracle, and no pages leak."""
+    cfg, p = (CFG, params) if cfg_name == "dense" else (MCFG, mparams)
+    rng = np.random.default_rng(42)
+    eng = ContinuousBatchingEngine(cfg, p, batch_slots=2, max_len=64,
+                                   paged=True, page_size=16, n_pages=6,
+                                   preemption=True)
+    prompts = {k: _prompt(int(rng.integers(8, 20)), 100 + k) for k in range(6)}
+    reqs = {k: Request(jnp.asarray(v, jnp.int32), max_new=6,
+                       priority=int(rng.integers(0, 3)),
+                       deadline_steps=(None if rng.random() < 0.7
+                                       else int(rng.integers(2, 30))))
+            for k, v in prompts.items()}
+    pending = list(reqs)
+    with lifecycle_checks(eng), page_invariant_checks(eng):
+        for step in range(200):
+            if pending and rng.random() < 0.4:
+                eng.submit(reqs[pending.pop(0)])
+            if rng.random() < 0.1:
+                victim = reqs[int(rng.integers(6))]
+                eng.cancel(victim)  # may be a no-op; must never corrupt
+            if eng.step() == 0 and not eng.queue and not pending:
+                break
+    assert not pending
+    leaked = eng.allocator.n_used
+    if eng.prefix_cache is not None:
+        leaked -= sum(1 for _ in eng.prefix_cache.entries)
+    assert leaked <= 0, f"{leaked} pages leaked past cache registrations"
+    for k, r in reqs.items():
+        assert r.status in RequestState.TERMINAL, (k, r.status)
+        if r.status == RequestState.DONE and not r.truncated:
+            assert r.out == _solo(cfg, p, prompts[k], max_new=6), k
+    eng.check_page_invariants()
