@@ -28,6 +28,13 @@ section, so the gate is armed); ``paged_decode_tok_s`` is gated by
 rate. While the baseline's paged section carries ``"bootstrap": true`` the
 tok/s comparison reports as a warning only (DESIGN.md §12).
 
+A candidate carrying a ``burst`` section (BENCH_BURST.json) gets the ragged
+burst gate (``check_burst``), and one carrying a ``spec`` section
+(BENCH_SPEC.json) the speculative-decoding gate (``check_spec``):
+oracle token equality, ``paged_decode`` routing, and the single speculative
+trace fail hard; the spec decode rate must reach 1.3x the committed b8
+baseline and the deterministic acceptance rate is a ratchet.
+
 The per-path launch counts (fused vs unfused kinds) are printed for every
 batch size, so the artifact trail shows where each launch went, not just the
 tokens/s number.
@@ -176,6 +183,64 @@ def check_burst(
     return issues, warns
 
 
+def check_spec(
+    base: dict, cand: dict, min_speedup: float = 1.3
+) -> tuple[list[str], list[str]]:
+    """Speculative-decoding gate (BENCH_SPEC.json): three machine-independent
+    booleans always fail hard — greedy speculative output token-identical to
+    the non-speculative engine, the decode path routed through the in-kernel
+    ``paged_decode`` block-table attention, and exactly ONE
+    (batch, spec_k)-shaped speculative executable for the whole lifetime.
+    The deterministic workload makes ``acceptance_rate`` a ratchet against
+    the baseline's rate (a drop means the draft or acceptance logic
+    regressed, not the machine).
+
+    The throughput claim: speculative b8 decode tok/s must reach
+    ``min_speedup`` x the committed baseline's b8 engine decode rate — the
+    same absolute-tok/s comparison the main engine sweep gates, so it is
+    armed under the same conditions (a baseline spec section carrying
+    ``"bootstrap": true`` downgrades it to a warning, DESIGN.md §12)."""
+    sp = cand.get("results", {}).get("throughput", {}).get("spec")
+    if sp is None:
+        return [], []
+    issues, warns = [], []
+    if not sp.get("tokens_match", False):
+        issues.append("spec: outputs diverged from the non-speculative oracle")
+    if sp.get("routing", {}).get("paged_decode/kernel", 0) == 0:
+        issues.append(
+            "spec: decode did not route the in-kernel paged attention "
+            f"(routes: {sp.get('routing')})"
+        )
+    if sp.get("spec_traces", 0) != 1:
+        issues.append(
+            f"spec: expected exactly one speculative executable, got "
+            f"spec_traces={sp.get('spec_traces')}"
+        )
+    print(f"\n{'spec lane':<24} decode={sp.get('spec_decode_tok_s', 0):.1f}tok/s "
+          f"(plain={sp.get('plain_decode_tok_s', 0):.1f}) "
+          f"accept={sp.get('acceptance_rate', 0):.2f} "
+          f"tok/step={sp.get('tokens_per_step', 0):.2f} "
+          f"k={sp.get('spec_k')} b={sp.get('batch')}")
+    bspec = base.get("results", {}).get("throughput", {}).get("spec")
+    bootstrap = bspec is None or bool(bspec.get("bootstrap"))
+    b8 = base.get("results", {}).get("throughput", {}) \
+             .get("engine_measured", {}).get("b8", {}).get("decode_tok_s", 0.0)
+    cv = sp.get("spec_decode_tok_s", 0.0)
+    if b8 > 0 and cv < b8 * min_speedup:
+        msg = (f"spec: decode {cv:.1f}tok/s < baseline b8 {b8:.1f} * "
+               f"{min_speedup:.2f} (speculation is not paying for its "
+               "draft rows)")
+        (warns if bootstrap else issues).append(msg)
+    if bspec is not None:
+        ba, ca = bspec.get("acceptance_rate", 0.0), sp.get("acceptance_rate", 0.0)
+        if ca < ba:
+            issues.append(
+                f"spec: acceptance rate {ca:.3f} fell below baseline {ba:.3f} "
+                "(deterministic workload — drafting/acceptance regressed)"
+            )
+    return issues, warns
+
+
 def check_launches(base: dict, cand: dict) -> list[str]:
     """Launch-count ratchet: decode launches per traced step must not grow."""
     errors = []
@@ -213,6 +278,10 @@ def main() -> None:
     ap.add_argument("--burst-only", action="store_true",
                     help="candidate is the burst lane (BENCH_BURST.json): "
                          "run just the ragged burst checks, no engine-sweep gate")
+    ap.add_argument("--spec-only", action="store_true",
+                    help="candidate is the speculative-decoding lane "
+                         "(BENCH_SPEC.json): run just the speculation checks, "
+                         "no engine-sweep gate")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -232,6 +301,20 @@ def main() -> None:
                 print(f"  - {msg}", file=sys.stderr)
             raise SystemExit(1)
         print("\nbench gate (burst lane): ok")
+        return
+
+    if args.spec_only:
+        failures, warns = check_spec(base, cand)
+        if cand.get("results", {}).get("throughput", {}).get("spec") is None:
+            failures.append("spec section missing from candidate")
+        for msg in warns:
+            print(f"WARN (spec lane, not gating): {msg}", file=sys.stderr)
+        if failures:
+            print("\nBENCH GATE FAILED:", file=sys.stderr)
+            for msg in failures:
+                print(f"  - {msg}", file=sys.stderr)
+            raise SystemExit(1)
+        print("\nbench gate (spec lane): ok")
         return
 
     if args.paged_only:
@@ -278,6 +361,8 @@ def main() -> None:
     failures += paged_failures
     burst_failures, burst_warnings = check_burst(base, cand)
     failures += burst_failures
+    spec_failures, spec_warnings = check_spec(base, cand)
+    failures += spec_failures
 
     for msg in warnings:
         print(f"WARN (bootstrap baseline, not gating): {msg}", file=sys.stderr)
@@ -285,6 +370,8 @@ def main() -> None:
         print(f"WARN (paged lane, not gating): {msg}", file=sys.stderr)
     for msg in burst_warnings:
         print(f"WARN (burst lane, not gating): {msg}", file=sys.stderr)
+    for msg in spec_warnings:
+        print(f"WARN (spec lane, not gating): {msg}", file=sys.stderr)
     if failures:
         print("\nBENCH GATE FAILED:", file=sys.stderr)
         for msg in failures:

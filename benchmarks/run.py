@@ -57,6 +57,13 @@ def main() -> None:
              "admission through the unified ragged step) to the throughput "
              "module — the BENCH_BURST.json artifact",
     )
+    ap.add_argument(
+        "--spec", action="store_true",
+        help="add the speculative-decoding lane (self-drafted multi-token "
+             "verification through the in-kernel paged decode attention, "
+             "spec vs plain engines) to the throughput module — the "
+             "BENCH_SPEC.json artifact",
+    )
     ap.add_argument("--out", default=None, help="write combined results JSON here")
     args = ap.parse_args()
 
@@ -87,7 +94,8 @@ def main() -> None:
         try:
             if name == "throughput":
                 results[name] = mods[name].run(quick=args.quick, fused=args.fused,
-                                               paged=args.paged, burst=args.burst)
+                                               paged=args.paged, burst=args.burst,
+                                               spec=args.spec)
             elif name in QUICK_MODULES:
                 results[name] = mods[name].run(quick=args.quick)
             else:

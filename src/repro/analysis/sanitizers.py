@@ -60,7 +60,8 @@ def no_recompiles(engine):
     before = engine.compile_stats()
     yield engine
     after = engine.compile_stats()
-    for key in ("prefill_traces", "decode_traces", "ragged_traces"):
+    for key in ("prefill_traces", "decode_traces", "ragged_traces",
+                "spec_traces"):
         if after.get(key, 0) > before.get(key, 0):
             raise SanitizerError(
                 f"recompile sanitizer: {key} grew {before[key]} -> "
@@ -85,6 +86,12 @@ def assert_compile_budget(engine, max_len: int | None = None) -> dict:
     not exceed 2 (the single ragged trace, plus at most one legacy prefill
     trace if a caller mixed modes)."""
     stats = engine.compile_stats()
+    if stats.get("spec_traces", 0) > 1:
+        raise SanitizerError(
+            f"compile-budget sanitizer: {stats['spec_traces']} speculative "
+            "decode traces; the (batch, spec_k) launch shape is static, so "
+            "the speculative step must compile exactly once"
+        )
     if getattr(engine, "ragged", False):
         total = stats.get("ragged_traces", 0) + stats["prefill_traces"]
         if total > 2:

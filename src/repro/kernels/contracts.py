@@ -46,6 +46,7 @@ import jax.numpy as jnp
 __all__ = [
     "ContractError",
     "VMEM_BUDGET_BYTES",
+    "check_paged_decode_args",
     "check_ragged_args",
     "check_twinquant_group_pack",
     "check_twinquant_pack",
@@ -56,6 +57,7 @@ __all__ = [
     "validate_dual_gemm_group",
     "validate_dual_gemv",
     "validate_dual_gemv_group",
+    "validate_paged_decode",
     "validate_ragged_attention",
     "validate_w4a16",
     "vmem_footprint",
@@ -393,6 +395,108 @@ def validate_ragged_attention(
         ("l_s", (t, h), jnp.float32, "scratch"),
         ("acc_s", (t, h * hd), jnp.float32, "scratch"),
     ], budget=budget)
+
+
+def validate_paged_decode(
+    b: int, sq: int, h: int, kvh: int, hd: int, maxp: int, page: int,
+    *, decode_m_max: int = 8, kind: str = "paged_decode",
+    budget: Optional[int] = None,
+) -> None:
+    """Contract for the paged decode-attention launch (B slots x sq draft
+    rows attending paged KV pools through scalar-prefetched block tables,
+    with the tail-page commit fused into the epilogue).
+
+    The schedule pins the whole (B*sq, H*hd) query panel, the (B*sq, KV*hd)
+    draft K/V rows, the f32 online-softmax state, and the output in VMEM
+    while streaming one (page, KV*hd) K/V page pair per grid step (plus the
+    tail pages in the commit epilogue) — so B*sq is the knob that blows the
+    budget, never the sequence length. ``sq`` is additionally bounded by the
+    decode panel regime (speculative verification stacks at most
+    DECODE_M_MAX rows per slot, matching the dual-GEMV routing bound)."""
+    positive(b, "B (engine slots)", kind=kind)
+    positive(sq, "sq (draft rows per slot)", kind=kind)
+    positive(page, "page_size", kind=kind)
+    positive(maxp, "max_pages (block-table width)", kind=kind)
+    if sq > decode_m_max:
+        raise ContractError(
+            f"[{kind}] sq={sq} draft rows exceed the decode panel bound "
+            f"DECODE_M_MAX={decode_m_max}\n  hint: the speculative engine "
+            "verifies at most DECODE_M_MAX tokens per slot per launch"
+        )
+    divisible(h, kvh, "n_heads % n_kv_heads", kind=kind,
+              hint="GQA groups share each KV head across h//kvh query heads")
+    t2 = b * sq
+    check_vmem(kind, [
+        ("q", (t2, h * hd), jnp.bfloat16, "pinned"),
+        ("k_page", (1, page, kvh * hd), jnp.bfloat16, "streamed"),
+        ("v_page", (1, page, kvh * hd), jnp.bfloat16, "streamed"),
+        ("k_tok", (t2, kvh * hd), jnp.bfloat16, "pinned"),
+        ("v_tok", (t2, kvh * hd), jnp.bfloat16, "pinned"),
+        ("k_slot", (sq, kvh * hd), jnp.bfloat16, "streamed"),
+        ("v_slot", (sq, kvh * hd), jnp.bfloat16, "streamed"),
+        ("meta", (t2,), jnp.int32, "pinned"),
+        ("out", (t2, h * hd), jnp.bfloat16, "out"),
+        ("k_tail", (1, page, kvh * hd), jnp.bfloat16, "out"),
+        ("v_tail", (1, page, kvh * hd), jnp.bfloat16, "out"),
+        ("m_s", (t2, h), jnp.float32, "scratch"),
+        ("l_s", (t2, h), jnp.float32, "scratch"),
+        ("acc_s", (t2, h * hd), jnp.float32, "scratch"),
+    ], budget=budget)
+
+
+def check_paged_decode_args(q, kp, vp, kt, vt, bt, pos,
+                            *, kind: str = "paged_decode") -> None:
+    """Shape/dtype consistency contract for a paged-decode call.
+
+    ``q (B, sq, H, hd)`` / ``kt, vt (B, sq, KV, hd)`` are the draft rows,
+    ``kp, vp (P, page, KV, hd)`` the paged pools of ONE layer, ``bt (B,
+    maxp)`` the block tables and ``pos (B,)`` the committed prefix lengths.
+    Malformed combinations raise before any routing decision is made."""
+    problems = []
+    if q.ndim != 4:
+        problems.append(f"q: expected (B, sq, H, hd), got {tuple(q.shape)}")
+    if kt.ndim != 4 or vt.ndim != 4 or kt.shape != vt.shape:
+        problems.append(
+            f"kt/vt: expected matching (B, sq, KV, hd), got {tuple(kt.shape)} "
+            f"vs {tuple(vt.shape)}"
+        )
+    if kp.ndim != 4 or vp.ndim != 4 or kp.shape != vp.shape:
+        problems.append(
+            f"kp/vp: expected matching (P, page, KV, hd) pools, got "
+            f"{tuple(kp.shape)} vs {tuple(vp.shape)}"
+        )
+    if bt.ndim != 2:
+        problems.append(f"bt: expected (B, max_pages), got {tuple(bt.shape)}")
+    if problems:
+        raise ContractError(
+            f"[{kind}] malformed paged-decode call:\n  " + "\n  ".join(problems)
+        )
+    b, sq, _, hd = q.shape
+    if kt.shape[0] != b or kt.shape[1] != sq or kt.shape[3] != hd:
+        problems.append(
+            f"kt shape {tuple(kt.shape)} disagrees with q {tuple(q.shape)}"
+        )
+    if kp.shape[2] != kt.shape[2] or kp.shape[3] != hd:
+        problems.append(
+            f"pool trailing dims {tuple(kp.shape[2:])} != draft (KV, hd)="
+            f"({kt.shape[2]}, {hd})"
+        )
+    if q.shape[2] % kt.shape[2] != 0:
+        problems.append(
+            f"n_heads {q.shape[2]} not a multiple of n_kv_heads {kt.shape[2]}"
+        )
+    if bt.shape[0] != b:
+        problems.append(
+            f"bt rows {bt.shape[0]} != B={b} slots"
+        )
+    if pos.shape != (b,):
+        problems.append(
+            f"pos: expected ({b},), got {tuple(pos.shape)}"
+        )
+    if problems:
+        raise ContractError(
+            f"[{kind}] malformed paged-decode call:\n  " + "\n  ".join(problems)
+        )
 
 
 def check_ragged_args(q, kp, vp, kt, vt, bt, slot, pos, ctx,

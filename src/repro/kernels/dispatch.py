@@ -72,6 +72,7 @@ __all__ = [
     "Route",
     "classify_dual",
     "classify_dual_group",
+    "classify_paged_decode",
     "classify_ragged",
     "classify_w4a16",
     "default_interpret",
@@ -79,6 +80,7 @@ __all__ = [
     "force_ref_enabled",
     "fused_linear",
     "fusion_enabled",
+    "paged_decode",
     "quant_linear",
     "ragged_attention",
     "reset_dispatch_counters",
@@ -287,6 +289,40 @@ def classify_ragged(t: int, h: int, kvh: int, hd: int, b: int, maxp: int,
             PATH_REF, None, f"T={t} resident panels exceed VMEM budget", "vmem"
         )
     return Route(PATH_KERNEL, None, f"ragged schedule (T={t}, maxp={maxp})")
+
+
+def classify_paged_decode(b: int, sq: int, h: int, kvh: int, hd: int,
+                          maxp: int, page: int) -> Route:
+    """Route a paged decode-attention call (kind ``paged_decode``).
+
+    Like ``classify_ragged``, the kernel has one schedule (grid over
+    ``(B, max_pages + 2)``, whole draft panel resident, tail-page commit in
+    the epilogue), so classification is a viability check: GQA-incompatible
+    head counts and lane-untileable head dims route ref (``hd_unaligned``),
+    a draft stack past the decode panel bound routes ref (``rows``), and a
+    panel that blows the VMEM budget routes ref (``vmem``).
+    """
+    from repro.kernels.contracts import ContractError, validate_paged_decode
+
+    if h % kvh != 0:
+        return Route(PATH_REF, None, f"H={h} not grouped by KV={kvh}", "hd_unaligned")
+    if hd % 8 != 0:
+        return Route(
+            PATH_REF, None, f"head_dim={hd} not lane-tileable", "hd_unaligned"
+        )
+    if sq > DECODE_M_MAX:
+        return Route(
+            PATH_REF, None,
+            f"sq={sq} draft rows exceed DECODE_M_MAX={DECODE_M_MAX}", "rows",
+        )
+    try:
+        validate_paged_decode(b, sq, h, kvh, hd, maxp, page,
+                              decode_m_max=DECODE_M_MAX)
+    except ContractError:
+        return Route(
+            PATH_REF, None, f"B*sq={b * sq} panel exceeds VMEM budget", "vmem"
+        )
+    return Route(PATH_KERNEL, None, f"paged decode schedule (B={b}, sq={sq})")
 
 
 def classify_w4a16(m: int, n: int, k: int, group: int) -> Route:
@@ -538,6 +574,65 @@ def ragged_attention(
         return ragged_attention_ref(q, kp, vp, kt, vt, bt, slot, pos, ctx)
     return ragged_attention_kernel(
         q, kp, vp, kt, vt, bt, slot, pos, ctx, interpret=interpret
+    )
+
+
+def paged_decode(
+    q: jax.Array,
+    kp: jax.Array,
+    vp: jax.Array,
+    kt: jax.Array,
+    vt: jax.Array,
+    bt: jax.Array,
+    pos: jax.Array,
+    *,
+    commit: bool = True,
+    impl: str = "auto",
+    interpret: Optional[bool] = None,
+):
+    """Routed paged decode attention: block-table indirection in-kernel.
+
+    ``q (B, sq, H, hd)`` / ``kt, vt (B, sq, KV, hd)`` are post-RoPE draft
+    rows (``sq == 1`` is plain decode; speculative verification stacks up to
+    DECODE_M_MAX rows per slot), ``kp, vp (P, page, KV, hd)`` one layer's
+    paged K/V pools, ``bt (B, maxp)`` the block tables and ``pos (B,)`` each
+    slot's committed prefix length. Row ``i`` of slot ``b`` attends the
+    committed prefix ``[0, pos_b)`` plus draft rows ``<= i`` — no dense
+    ``gather_pages`` view is ever materialized.
+
+    With ``commit=True`` returns ``(out, kp_new, vp_new)`` with the draft
+    K/V scattered into the tail pages (fused into the kernel epilogue on the
+    kernel path; the caller's pool buffers are donated). With
+    ``commit=False`` returns ``out`` only — the scan-stacked model paths use
+    this and batch one page commit per layer after the scan.
+
+    Routing kind is ``paged_decode`` (paths ``kernel`` / ``ref``); like the
+    other entries, ``impl="auto"`` on CPU records the routed schedule but
+    executes the jnp oracle (whose ``sq == 1`` numerics are bit-identical to
+    the dense-view decode path it replaces).
+    """
+    from repro.kernels.contracts import check_paged_decode_args
+    from repro.kernels.paged_attention import paged_decode_kernel, paged_decode_ref
+
+    check_paged_decode_args(q, kp, vp, kt, vt, bt, pos)
+    b, sq, h, hd = q.shape
+    kvh = kt.shape[2]
+    maxp = bt.shape[1]
+    if impl == "ref" or _force_ref:
+        route = Route(PATH_REF, None, "forced impl=ref", "forced")
+    else:
+        route = classify_paged_decode(b, sq, h, kvh, hd, maxp, kp.shape[1])
+    _record("paged_decode", route)
+
+    if interpret is None:
+        interpret = default_interpret()
+    run_kernel = route.path != PATH_REF and (
+        impl == "kernel" or (impl == "auto" and not interpret)
+    )
+    if not run_kernel:
+        return paged_decode_ref(q, kp, vp, kt, vt, bt, pos, commit=commit)
+    return paged_decode_kernel(
+        q, kp, vp, kt, vt, bt, pos, commit=commit, interpret=interpret
     )
 
 

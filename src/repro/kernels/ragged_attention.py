@@ -14,16 +14,18 @@ of ``T = token_budget`` rows. Each row ``t`` belongs to engine slot
   span, including itself).
 
 The kernel is an online-softmax (flash-attention recurrence) sweep over a
-``(B, max_pages + 1)`` grid. Grid step ``(b, j < max_pages)`` streams one
-K/V page pair of slot ``b`` — the page index comes straight from the
+``(B, max_pages)`` grid. Every grid step ``(b, j)`` streams one K/V page
+pair of slot ``b`` — the page index comes straight from the
 scalar-prefetched block table via the BlockSpec index map, so unmapped (-1)
-entries clamp to page 0 and are masked in-kernel. The final step per slot
-(``j == max_pages``) folds in the in-batch rows from the resident ``(T,
-KV*hd)`` K/V panels. Rows not belonging to the current slot are naturally
-inert: their masks are all-False, so ``m`` does not move, the correction
-factor is ``exp(0) = 1`` and their probability mass is zero — the scratch
-state needs no explicit row gating. Output is written once, at the last grid
-step.
+entries clamp to page 0 and are masked in-kernel. The LAST page step per
+slot (``j == max_pages - 1``) additionally folds in the in-batch rows from
+the resident ``(T, KV*hd)`` K/V panels — the in-batch tile rides the final
+page iteration instead of spending a grid step of its own, so the sweep is
+``B * max_pages`` steps, not ``B * (max_pages + 1)``. Rows not belonging to
+the current slot are naturally inert: their masks are all-False, so ``m``
+does not move, the correction factor is ``exp(0) = 1`` and their
+probability mass is zero — the scratch state needs no explicit row gating.
+Output is written once, at the last grid step.
 
 Numerics: the jnp reference (``ragged_attention_ref``) mirrors each row's
 bucketed-engine counterpart rounding-for-rounding — decode rows follow
@@ -183,27 +185,27 @@ def _ragged_attention_fwd(
             preferred_element_type=jnp.float32,
         )
 
-    @pl.when(j < maxp)
-    def _cache_page():
-        # committed prefix: one page of slot b's cache (fetched through the
-        # block table by the BlockSpec index map; -1 clamps to page 0 and is
-        # masked here)
-        page_ok = bt_ref[b, j] >= 0
-        kv_pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
-        valid = row_b & (kv_pos < ctx_c_ref[...]) & page_ok  # (T, page)
-        for h_i in range(h_total):
-            kv_i = h_i // g
-            qh = q_ref[:, h_i * hd : (h_i + 1) * hd]  # (T, hd)
-            kh = kp_ref[0][:, kv_i * hd : (kv_i + 1) * hd]  # (page, hd)
-            s = jax.lax.dot_general(
-                qh, kh, (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            ) * scale
-            update(h_i, s, valid, vp_ref[0][:, kv_i * hd : (kv_i + 1) * hd])
+    # committed prefix: one page of slot b's cache per grid step (fetched
+    # through the block table by the BlockSpec index map; -1 clamps to page
+    # 0 and is masked here) — every (b, j) step is a page step
+    page_ok = bt_ref[b, j] >= 0
+    kv_pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    valid_p = row_b & (kv_pos < ctx_c_ref[...]) & page_ok  # (T, page)
+    for h_i in range(h_total):
+        kv_i = h_i // g
+        qh = q_ref[:, h_i * hd : (h_i + 1) * hd]  # (T, hd)
+        kh = kp_ref[0][:, kv_i * hd : (kv_i + 1) * hd]  # (page, hd)
+        s = jax.lax.dot_general(
+            qh, kh, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        update(h_i, s, valid_p, vp_ref[0][:, kv_i * hd : (kv_i + 1) * hd])
 
-    @pl.when(j == maxp)
+    @pl.when(j == maxp - 1)
     def _in_batch():
-        # this step's own rows: same-slot causal prefix, including self
+        # this step's own rows: same-slot causal prefix, including self.
+        # Folded into the slot's LAST page step — the in-batch tile costs no
+        # extra grid iteration
         valid = row_b & (slot_r_ref[...] == b) & (pos_r_ref[...] <= pos_c_ref[...])
         for h_i in range(h_total):
             kv_i = h_i // g
@@ -215,7 +217,7 @@ def _ragged_attention_fwd(
             ) * scale
             update(h_i, s, valid, vt_ref[:, kv_i * hd : (kv_i + 1) * hd])
 
-    @pl.when((b == b_slots - 1) & (j == maxp))
+    @pl.when((b == b_slots - 1) & (j == maxp - 1))
     def _finalize():
         # pad rows have l == 0 (never valid anywhere) -> guarded divide;
         # their garbage output is discarded host-side
@@ -255,34 +257,23 @@ def ragged_attention_kernel(q, kp, vp, kt, vt, bt, slot, pos, ctx, *,
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(b, maxp + 1),
+        grid=(b, maxp),
         in_specs=[
             pl.BlockSpec((t, h * hd), lambda bi, ji, bts: (0, 0)),
             # the page index comes from the scalar-prefetched block table:
-            # in-batch step (ji == maxp) and unmapped entries clamp to page 0
-            # (masked in-kernel)
+            # unmapped (-1) entries clamp to page 0 (masked in-kernel); the
+            # in-batch tile shares the last page step, so ji is always a
+            # real page column
             pl.BlockSpec(
                 (1, page, kv * hd),
                 lambda bi, ji, bts: (
-                    jnp.where(
-                        bts[bi, jnp.where(ji < maxp, ji, 0)] < 0,
-                        0,
-                        bts[bi, jnp.where(ji < maxp, ji, 0)],
-                    ),
-                    0,
-                    0,
+                    jnp.where(bts[bi, ji] < 0, 0, bts[bi, ji]), 0, 0
                 ),
             ),
             pl.BlockSpec(
                 (1, page, kv * hd),
                 lambda bi, ji, bts: (
-                    jnp.where(
-                        bts[bi, jnp.where(ji < maxp, ji, 0)] < 0,
-                        0,
-                        bts[bi, jnp.where(ji < maxp, ji, 0)],
-                    ),
-                    0,
-                    0,
+                    jnp.where(bts[bi, ji] < 0, 0, bts[bi, ji]), 0, 0
                 ),
             ),
             pl.BlockSpec((t, kv * hd), lambda bi, ji, bts: (0, 0)),

@@ -85,9 +85,10 @@ def make_prefill_step(cfg: ModelConfig) -> Callable:
 
 
 def make_decode_step(cfg: ModelConfig) -> Callable:
-    """Bind cfg into the family's decode step: (params, state, tokens (B, 1))
-    -> (logits (B, 1, V), new state). The ``decode_*`` / ``long_*`` dry-run
-    cells lower exactly this function."""
+    """Bind cfg into the family's decode step: (params, state, tokens (B, sq))
+    -> (logits (B, sq, V), new state); sq == 1 plain decode, sq > 1 stacks
+    speculative draft rows (paged dense/moe). The ``decode_*`` / ``long_*``
+    dry-run cells lower exactly this function."""
     model = get_model(cfg)
 
     def decode_step(params, state, tokens):
@@ -553,6 +554,28 @@ def _make_prefix_gather(pool_keys) -> Callable:
     return jax.jit(gather)
 
 
+def _ngram_draft(hist: list, k: int) -> list:
+    """Self-drafting for speculative decode: propose the ``k`` tokens that
+    followed the most recent earlier occurrence of the history's trailing
+    n-gram (n = 3, 2, 1, longest context first), falling back to repeating
+    the last token. Host-side and deterministic — the draft only has to be
+    cheap and often right; verification makes any draft safe."""
+    n = len(hist)
+    if n == 0:
+        return [0] * k
+    for m in (3, 2, 1):
+        if n <= m:
+            continue
+        key = hist[n - m:]
+        for j in range(n - m - 1, -1, -1):
+            if hist[j : j + m] == key:
+                cont = hist[j + m : j + m + k]
+                if cont:
+                    return cont + [cont[-1]] * (k - len(cont))
+                break
+    return [hist[-1]] * k
+
+
 # families whose decode state is FULLY page-addressable (caches + pos only),
 # so a prompt prefix maps onto shared pages with no residual per-slot state.
 # vlm is excluded (patch frontends make token-hashed prefixes unsound),
@@ -591,15 +614,32 @@ class ContinuousBatchingEngine:
     steps, so decode latency stays flat during admission, and the whole
     engine compiles a single token-budget-shaped executable instead of the
     O(log max_len) prefill bucket inventory (docs/serving.md).
+    ``max_chunk_share`` caps the fraction of ``token_budget`` prompt chunks
+    may claim per step — the decode-priority knob under long-prompt floods.
+
+    ``speculation=True`` (requires ``paged=True``, non-ragged, dense/moe)
+    turns each decode launch into a self-speculative verify step: the
+    sampled token plus ``spec_k - 1`` drafted candidates run as one
+    multi-row launch through the paged-attention kernel, the longest
+    greedy-matching draft prefix commits, and rejected rows roll back by a
+    ``pos`` rewind. Greedy output is token-identical to the non-speculative
+    engine; ``throughput()`` reports ``acceptance_rate`` and
+    ``tokens_per_step`` (docs/serving.md "Speculative decoding").
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4, max_len: int = 128,
                  paged: bool = False, page_size: int = 16, n_pages: Optional[int] = None,
                  prefix_caching: bool = True, bucket_prompts: bool = True,
                  on_truncation: str = "warn", ragged: bool = False,
-                 token_budget: int = 64, preemption: bool = False):
+                 token_budget: int = 64, max_chunk_share: float = 1.0,
+                 preemption: bool = False, speculation: bool = False,
+                 spec_k: int = 4, draft_fn: Optional[Callable] = None):
         if on_truncation not in ("warn", "reject"):
             raise ValueError(f"on_truncation must be 'warn' or 'reject', got {on_truncation!r}")
+        if not 0.0 < max_chunk_share <= 1.0:
+            raise ValueError(
+                f"max_chunk_share must be in (0, 1], got {max_chunk_share}"
+            )
         self.cfg = cfg
         self.model = get_model(cfg)
         # serving default: pre-merge sibling quantized packs (q/k/v, gate/up,
@@ -669,6 +709,7 @@ class ContinuousBatchingEngine:
         # unified ragged step (chunked prefill + decode in one launch)
         self.ragged = False
         self.token_budget = int(token_budget)
+        self.max_chunk_share = float(max_chunk_share)
         self._ragged_traces: dict[int, int] = {}
         if ragged:
             ok = (
@@ -695,6 +736,40 @@ class ContinuousBatchingEngine:
                 # host mirror of per-slot committed rows: the ragged loop
                 # never downloads state["pos"] (no per-step sync for it)
                 self._pos_host = np.zeros(batch_slots, np.int32)
+        # self-speculative multi-token verification (docs/serving.md
+        # "Speculative decoding"): each decode launch stacks the sampled
+        # token plus spec_k-1 self-drafted candidates per slot and accepts
+        # the longest greedy-matching prefix. Needs the paged layout (the
+        # rollback is a pos rewind behind the full up-front page
+        # reservation) and a family whose decode_step takes (B, sq) rows
+        # through the paged_decode kernel (dense/moe).
+        self.speculation = False
+        self.spec_k = int(spec_k)
+        self._draft_fn = draft_fn
+        self._spec_traces: dict[tuple, int] = {}
+        if speculation:
+            from repro.kernels.autotune import DECODE_M_MAX
+
+            ok = (
+                self.allocator is not None
+                and not self.ragged
+                and self._extra_rows == 0
+                and cfg.family in ("dense", "moe")
+            )
+            if not ok:
+                warnings.warn(
+                    "speculation=True needs paged (non-ragged) mode and a "
+                    "family with multi-row paged decode (dense/moe); falling "
+                    "back to one-token decode steps",
+                    stacklevel=2,
+                )
+            elif not 2 <= self.spec_k <= DECODE_M_MAX:
+                raise ValueError(
+                    f"spec_k must be in [2, {DECODE_M_MAX}] (the kernel's "
+                    f"multi-query row cap), got {self.spec_k}"
+                )
+            else:
+                self.speculation = True
         self.stats = {
             "prefill_tokens": 0, "prefill_s": 0.0,
             "decode_tokens": 0, "decode_steps": 0, "decode_s": 0.0,
@@ -702,6 +777,8 @@ class ContinuousBatchingEngine:
             "requests_failed": 0, "requests_cancelled": 0,
             "requests_timed_out": 0, "requests_preempted": 0,
             "prefix_lookups": 0, "prefix_hits": 0, "prefix_hit_tokens": 0,
+            "spec_launches": 0, "spec_slot_steps": 0,
+            "spec_drafted": 0, "spec_accepted": 0,
         }
         # dispatch-counter baseline: routing() reports the delta, i.e. the
         # kernel routes this engine's traces took (quantized params only)
@@ -1168,6 +1245,112 @@ class ContinuousBatchingEngine:
             self.stats["requests_truncated"] += 1
         self._finish(req, RequestState.DONE)
 
+    def _draft_tokens(self, req: Request, k: int) -> list:
+        """``k`` draft tokens continuing the request's committed history
+        (prompt + generated, the just-sampled token included). An installed
+        ``draft_fn(req, k)`` hook (e.g. a small draft model) takes precedence
+        over the built-in n-gram self-draft; its proposals are clamped into
+        the vocab so a sloppy hook cannot crash the embed gather."""
+        if self._draft_fn is not None:
+            d = [int(t) for t in self._draft_fn(req, k)][:k]
+            d = [min(max(t, 0), self.cfg.vocab - 1) for t in d]
+            last = d[-1] if d else (req.out[-1] if req.out else 0)
+            return d + [last] * (k - len(d))
+        hist = req._prompt_host.tolist() + req.out
+        return _ngram_draft(hist, k)
+
+    def _step_spec(self, active: list) -> None:
+        """One speculative decode launch (docs/serving.md "Speculative
+        decoding"): per live slot, sample the next token from the held
+        logits (exactly the non-speculative commit), stack it with
+        ``spec_k - 1`` self-drafted candidates, and run ONE multi-row decode
+        launch — the paged kernel attends all rows causally and the page
+        scatter writes all rows' KV. Greedy slots then accept the longest
+        draft prefix matching the launch's own argmaxes (each accepted row's
+        logits re-verify the next), capped by quota and cache capacity;
+        sampled (temperature > 0) slots commit only the sampled token, so
+        their random streams are untouched. Rejected rows are rolled back by
+        rewinding ``pos`` — the full up-front page reservation makes the
+        stale rows invisible behind the prefix mask until overwritten."""
+        k = self.spec_k
+        tok = np.zeros((self.batch, k), np.int32)
+        with jax.transfer_guard("allow"):
+            pos = np.asarray(self.state["pos"])  # sync-point: next write offset per slot
+        live: list[int] = []
+        drafts: dict[int, list] = {}
+        for i in active:
+            req = self.slots[i]
+            nxt = self._sample(req)
+            req.out.append(nxt)
+            if len(req.out) >= req.max_new:
+                self._evict(i, req, truncated=False)
+            elif int(pos[i]) >= self.max_len:
+                self._evict(i, req, truncated=True)
+            else:
+                drafts[i] = self._draft_tokens(req, k - 1)
+                tok[i, 0] = nxt
+                tok[i, 1:] = drafts[i]
+                live.append(i)
+        if not live:
+            return
+        t0 = time.monotonic()
+        with jax.transfer_guard("allow"):
+            logits, self.state = self._decode(self.params, self.state, jnp.asarray(tok))
+            last = np.asarray(logits.astype(jnp.float32))  # sync-point: (B, k, V) verify download
+        last = C.logits_tap(last, "decode")
+        dt = time.monotonic() - t0
+        self._spec_traces[(self.batch, k)] = self._spec_traces.get((self.batch, k), 0) + 1
+        # flat row b*k + j -> slot b (all of a bad slot's rows are suspect)
+        bad = {f // k for f in C.nonfinite_rows(last, self.cfg.vocab)}
+        # phase 1: acceptance — longest draft prefix whose tokens match the
+        # launch's own greedy choices, then rewind pos past the rejects
+        committed: dict[int, int] = {}
+        delta = np.zeros(self.batch, np.int32)
+        for i in live:
+            req = self.slots[i]
+            n_acc = 0
+            if i not in bad and req.sampling.temperature <= 0.0:
+                quota_room = req.max_new - len(req.out)
+                cap_rows = self.max_len - int(pos[i]) - 1
+                while (n_acc < k - 1 and n_acc < quota_room and n_acc < cap_rows
+                       and int(drafts[i][n_acc])
+                       == int(np.argmax(last[i, n_acc, : self.cfg.vocab]))):
+                    req.out.append(int(drafts[i][n_acc]))
+                    n_acc += 1
+                self.stats["spec_drafted"] += k - 1
+                self.stats["spec_accepted"] += n_acc
+            committed[i] = 1 + n_acc
+            delta[i] = k - committed[i]
+        with jax.transfer_guard("allow"):
+            # sync-point: upload the per-slot rewind (rejected rows become
+            # invisible garbage past pos, overwritten by the next commits)
+            self.state["pos"] = self.state["pos"] - jnp.asarray(delta)
+        self.stats["decode_s"] += dt
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += sum(committed.values())
+        self.stats["spec_launches"] += 1
+        self.stats["spec_slot_steps"] += len(live)
+        # phase 2: per-slot exits AFTER the rewind (the release path zeroes
+        # pos; rewinding later would resurrect the freed slot's offset)
+        for i in live:
+            req = self.slots[i]
+            if i in bad:
+                self.slots[i] = None
+                self._release_slot(i)
+                self._finish(req, RequestState.FAILED, "nan_logits",
+                             f"non-finite decode logits at engine step "
+                             f"{self._steps}")
+                continue
+            req._last_logits = last[i, committed[i] - 1]
+            if len(req.out) >= req.max_new:
+                self._evict(i, req, truncated=False)
+            elif int(pos[i]) + committed[i] >= self.max_len:
+                # mirror the non-speculative order exactly: the token past
+                # the last cache row is still sampled and kept, THEN the
+                # slot exits (truncated unless that token filled the quota)
+                req.out.append(self._sample(req))
+                self._evict(i, req, truncated=len(req.out) < req.max_new)
+
     def _step_ragged(self) -> int:
         """One unified ragged engine step (docs/serving.md): sample + schedule
         one decode token per decoding slot FIRST (decode rows are never
@@ -1208,14 +1391,20 @@ class ContinuousBatchingEngine:
                 logit_idx[i] = row
                 decode_rows.append(i)
                 row += 1
-        # prompt chunks fill whatever budget decode left, FIFO across slots
+        # prompt chunks fill whatever budget decode left, FIFO across slots,
+        # additionally capped at max_chunk_share of the token budget — the
+        # decode-priority knob: a long-prompt flood can never swell the
+        # launch beyond the configured share, so steady decoders keep their
+        # per-step cadence at a bounded launch size. The floor of one token
+        # keeps admission live even at tiny shares.
+        chunk_cap = max(1, int(self.token_budget * self.max_chunk_share))
         chunks: list[tuple[int, int]] = []  # (slot, tokens scheduled)
         n_chunk = 0
         for i in active:
             req = self.slots[i]
             if req is None or req._last_logits is not None:
                 continue
-            space = budget - row
+            space = min(budget - row, chunk_cap - n_chunk)
             if space <= 0:
                 break
             take = min(space, len(req._prompt) - req._filled)
@@ -1296,6 +1485,10 @@ class ContinuousBatchingEngine:
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return 0
+        if self.speculation:
+            self._step_spec(active)
+            self._admit()
+            return len(active)
         tok = np.zeros((self.batch, 1), np.int32)
         with jax.transfer_guard("allow"):
             pos = np.asarray(self.state["pos"])  # sync-point: next write offset per slot
@@ -1404,11 +1597,15 @@ class ContinuousBatchingEngine:
             # distinct (prefix-offset, frontend) variants: the recompile
             # sanitizer's budget is O(log max_len) buckets PER variant
             "prefill_variants": len({k[1:] for k in self._prefill_traces}),
-            "decode_traces": 1 if (self.stats["decode_steps"] and not self.ragged) else 0,
+            "decode_traces": 1 if (self.stats["decode_steps"] and not self.ragged
+                                   and not self.speculation) else 0,
             # ragged mode compiles ONE token-budget-shaped executable for
             # everything (chunked prefill + decode); the compile-budget
             # sanitizer asserts ragged_traces + prefill_traces <= 2
             "ragged_traces": len(self._ragged_traces),
+            # speculative mode likewise compiles ONE (batch, spec_k)-shaped
+            # decode executable; every distinct spec launch shape is a trace
+            "spec_traces": len(self._spec_traces),
         }
 
     def memory(self) -> dict:
@@ -1505,6 +1702,15 @@ class ContinuousBatchingEngine:
             "decode_tok_s": st["decode_tokens"] / max(st["decode_s"], 1e-9),
             "prefill_tok_s": st["prefill_tokens"] / max(st["prefill_s"], 1e-9),
             "mean_batch_occupancy": st["decode_tokens"] / max(st["decode_steps"], 1),
+            # speculative decode quality: drafts accepted / drafts verified,
+            # and committed tokens per slot per decode launch (>= 1.0; the
+            # speculation speedup lever, 1.0 exactly when speculation is off)
+            "acceptance_rate": st["spec_accepted"] / max(st["spec_drafted"], 1),
+            "tokens_per_step": (
+                st["decode_tokens"] / max(st["spec_slot_steps"], 1)
+                if self.speculation
+                else (1.0 if st["decode_tokens"] else 0.0)
+            ),
             "routing": self.routing(),
             **st,
         }

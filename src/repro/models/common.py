@@ -638,6 +638,36 @@ def ragged_attn(p: dict, h: jax.Array, cfg: ModelConfig, kp: jax.Array,
     return linear(p["o"], out.reshape(1, t, hh * hd)), k[0], v[0]
 
 
+def paged_attn(p: dict, x: jax.Array, cfg: ModelConfig, kp: jax.Array,
+               vp: jax.Array, bt: jax.Array, pos: jax.Array):
+    """One layer's decode attention straight over paged KV pools.
+
+    ``x (B, sq, D)`` holds each slot's decode rows (``sq == 1`` plain decode,
+    ``sq > 1`` speculative draft stacks), ``kp/vp (P, page, KV, hd)`` one
+    layer's page pools behind the block tables ``bt (B, maxp)``, and ``pos
+    (B,)`` each slot's committed prefix length. Routes the in-kernel
+    block-table path (``kernels/dispatch.paged_decode``): pages stream
+    through the kernel, so no dense ``gather_pages`` view of the cache is
+    ever materialized. Returns (out (B, sq, D), k_t (B, sq, KV, hd), v_t)
+    with k_t/v_t post-RoPE, ready for the caller's post-scan page commit
+    (``commit=False`` — the scan-stacked families batch one scatter per
+    layer after the scan)."""
+    from repro.kernels.dispatch import paged_decode
+
+    b, sq, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = linear_group(p, ("q", "k", "v"), "qkv", x)
+    q = q.reshape(b, sq, h, hd)
+    k = k.reshape(b, sq, kvh, hd)
+    v = v.reshape(b, sq, kvh, hd)
+    positions = slot_positions(pos, b, sq)
+    tables = rope_tables(positions, hd, cfg.rope_fraction, cfg.rope_theta)
+    q = apply_rope(q, tables)
+    k = apply_rope(k, tables)
+    out = paged_decode(q, kp, vp, k, v, bt, pos, commit=False)
+    return linear(p["o"], out.reshape(b, sq, h * hd)), k, v
+
+
 def select_at_length(x: jax.Array, length) -> jax.Array:
     """Last REAL position of each row: x (B, S, D), length (B,) or scalar ->
     (B, 1, D). ``length=None`` means the whole row is real (no padding)."""

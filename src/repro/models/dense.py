@@ -175,43 +175,54 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict,
 
 
 def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
-    """tokens (B, 1) -> (logits (B, 1, V), new state). One new token per slot
-    with a KV cache of max_len (the `decode_*` / `long_*` shapes lower THIS).
-    state["pos"] is per-slot (B,): slots at different timeline offsets decode
-    in lock-step (continuous batching).
+    """tokens (B, sq) -> (logits (B, sq, V), new state). ``sq`` new tokens per
+    slot (sq == 1 plain decode; sq > 1 stacks speculative draft rows, paged
+    state only) with a KV cache of max_len (the `decode_*` / `long_*` shapes
+    lower THIS). state["pos"] is per-slot (B,): slots at different timeline
+    offsets decode in lock-step (continuous batching).
 
-    The layer scan reads the cache READ-ONLY and emits each layer's one-token
-    (k_t, v_t); the cache is updated with a single batched one-token scatter
-    after the scan — per-step cache write traffic is O(L·B·KV·hd), not
-    O(L·B·S·KV·hd) (§Perf cell C iteration 2)."""
+    The layer scan reads the cache READ-ONLY and emits each layer's (k_t,
+    v_t) rows; the cache is updated with a single batched scatter after the
+    scan — per-step cache write traffic is O(L·B·sq·KV·hd), not
+    O(L·B·S·KV·hd) (§Perf cell C iteration 2). The paged branch routes the
+    in-kernel block-table attention (kind ``paged_decode``): no
+    ``gather_pages`` dense view is materialized on this path."""
     x = C.embed_lookup(params["embed"], tokens)
-    pos = C.slot_positions(state["pos"], tokens.shape[0])[:, 0]
+    b, sq = tokens.shape
+    pos = C.slot_positions(state["pos"], b)[:, 0]
     paged = "bt" in state  # paged pool + block table vs dense per-slot cache
 
     def body(x, lp_cache):
         lp, kc, vc = lp_cache
-        if paged:
-            kc = C.gather_pages(kc, state["bt"])
-            vc = C.gather_pages(vc, state["bt"])
         h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
-        att, kt, vt = C.attention_decode_ro(lp["attn"], h, cfg, kc, vc, pos)
+        if paged:
+            att, kt, vt = C.paged_attn(lp["attn"], h, cfg, kc, vc, state["bt"], pos)
+        else:
+            att, kt, vt = C.attention_decode_ro(lp["attn"], h, cfg, kc, vc, pos)
         x = x + att
         x = x + C.mlp_apply(lp["mlp"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps))
         return x, (kt, vt)
 
     x, (kts, vts) = jax.lax.scan(body, x, (params["layers"], state["k"], state["v"]))
     if paged:
+        slot = jnp.repeat(jnp.arange(b, dtype=jnp.int32), sq)
+        rows = C.slot_positions(pos, b, sq).reshape(-1)
+        kvh, hd = cfg.n_kv_heads, cfg.head_dim
         new_state = {
             **state,
-            "k": C.scatter_token_pages(state["k"], kts, state["bt"], pos),
-            "v": C.scatter_token_pages(state["v"], vts, state["bt"], pos),
-            "pos": pos + 1,
+            "k": C.scatter_rows_pages(
+                state["k"], kts.reshape(cfg.n_layers, b * sq, kvh, hd),
+                state["bt"], slot, rows),
+            "v": C.scatter_rows_pages(
+                state["v"], vts.reshape(cfg.n_layers, b * sq, kvh, hd),
+                state["bt"], slot, rows),
+            "pos": pos + sq,
         }
     else:
         new_state = {
             "k": C.update_cache_slot_stacked(state["k"], kts, pos),
             "v": C.update_cache_slot_stacked(state["v"], vts, pos),
-            "pos": pos + 1,
+            "pos": pos + sq,
         }
     return _unembed(params, cfg, x), new_state
 

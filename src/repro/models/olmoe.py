@@ -95,34 +95,46 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, state: dict,
 
 
 def decode_step(params: dict, cfg: ModelConfig, state: dict, tokens: jax.Array):
+    """tokens (B, sq) -> (logits (B, sq, V), new state); sq > 1 stacks
+    speculative draft rows (paged state only). Paged decode routes the
+    in-kernel block-table attention (kind ``paged_decode``) — see
+    models/dense.decode_step."""
     x = C.embed_lookup(params["embed"], tokens)
-    pos = C.slot_positions(state["pos"], tokens.shape[0])[:, 0]
+    b, sq = tokens.shape
+    pos = C.slot_positions(state["pos"], b)[:, 0]
     paged = "bt" in state
 
     def body(x, lp_cache):
         lp, kc, vc = lp_cache
-        if paged:
-            kc = C.gather_pages(kc, state["bt"])
-            vc = C.gather_pages(vc, state["bt"])
         h = C.rmsnorm(x, lp["ln1"], cfg.norm_eps)
-        att, kt, vt = C.attention_decode_ro(lp["attn"], h, cfg, kc, vc, pos)
+        if paged:
+            att, kt, vt = C.paged_attn(lp["attn"], h, cfg, kc, vc, state["bt"], pos)
+        else:
+            att, kt, vt = C.attention_decode_ro(lp["attn"], h, cfg, kc, vc, pos)
         x = x + att
         m, _ = moe_ffn(lp["moe"], C.rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg)
         return x + m, (kt, vt)
 
     x, (kts, vts) = jax.lax.scan(body, x, (params["layers"], state["k"], state["v"]))
     if paged:
+        slot = jnp.repeat(jnp.arange(b, dtype=jnp.int32), sq)
+        rows = C.slot_positions(pos, b, sq).reshape(-1)
+        kvh, hd = cfg.n_kv_heads, cfg.head_dim
         new_state = {
             **state,
-            "k": C.scatter_token_pages(state["k"], kts, state["bt"], pos),
-            "v": C.scatter_token_pages(state["v"], vts, state["bt"], pos),
-            "pos": pos + 1,
+            "k": C.scatter_rows_pages(
+                state["k"], kts.reshape(cfg.n_layers, b * sq, kvh, hd),
+                state["bt"], slot, rows),
+            "v": C.scatter_rows_pages(
+                state["v"], vts.reshape(cfg.n_layers, b * sq, kvh, hd),
+                state["bt"], slot, rows),
+            "pos": pos + sq,
         }
     else:
         new_state = {
             "k": C.update_cache_slot_stacked(state["k"], kts, pos),
             "v": C.update_cache_slot_stacked(state["v"], vts, pos),
-            "pos": pos + 1,
+            "pos": pos + sq,
         }
     return D._unembed(params, cfg, x), new_state
 

@@ -408,3 +408,51 @@ def test_randomized_cancel_timeout_preempt_schedule(cfg_name, params, mparams):
         if r.status == RequestState.DONE and not r.truncated:
             assert r.out == _solo(cfg, p, prompts[k], max_new=6), k
     eng.check_page_invariants()
+
+
+@pytest.mark.parametrize("cfg_name", ["dense", "moe"])
+def test_randomized_schedule_with_speculation(cfg_name, params, mparams):
+    """The same seeded random schedule with speculative decoding on: every
+    launch stacks spec_k candidate rows per slot and rolls the rejected tail
+    back by rewinding pos. Cancels, deadline expiries, and preemptions land
+    between (and during) those rollbacks, so this is the adversarial case
+    for the rewind bookkeeping — survivors must still match the
+    NON-speculative solo oracle token for token, and the rolled-back page
+    writes must leak nothing past the prefix-cache registrations."""
+    from repro.analysis.sanitizers import assert_compile_budget
+
+    cfg, p = (CFG, params) if cfg_name == "dense" else (MCFG, mparams)
+    rng = np.random.default_rng(42)
+    eng = ContinuousBatchingEngine(cfg, p, batch_slots=2, max_len=64,
+                                   paged=True, page_size=16, n_pages=6,
+                                   preemption=True, speculation=True,
+                                   spec_k=4)
+    assert eng.speculation
+    prompts = {k: _prompt(int(rng.integers(8, 20)), 100 + k) for k in range(6)}
+    reqs = {k: Request(jnp.asarray(v, jnp.int32), max_new=6,
+                       priority=int(rng.integers(0, 3)),
+                       deadline_steps=(None if rng.random() < 0.7
+                                       else int(rng.integers(2, 30))))
+            for k, v in prompts.items()}
+    pending = list(reqs)
+    with lifecycle_checks(eng), page_invariant_checks(eng):
+        for step in range(200):
+            if pending and rng.random() < 0.4:
+                eng.submit(reqs[pending.pop(0)])
+            if rng.random() < 0.1:
+                victim = reqs[int(rng.integers(6))]
+                eng.cancel(victim)  # may be a no-op; must never corrupt
+            if eng.step() == 0 and not eng.queue and not pending:
+                break
+    assert not pending
+    leaked = eng.allocator.n_used
+    if eng.prefix_cache is not None:
+        leaked -= sum(1 for _ in eng.prefix_cache.entries)
+    assert leaked <= 0, f"{leaked} pages leaked past speculative rollbacks"
+    for k, r in reqs.items():
+        assert r.status in RequestState.TERMINAL, (k, r.status)
+        if r.status == RequestState.DONE and not r.truncated:
+            assert r.out == _solo(cfg, p, prompts[k], max_new=6), k
+    eng.check_page_invariants()
+    # the whole chaotic lifetime still compiled ONE speculative executable
+    assert assert_compile_budget(eng)["spec_traces"] <= 1

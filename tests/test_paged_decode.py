@@ -1,0 +1,375 @@
+"""In-kernel paged decode attention + speculative verification tests.
+
+Three layers, mirroring tests/test_ragged_engine.py:
+
+* **kernel** — the block-table paged decode kernel (interpret mode) agrees
+  with its jnp oracle on a mixed-occupancy batch, the fused tail-page
+  commit writes the pools bit-identically to the reference scatter, and a
+  stacked draft panel is row-for-row bit-identical to running the same
+  rows sequentially (the property that makes greedy acceptance exact);
+* **dispatch** — kind ``paged_decode`` is recorded with kernel / ref /
+  ref[forced] counters and the documented ref reason codes (``rows``,
+  ``hd_unaligned``);
+* **engine** — a speculative serving engine (every decode launch stacks
+  ``spec_k`` candidate rows per slot) is token-for-token identical to the
+  non-speculative solo oracle for greedy, sampled, and cache-truncated
+  requests; the whole lifetime compiles exactly ONE (batch, spec_k)-shaped
+  decode executable; and misconfiguration warns or raises instead of
+  silently serving wrong.
+
+Plus the ``max_chunk_share`` decode-priority knob for the ragged engine: a
+long-prompt flood capped to a fraction of the token budget must stretch
+admission over more steps without costing steady decoders their cadence.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.sanitizers import (
+    assert_compile_budget,
+    no_recompiles,
+    page_invariant_checks,
+)
+from repro.configs import ModelConfig
+from repro.kernels import dispatch
+from repro.kernels.paged_attention import paged_decode_kernel, paged_decode_ref
+from repro.launch.serve import (
+    ContinuousBatchingEngine,
+    Request,
+    SamplingParams,
+    _ngram_draft,
+)
+from repro.models import dense, olmoe
+
+jax.config.update("jax_platform_name", "cpu")
+
+DCFG = ModelConfig(
+    name="tiny-paged", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, remat=False,
+)
+MCFG = ModelConfig(
+    name="tiny-paged-moe", family="moe", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, vocab=256, remat=False,
+    n_experts=4, top_k=2, d_ff_expert=64, capacity_factor=4.0,
+)
+
+
+@pytest.fixture(scope="module")
+def dparams():
+    return dense.init_params(DCFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def mparams():
+    return olmoe.init_params(MCFG, jax.random.PRNGKey(1))
+
+
+def _prompts(lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, 200, size=n).tolist() for n in lens]
+
+
+def _solo(cfg, params, prompt, max_new=6, max_len=64):
+    """Non-speculative bucketed solo serving: the token-equality oracle."""
+    eng = ContinuousBatchingEngine(cfg, params, batch_slots=1, max_len=max_len)
+    req = Request(jnp.asarray(prompt, jnp.int32), max_new=max_new)
+    eng.serve([req])
+    assert req.done
+    return req
+
+
+def _spec_engine(cfg, params, max_len=64, **kw):
+    return ContinuousBatchingEngine(
+        cfg, params, batch_slots=2, max_len=max_len, paged=True, page_size=8,
+        n_pages=24, speculation=True, spec_k=4, **kw,
+    )
+
+
+def _spec_batch(seed=3, sq=4, hd=16):
+    """A mixed-occupancy speculative launch: slot 0 mid-sequence with its
+    draft span straddling a page boundary, slot 1 early, slot 2 cold (pos 0,
+    all rows in the first page). Every slot's tail pages are mapped — the
+    commit-mode contract."""
+    rng = np.random.default_rng(seed)
+    B, maxp, page, KV, H = 3, 4, 8, 2, 4
+    P = B * maxp
+
+    def f(*s):
+        return jnp.asarray(rng.standard_normal(s), jnp.bfloat16)
+
+    q, kt, vt = f(B, sq, H, hd), f(B, sq, KV, hd), f(B, sq, KV, hd)
+    kp, vp = f(P, page, KV, hd), f(P, page, KV, hd)
+    pos = np.array([13, 5, 0], np.int32)
+    perm = rng.permutation(P)
+    bt = np.full((B, maxp), -1, np.int32)
+    for b in range(B):
+        n_pg = (int(pos[b]) + sq - 1) // page + 1  # prefix + draft span
+        bt[b, :n_pg] = perm[b * maxp : b * maxp + n_pg]
+    return (q, kp, vp, kt, vt, jnp.asarray(bt), jnp.asarray(pos))
+
+
+def _f32(x):
+    return np.asarray(x, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs reference
+# ---------------------------------------------------------------------------
+
+
+def test_paged_kernel_matches_ref_interpret():
+    """Pallas kernel (interpret mode) vs jnp oracle, attention output AND
+    the fused tail-page commit. The kernel accumulates fused-f32 while the
+    ref rounds split-bf16 per row, so the output agrees to bf16 tolerance —
+    but the committed pool rows are plain bf16 casts both ways, so the
+    pools must match bit for bit."""
+    args = _spec_batch()
+    out_r, kp_r, vp_r = paged_decode_ref(*args, commit=True)
+    out_k, kp_k, vp_k = paged_decode_kernel(*args, commit=True, interpret=True)
+    np.testing.assert_allclose(_f32(out_k), _f32(out_r), atol=0.03, rtol=0.05)
+    np.testing.assert_array_equal(_f32(kp_k), _f32(kp_r))
+    np.testing.assert_array_equal(_f32(vp_k), _f32(vp_r))
+
+
+def test_paged_kernel_matches_ref_no_commit():
+    args = _spec_batch(seed=5)
+    out_r = paged_decode_ref(*args, commit=False)
+    out_k = paged_decode_kernel(*args, commit=False, interpret=True)
+    np.testing.assert_allclose(_f32(out_k), _f32(out_r), atol=0.03, rtol=0.05)
+
+
+def test_stacked_rows_bit_identical_to_sequential():
+    """Row ``i`` of a stacked draft launch must equal the output a
+    sequential engine would produce at position ``pos + i`` — bitwise. This
+    is the property that makes greedy speculative acceptance exact: the
+    verification logits ARE the sequential logits, not an approximation."""
+    q, kp, vp, kt, vt, bt, pos = _spec_batch(seed=7)
+    stacked = paged_decode_ref(q, kp, vp, kt, vt, bt, pos, commit=False)
+    kp_s, vp_s, outs = kp, vp, []
+    for i in range(q.shape[1]):
+        o, kp_s, vp_s = paged_decode_ref(
+            q[:, i : i + 1], kp_s, vp_s, kt[:, i : i + 1], vt[:, i : i + 1],
+            bt, pos + i, commit=True,
+        )
+        outs.append(o)
+    np.testing.assert_array_equal(
+        _f32(stacked), _f32(jnp.concatenate(outs, axis=1))
+    )
+
+
+# ---------------------------------------------------------------------------
+# dispatch routing
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_records_paged_decode_kind():
+    args = _spec_batch()
+    dispatch.reset_dispatch_counters()
+    dispatch.paged_decode(*args, commit=False)
+    dispatch.paged_decode(*args, commit=False, impl="ref")
+    c = dispatch.dispatch_counters()
+    assert c.get("paged_decode/kernel") == 1, c
+    assert c.get("paged_decode/ref") == 1 and c.get("paged_decode/ref[forced]") == 1, c
+
+
+def test_dispatch_ref_reason_codes():
+    """Unroutable shapes fall back loudly with the documented reason codes:
+    a draft stack past DECODE_M_MAX routes ``ref[rows]``, a lane-untileable
+    head dim routes ``ref[hd_unaligned]`` — and both still execute (the jnp
+    oracle has no shape restrictions)."""
+    from repro.kernels.autotune import DECODE_M_MAX
+
+    dispatch.reset_dispatch_counters()
+    deep = _spec_batch(sq=DECODE_M_MAX + 1)
+    dispatch.paged_decode(*deep, commit=False)
+    odd = _spec_batch(hd=12)
+    dispatch.paged_decode(*odd, commit=False)
+    c = dispatch.dispatch_counters()
+    assert c.get("paged_decode/ref[rows]") == 1, c
+    assert c.get("paged_decode/ref[hd_unaligned]") == 1, c
+
+
+# ---------------------------------------------------------------------------
+# n-gram self-draft
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_draft_continues_repeats():
+    # history ends in a loop: the draft replays the continuation of the
+    # previous occurrence of the trailing trigram
+    hist = [5, 6, 7, 8, 5, 6, 7]
+    assert _ngram_draft(hist, 3) == [8, 5, 6]
+    # no structure: repeat the last token; empty history: zeros
+    assert _ngram_draft([9], 2) == [9, 9]
+    assert _ngram_draft([], 2) == [0, 0]
+
+
+# ---------------------------------------------------------------------------
+# the acceptance bar: speculative serving == non-speculative oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_speculative_greedy_token_equality(family, dparams, mparams):
+    """Greedy speculative decoding must be bit-identical to solo serving:
+    drafts only ever shortcut steps the oracle would have taken anyway. The
+    lifetime compiles ONE (batch, spec_k)-shaped decode executable, routes
+    the paged_decode kind, and leaks no pages across rollbacks."""
+    cfg, params = (DCFG, dparams) if family == "dense" else (MCFG, mparams)
+    prompts = _prompts((5, 23, 17, 9), seed=1)
+    oracles = [_solo(cfg, params, p, max_new=24).out for p in prompts]
+    eng = _spec_engine(cfg, params)
+    reqs = [Request(jnp.asarray(p, jnp.int32), max_new=24) for p in prompts]
+    with page_invariant_checks(eng):
+        eng.serve(reqs)
+    for k, (r, o) in enumerate(zip(reqs, oracles)):
+        assert r.out == o, (k, r.out, o)
+    th = eng.throughput()
+    # the decode path is the in-kernel block-table route, not a dense view
+    assert th["routing"].get("paged_decode/kernel", 0) >= 1, th["routing"]
+    assert 0.0 <= th["acceptance_rate"] <= 1.0
+    assert th["tokens_per_step"] >= 1.0
+    cs = assert_compile_budget(eng)
+    assert cs["spec_traces"] == 1 and cs["decode_traces"] == 0, cs
+
+
+def test_speculative_sampled_slots_keep_rng_stream(dparams):
+    """temperature > 0 slots commit only the sampled token per launch, so
+    their random streams — and therefore their outputs — are exactly the
+    non-speculative ones, even sharing launches with greedy slots."""
+    prompts = _prompts((7, 12), seed=4)
+    sp = SamplingParams(temperature=1.0, top_k=20, seed=42)
+    oracle_g = _solo(DCFG, dparams, prompts[0], max_new=12).out
+    eng1 = ContinuousBatchingEngine(DCFG, dparams, batch_slots=1, max_len=64)
+    oracle_s = Request(jnp.asarray(prompts[1], jnp.int32), max_new=12, sampling=sp)
+    eng1.serve([oracle_s])
+    eng = _spec_engine(DCFG, dparams)
+    greedy = Request(jnp.asarray(prompts[0], jnp.int32), max_new=12)
+    sampled = Request(jnp.asarray(prompts[1], jnp.int32), max_new=12, sampling=sp)
+    eng.serve([greedy, sampled])
+    assert greedy.out == oracle_g
+    assert sampled.out == oracle_s.out
+
+
+def test_speculative_truncation_matches_oracle(dparams):
+    """A request that hits cache capacity mid-draft exits with the same
+    tokens and the same ``truncated`` flag as the oracle: acceptance is
+    capped at the cache rows left, and the final past-capacity token is
+    still sampled before the exit (the non-speculative order)."""
+    (prompt,) = _prompts([24], seed=6)
+    oracle = _solo(DCFG, dparams, prompt, max_new=20, max_len=32)
+    assert oracle.truncated  # the workload must actually exercise the cap
+    eng = _spec_engine(DCFG, dparams, max_len=32)
+    req = Request(jnp.asarray(prompt, jnp.int32), max_new=20)
+    eng.serve([req])
+    assert req.out == oracle.out
+    assert req.truncated == oracle.truncated
+
+
+def test_spec_single_trace_no_recompiles(dparams):
+    """After the first speculative launch traces, every later admission mix
+    reuses the one (batch, spec_k)-shaped executable."""
+    eng = _spec_engine(DCFG, dparams)
+    eng.serve([Request(jnp.asarray(p, jnp.int32), max_new=8)
+               for p in _prompts((5, 9), seed=7)])
+    with no_recompiles(eng):
+        eng.serve([Request(jnp.asarray(p, jnp.int32), max_new=8)
+                   for p in _prompts((11, 4), seed=8)])
+    assert assert_compile_budget(eng)["spec_traces"] == 1
+
+
+def test_draft_fn_hook_cannot_crash_the_engine(dparams):
+    """An installed draft hook's proposals are clamped into the vocab: a
+    sloppy draft model can only lower the acceptance rate, never poison the
+    embed gather or the outputs."""
+    (prompt,) = _prompts([9], seed=9)
+    oracle = _solo(DCFG, dparams, prompt, max_new=10).out
+    eng = ContinuousBatchingEngine(
+        DCFG, dparams, batch_slots=2, max_len=64, paged=True, page_size=8,
+        n_pages=24, speculation=True, spec_k=4,
+        draft_fn=lambda req, k: [10**9, -5, 3],
+    )
+    req = Request(jnp.asarray(prompt, jnp.int32), max_new=10)
+    eng.serve([req])
+    assert req.out == oracle
+
+
+# ---------------------------------------------------------------------------
+# loud failure modes
+# ---------------------------------------------------------------------------
+
+
+def test_speculation_without_paged_falls_back_with_warning(dparams):
+    with pytest.warns(UserWarning, match="speculation"):
+        eng = ContinuousBatchingEngine(
+            DCFG, dparams, batch_slots=2, max_len=64, speculation=True
+        )
+    assert not eng.speculation
+    (prompt,) = _prompts([7])
+    req = Request(jnp.asarray(prompt, jnp.int32), max_new=4)
+    eng.serve([req])
+    assert req.out == _solo(DCFG, dparams, prompt, max_new=4).out
+
+
+def test_spec_k_validation(dparams):
+    """spec_k outside [2, DECODE_M_MAX] is a constructor error — the kernel
+    cannot verify more rows than its panel bound, and k=1 is non-spec."""
+    for bad_k in (1, 99):
+        with pytest.raises(ValueError, match="spec_k"):
+            ContinuousBatchingEngine(
+                DCFG, dparams, batch_slots=2, max_len=64, paged=True,
+                page_size=8, n_pages=24, speculation=True, spec_k=bad_k,
+            )
+
+
+def test_max_chunk_share_validation(dparams):
+    for bad in (0.0, 1.5):
+        with pytest.raises(ValueError, match="max_chunk_share"):
+            ContinuousBatchingEngine(
+                DCFG, dparams, batch_slots=2, max_len=64, paged=True,
+                ragged=True, token_budget=16, max_chunk_share=bad,
+            )
+
+
+# ---------------------------------------------------------------------------
+# max_chunk_share: decode cadence under a capped long-prompt flood
+# ---------------------------------------------------------------------------
+
+
+def test_max_chunk_share_keeps_decode_cadence(dparams):
+    """Cap prompt chunks at a quarter of the budget: the 40-token flood now
+    takes ~10 admission steps instead of ~3, but every step still decodes
+    BOTH steady slots, no step schedules more chunk rows than the cap, and
+    the flooding request's output is still oracle-identical."""
+    eng = ContinuousBatchingEngine(
+        DCFG, dparams, batch_slots=3, max_len=64, paged=True,
+        ragged=True, token_budget=16, max_chunk_share=0.25,
+    )
+    cap = max(1, int(16 * 0.25))
+    steady = [Request(jnp.asarray([7 + k, 11, 13], jnp.int32), max_new=30)
+              for k in range(2)]
+    for r in steady:
+        eng.submit(r)
+    for _ in range(4):  # 6 steady prompt tokens through a 4-token cap
+        if all(r._last_logits is not None for r in steady):
+            break
+        eng.step()
+    assert all(r._last_logits is not None for r in steady)
+    (long_prompt,) = _prompts([40], seed=2)
+    burst = Request(jnp.asarray(long_prompt, jnp.int32), max_new=4)
+    eng.submit(burst)
+    deltas, chunk_rows = [], []
+    while burst._last_logits is None:
+        before_d = eng.stats["decode_tokens"]
+        before_p = eng.stats["prefill_tokens"]
+        eng.step()
+        deltas.append(eng.stats["decode_tokens"] - before_d)
+        chunk_rows.append(eng.stats["prefill_tokens"] - before_p)
+    assert len(deltas) >= 10, deltas  # 40 tokens / 4-token cap
+    assert all(d == 2 for d in deltas), deltas
+    assert all(c <= cap for c in chunk_rows), chunk_rows
+    eng.run_until_done()
+    assert burst.out == _solo(DCFG, dparams, long_prompt, max_new=4).out
