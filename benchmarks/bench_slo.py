@@ -1,0 +1,170 @@
+"""SLO lane (BENCH_SLO.json): tail latency under production-shaped traffic.
+
+The throughput lanes measure steady state; this lane measures what a user
+feels. A seeded three-scenario workload (chat behind a shared system prompt,
+long-doc summarization, top-priority short bursts — ``launch/workload.py``)
+replays on the step clock through the paged preemptive engine serving the
+packed-W4A4 bench model under deliberate page pressure, and
+``engine.latency()`` reports TTFT / per-token / end-to-end percentiles,
+goodput under the SLO, queue depth, preemption and prefix-hit rates.
+
+The hard gate is CORRECTNESS under load, not speed: the workload is rebuilt
+from the same seed and every request is replayed alone through the bucketed
+dense-layout solo engine — the same oracle the chaos suite holds
+preempt/resume to — and the loaded engine's streams must be TOKEN-IDENTICAL.
+Preemptions, prefix-cache restores and deadline machinery may reshape the
+schedule, never the tokens. The gated configuration is therefore the
+BUCKETED paged preemptive engine: its prefix-hit and preempt/resume paths
+are already held to exact equality by the paged lane and the chaos suite,
+so a mismatch here is a real scheduling bug. (Ragged chunked prefill on the
+quantized model is deliberately NOT the gated config: a chunk boundary
+reassociates the f32 softmax accumulation — ~1e-7, enough to flip a
+near-tied argmax on random-init weights; see examples/serve_quantized.py.
+The ragged configs live in the ungated sweep.) Latency numbers gate as
+ratchets in compare.py (warning-only while the baseline slo section carries
+``"bootstrap": true``, DESIGN.md §12).
+
+An ungated knob sweep reruns the same workload across the scheduling knobs
+the engine exposes — ragged ``token_budget``, ``max_chunk_share``,
+preemption off, and the speculative config (``spec_k=2``) — so the artifact
+trail shows how each knob trades TTFT against goodput (docs/serving.md has
+the tuning recipe).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import BENCH_CFG, emit
+
+SEED = 2
+N_REQUESTS = 8  # burst clustering expands this to ~12 actual requests
+MAX_LEN = 96
+PAGE_SIZE = 8
+# loose CPU-scale objective: the gate ratchets the percentiles themselves;
+# the SLO here only defines which requests count toward goodput
+SLO_TTFT_S = 5.0
+SLO_TPOT_S = 1.0
+
+
+def _quantized_params(fused: bool):
+    from repro.configs import QuantSpec
+    from repro.core.twinquant import fuse_params, quantize_params
+    from repro.models import dense
+
+    params = dense.init_params(BENCH_CFG, jax.random.PRNGKey(0))
+    qparams = quantize_params(params, BENCH_CFG, QuantSpec(mode="w4a4", rank=32))
+    return fuse_params(qparams) if fused else qparams
+
+
+def _workload():
+    from repro.launch.workload import make_workload
+
+    return make_workload(SEED, n_requests=N_REQUESTS, vocab=BENCH_CFG.vocab)
+
+
+def _replay_config(qparams, **engine_kw) -> tuple:
+    """Build an engine with ``engine_kw``, warm its executables on a throwaway
+    request, then replay a fresh regeneration of THE workload (results ride
+    on Request objects, so every config gets its own copies). Returns
+    ``(latency_summary, requests)``."""
+    import jax.numpy as jnp
+
+    from repro.launch.metrics import SLO
+    from repro.launch.serve import ContinuousBatchingEngine, Request
+    from repro.launch.workload import replay
+
+    eng = ContinuousBatchingEngine(
+        BENCH_CFG, qparams, batch_slots=4, max_len=MAX_LEN, paged=True,
+        page_size=PAGE_SIZE, **engine_kw,
+    )
+    eng.serve([Request(jnp.arange(1, 9, dtype=jnp.int32), max_new=2)])
+    eng.reset_stats()  # drop compile-inflated warm-up stamps from latency()
+    wl = _workload()
+    reqs = replay(eng, wl)
+    return eng.latency(slo=SLO(ttft_s=SLO_TTFT_S, tpot_s=SLO_TPOT_S)), reqs
+
+
+def _solo_outputs(qparams) -> list[list[int]]:
+    """The oracle: each workload request alone through ONE bucketed
+    dense-layout b=1 engine (reused so prefill buckets compile once) — the
+    same solo reference the chaos suite pins preemption/resume to."""
+    from repro.launch.serve import ContinuousBatchingEngine, Request
+
+    eng = ContinuousBatchingEngine(BENCH_CFG, qparams, batch_slots=1,
+                                   max_len=MAX_LEN)
+    outs = []
+    for item in _workload().items:
+        req = Request(item.request.prompt, max_new=item.request.max_new)
+        eng.serve([req])
+        outs.append(req.out)
+    return outs
+
+
+def _sweep_row(lat: dict) -> dict:
+    """The per-config comparison row the knob sweep records (ungated)."""
+    return {
+        "ttft_p50_ms": lat["ttft_ms"]["p50"],
+        "ttft_p95_ms": lat["ttft_ms"]["p95"],
+        "tpot_p95_ms": lat["tpot_ms"]["p95"],
+        "goodput_tok_s": lat["goodput_tok_s"],
+        "slo_met_rate": lat["slo_met_rate"],
+        "preemption_rate": lat["preemption_rate"],
+        "prefix_hit_rate": lat["prefix_hit_rate"],
+        "queue_depth_max": lat["queue_depth_max"],
+    }
+
+
+def run_slo(fused: bool = True) -> dict:
+    """The BENCH_SLO.json section: gated production config + ungated sweep."""
+    qparams = _quantized_params(fused)
+
+    # gated configuration: bucketed paged + preemption under page pressure
+    # (n_pages sized so top-priority bursts must preempt mid-flight
+    # lower-priority requests — the lifecycle path the workload exists to
+    # load — while the chat scenario still lands prefix-cache hits)
+    gated_kw = dict(preemption=True, n_pages=14)
+    lat, reqs = _replay_config(qparams, **gated_kw)
+    solo = _solo_outputs(qparams)
+    tokens_match = [r.out for r in reqs] == solo
+    out = {
+        "workload": {"seed": SEED, "n_requests": len(reqs),
+                     "scenarios": ["chat", "summarize", "burst"]},
+        "engine": {"page_size": PAGE_SIZE, "max_len": MAX_LEN,
+                   "batch_slots": 4, **gated_kw},
+        "tokens_match": tokens_match,
+        **lat,
+    }
+    if not tokens_match:
+        bad = [i for i, (r, s) in enumerate(zip(reqs, solo)) if r.out != s]
+        raise RuntimeError(
+            f"loaded serving diverged from the solo oracle at request(s) "
+            f"{bad} — scheduling must never change tokens"
+        )
+
+    # knob sweep (ungated): same workload, one knob moved per config
+    sweep = {}
+    for name, kw in (
+        ("ragged_tb64", dict(ragged=True, token_budget=64,
+                             max_chunk_share=1.0, preemption=True)),
+        ("ragged_tb32", dict(ragged=True, token_budget=32,
+                             max_chunk_share=1.0, preemption=True)),
+        ("ragged_share_0.25", dict(ragged=True, token_budget=64,
+                                   max_chunk_share=0.25, preemption=True)),
+        ("no_preemption", dict(n_pages=14, preemption=False)),
+        ("spec_k2", dict(speculation=True, spec_k=2)),
+    ):
+        sweep[name] = _sweep_row(_replay_config(qparams, **kw)[0])
+    out["sweep"] = sweep
+
+    emit("slo_ttft_p95_ms", lat["ttft_ms"]["p95"],
+         f"p50={lat['ttft_ms']['p50']:.1f} p99={lat['ttft_ms']['p99']:.1f}")
+    emit("slo_tpot_p95_ms", lat["tpot_ms"]["p95"],
+         f"p50={lat['tpot_ms']['p50']:.1f} p99={lat['tpot_ms']['p99']:.1f}")
+    emit("slo_goodput_tok_s", lat["goodput_tok_s"],
+         f"slo_met_rate={lat['slo_met_rate']:.2f}")
+    emit("slo_rates", 0.0,
+         f"preemption={lat['preemption_rate']:.2f} "
+         f"prefix_hit={lat['prefix_hit_rate']:.2f} "
+         f"queue_max={lat['queue_depth_max']}")
+    return out

@@ -438,18 +438,19 @@ def run_spec(fused: bool = True) -> dict:
 
 
 def run(quick: bool = False, fused: bool = True, paged: bool = False,
-        burst: bool = False, spec: bool = False) -> dict:
+        burst: bool = False, spec: bool = False, slo: bool = False) -> dict:
     """``quick=True`` (the CI bench lane) runs only the measured engine
     sweep — the gated metrics; the full run adds the derived roofline grid.
     ``fused`` toggles horizontal projection fusion for the engine sweep;
     ``paged`` adds the paged-vs-dense mixed-prompt workload (the
     BENCH_PAGED.json lane); ``burst`` the ragged long-prompt-admission lane
     (BENCH_BURST.json); ``spec`` the speculative-decoding lane
-    (BENCH_SPEC.json)."""
+    (BENCH_SPEC.json); ``slo`` the trace-driven tail-latency lane
+    (BENCH_SLO.json, benchmarks/bench_slo.py)."""
     if quick:
-        # the paged/burst/spec quick lanes are single-purpose: the b{1,4,8}
-        # engine sweep already ran (and was gated) in the BENCH_PR lane, and
-        # re-gating a duplicate sweep would double the exposure to
+        # the paged/burst/spec/slo quick lanes are single-purpose: the
+        # b{1,4,8} engine sweep already ran (and was gated) in the BENCH_PR
+        # lane, and re-gating a duplicate sweep would double the exposure to
         # machine-noise one-offs
         if paged:
             return {"paged": run_paged(fused=fused), "fused": fused}
@@ -457,6 +458,10 @@ def run(quick: bool = False, fused: bool = True, paged: bool = False,
             return {"burst": run_burst(fused=fused), "fused": fused}
         if spec:
             return {"spec": run_spec(fused=fused), "fused": fused}
+        if slo:
+            from benchmarks.bench_slo import run_slo
+
+            return {"slo": run_slo(fused=fused), "fused": fused}
         return {"engine_measured": run_engine(fused=fused), "fused": fused}
     cfg = get_config("llama3-8b")
     results = {}

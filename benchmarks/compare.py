@@ -35,6 +35,14 @@ oracle token equality, ``paged_decode`` routing, and the single speculative
 trace fail hard; the spec decode rate must reach 1.3x the committed b8
 baseline and the deterministic acceptance rate is a ratchet.
 
+A candidate carrying an ``slo`` section (the ``--slo`` lane, BENCH_SLO.json)
+gets the traffic-harness gate (``check_slo``): solo-oracle token equality
+and metric PRESENCE (TTFT/TPOT/e2e percentiles with non-empty samples,
+goodput under SLO, queue depth, preemption and prefix-hit rates) fail hard,
+as does the deterministic prefix-hit ratchet; the tail-latency ratchets
+(ttft/tpot p95 up, goodput down, vs ``--max-regress``) warn while the
+baseline slo section carries ``"bootstrap": true``.
+
 The per-path launch counts (fused vs unfused kinds) are printed for every
 batch size, so the artifact trail shows where each launch went, not just the
 tokens/s number.
@@ -241,6 +249,84 @@ def check_spec(
     return issues, warns
 
 
+SLO_REQUIRED_KEYS = (
+    "tokens_match", "ttft_ms", "tpot_ms", "e2e_ms", "goodput_tok_s",
+    "slo_met_rate", "queue_depth_mean", "queue_depth_max",
+    "preemption_rate", "prefix_hit_rate",
+)
+
+
+def check_slo(
+    base: dict, cand: dict, max_regress: float = 0.25
+) -> tuple[list[str], list[str]]:
+    """SLO-lane gate (BENCH_SLO.json): correctness hard, latency ratcheted.
+
+    Machine-independent and always hard: the loaded engine's token streams
+    must equal the solo oracle (``tokens_match`` — scheduling, preemption
+    and prefix restores may reshape the timeline, never the tokens), and
+    every metric the lane promises (TTFT/TPOT/e2e percentiles, goodput under
+    SLO, queue depth, preemption and prefix-hit rates) must be PRESENT with
+    a non-empty sample — a refactor that silently stops measuring a tail is
+    a gate failure, not a smaller artifact. The deterministic workload also
+    makes ``prefix_hit_rate`` a hard ratchet against the baseline (a drop
+    means prefix caching regressed, not the machine).
+
+    Machine-dependent and ratcheted: ``ttft_ms.p95`` / ``tpot_ms.p95`` may
+    not rise more than ``max_regress`` above the baseline, and
+    ``goodput_tok_s`` may not fall more than ``max_regress`` below it.
+    While the baseline's slo section carries ``"bootstrap": true`` those
+    three report as warnings only (promotion procedure: DESIGN.md §12)."""
+    sl = cand.get("results", {}).get("throughput", {}).get("slo")
+    if sl is None:
+        return [], []
+    issues, warns = [], []
+    for key in SLO_REQUIRED_KEYS:
+        if key not in sl:
+            issues.append(f"slo: required metric {key!r} missing from candidate")
+    for key in ("ttft_ms", "tpot_ms", "e2e_ms"):
+        p = sl.get(key) or {}
+        if p.get("n", 0) <= 0:
+            issues.append(f"slo: {key} has an empty sample (nothing measured)")
+        elif not all(k in p for k in ("p50", "p95", "p99")):
+            issues.append(f"slo: {key} missing p50/p95/p99 percentiles")
+    if not sl.get("tokens_match", False):
+        issues.append("slo: loaded serving diverged from the solo oracle")
+    t, g = sl.get("ttft_ms") or {}, sl.get("tpot_ms") or {}
+    print(f"\n{'slo lane':<24} ttft_p95={t.get('p95', 0):.1f}ms "
+          f"tpot_p95={g.get('p95', 0):.1f}ms "
+          f"goodput={sl.get('goodput_tok_s', 0):.1f}tok/s "
+          f"slo_met={sl.get('slo_met_rate', 0):.2f} "
+          f"preempt={sl.get('preemption_rate', 0):.2f} "
+          f"prefix_hit={sl.get('prefix_hit_rate', 0):.2f} "
+          f"queue_max={sl.get('queue_depth_max', 0)}")
+    for name, row in sorted((sl.get("sweep") or {}).items()):
+        print(f"  sweep/{name:<20} ttft_p95={row.get('ttft_p95_ms', 0):.1f}ms "
+              f"goodput={row.get('goodput_tok_s', 0):.1f}tok/s "
+              f"preempt={row.get('preemption_rate', 0):.2f}")
+    bsl = base.get("results", {}).get("throughput", {}).get("slo")
+    if bsl is None:
+        return issues, warns  # no baseline section: ratchets stay un-armed
+    bootstrap = bool(bsl.get("bootstrap"))
+    for key, better in (("ttft_ms", "lower"), ("tpot_ms", "lower")):
+        bv = (bsl.get(key) or {}).get("p95", 0.0)
+        cv = (sl.get(key) or {}).get("p95", 0.0)
+        if bv > 0 and cv > bv * (1.0 + max_regress):
+            msg = (f"slo: {key}.p95 {cv:.1f}ms > baseline {bv:.1f} * "
+                   f"(1 + {max_regress:.2f})")
+            (warns if bootstrap else issues).append(msg)
+    bv, cv = bsl.get("goodput_tok_s", 0.0), sl.get("goodput_tok_s", 0.0)
+    if bv > 0 and cv < bv * (1.0 - max_regress):
+        msg = f"slo: goodput {cv:.1f}tok/s < baseline {bv:.1f} * (1 - {max_regress:.2f})"
+        (warns if bootstrap else issues).append(msg)
+    bh, ch = bsl.get("prefix_hit_rate", 0.0), sl.get("prefix_hit_rate", 0.0)
+    if ch < bh:
+        issues.append(
+            f"slo: prefix hit rate {ch:.3f} fell below baseline {bh:.3f} "
+            "(deterministic workload — prefix caching regressed)"
+        )
+    return issues, warns
+
+
 def check_launches(base: dict, cand: dict) -> list[str]:
     """Launch-count ratchet: decode launches per traced step must not grow."""
     errors = []
@@ -282,6 +368,10 @@ def main() -> None:
                     help="candidate is the speculative-decoding lane "
                          "(BENCH_SPEC.json): run just the speculation checks, "
                          "no engine-sweep gate")
+    ap.add_argument("--slo-only", action="store_true",
+                    help="candidate is the SLO traffic lane (BENCH_SLO.json): "
+                         "run just the tail-latency checks, no engine-sweep "
+                         "gate")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -315,6 +405,20 @@ def main() -> None:
                 print(f"  - {msg}", file=sys.stderr)
             raise SystemExit(1)
         print("\nbench gate (spec lane): ok")
+        return
+
+    if args.slo_only:
+        failures, warns = check_slo(base, cand, args.max_regress)
+        if cand.get("results", {}).get("throughput", {}).get("slo") is None:
+            failures.append("slo section missing from candidate")
+        for msg in warns:
+            print(f"WARN (slo lane, not gating): {msg}", file=sys.stderr)
+        if failures:
+            print("\nBENCH GATE FAILED:", file=sys.stderr)
+            for msg in failures:
+                print(f"  - {msg}", file=sys.stderr)
+            raise SystemExit(1)
+        print("\nbench gate (slo lane): ok")
         return
 
     if args.paged_only:
@@ -363,6 +467,8 @@ def main() -> None:
     failures += burst_failures
     spec_failures, spec_warnings = check_spec(base, cand)
     failures += spec_failures
+    slo_failures, slo_warnings = check_slo(base, cand, args.max_regress)
+    failures += slo_failures
 
     for msg in warnings:
         print(f"WARN (bootstrap baseline, not gating): {msg}", file=sys.stderr)
@@ -372,6 +478,8 @@ def main() -> None:
         print(f"WARN (burst lane, not gating): {msg}", file=sys.stderr)
     for msg in spec_warnings:
         print(f"WARN (spec lane, not gating): {msg}", file=sys.stderr)
+    for msg in slo_warnings:
+        print(f"WARN (slo lane, not gating): {msg}", file=sys.stderr)
     if failures:
         print("\nBENCH GATE FAILED:", file=sys.stderr)
         for msg in failures:

@@ -64,6 +64,13 @@ def main() -> None:
              "spec vs plain engines) to the throughput module — the "
              "BENCH_SPEC.json artifact",
     )
+    ap.add_argument(
+        "--slo", action="store_true",
+        help="add the trace-driven SLO lane (seeded production workload "
+             "through the ragged preemptive engine: TTFT/TPOT percentiles, "
+             "goodput under SLO, solo-oracle token equality, knob sweep) to "
+             "the throughput module — the BENCH_SLO.json artifact",
+    )
     ap.add_argument("--out", default=None, help="write combined results JSON here")
     args = ap.parse_args()
 
@@ -95,7 +102,7 @@ def main() -> None:
             if name == "throughput":
                 results[name] = mods[name].run(quick=args.quick, fused=args.fused,
                                                paged=args.paged, burst=args.burst,
-                                               spec=args.spec)
+                                               spec=args.spec, slo=args.slo)
             elif name in QUICK_MODULES:
                 results[name] = mods[name].run(quick=args.quick)
             else:

@@ -208,6 +208,16 @@ class Request:
     ``submit()`` when not provided; ``priority`` orders preemption victims
     (lower preempts first); ``deadline_steps`` / ``deadline_s`` bound the
     request's lifetime in engine steps / wall-clock seconds from submission.
+
+    **Stream surface** (docs/serving.md "SLO metrics & traffic harness"):
+    ``on_token`` is an optional per-token callback ``(request, token_id)``
+    fired by the engine exactly once per emitted token, at the step that
+    produced it (preemption + resume never re-fires already-emitted tokens).
+    A raising callback is detached with a warning after its first exception —
+    a sloppy consumer must not wedge the batch. The engine also stamps
+    ``t_submit`` / ``t_first_token`` / ``t_done`` (``time.monotonic``) and
+    appends one entry to ``token_times`` per emitted token, so TTFT and
+    per-token latency are MEASURED, not inferred (``launch/metrics.py``).
     Fields prefixed ``_`` are engine-private."""
 
     prompt: Any  # (S,) int32
@@ -216,6 +226,12 @@ class Request:
     frontend: dict = dataclasses.field(default_factory=dict)  # vlm/encdec extras
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # stream + latency observability (docs/serving.md)
+    on_token: Optional[Callable] = dataclasses.field(default=None, repr=False)
+    t_submit: Optional[float] = dataclasses.field(default=None, repr=False)
+    t_first_token: Optional[float] = dataclasses.field(default=None, repr=False)
+    t_done: Optional[float] = dataclasses.field(default=None, repr=False)
+    token_times: list = dataclasses.field(default_factory=list, repr=False)
     # set at eviction when the request hit cache capacity before filling its
     # max_new quota (prompt_len + max_new > engine.max_len)
     truncated: bool = False
@@ -770,6 +786,11 @@ class ContinuousBatchingEngine:
                 )
             else:
                 self.speculation = True
+        # latency observability (docs/serving.md "SLO metrics"): every request
+        # ever submitted (for engine.latency()) and a per-step queue-depth
+        # sample — both host bookkeeping, no device traffic
+        self._requests: list[Request] = []
+        self._queue_depths: list[int] = []
         self.stats = {
             "prefill_tokens": 0, "prefill_s": 0.0,
             "decode_tokens": 0, "decode_steps": 0, "decode_s": 0.0,
@@ -838,6 +859,10 @@ class ContinuousBatchingEngine:
         if req.request_id is None:
             req.request_id = f"req-{self._next_rid}"
             self._next_rid += 1
+        if req.t_submit is None:
+            req.t_submit = time.monotonic()
+        if all(req is not r for r in self._requests):
+            self._requests.append(req)
         req._prompt_host = prompt.astype(np.int32)
         if req.status == RequestState.NEW:
             self._set_status(req, RequestState.QUEUED)
@@ -907,6 +932,8 @@ class ContinuousBatchingEngine:
         matching stats counter."""
         self._set_status(req, status)
         req.done = True
+        if req.t_done is None:
+            req.t_done = time.monotonic()
         if code is not None:
             req.error = code
             req.error_detail = detail
@@ -1235,6 +1262,30 @@ class ContinuousBatchingEngine:
         p /= p.sum()
         return int(req._rng.choice(p.shape[0], p=p))
 
+    def _emit_token(self, req: Request, tok: int) -> None:
+        """The ONE token-emission path every mode (bucketed, ragged,
+        speculative) goes through: append to ``req.out``, stamp the
+        wall-clock emission time (TTFT on the first), and fire the request's
+        ``on_token`` stream callback exactly once for this token. A raising
+        callback is detached with a warning — the consumer loses its stream,
+        the batch loses nothing."""
+        now = time.monotonic()
+        req.out.append(tok)
+        req.token_times.append(now)
+        if req.t_first_token is None:
+            req.t_first_token = now
+        if req.on_token is not None:
+            try:
+                req.on_token(req, tok)
+            except Exception as e:  # noqa: BLE001 — hostile-consumer guard
+                req.on_token = None
+                warnings.warn(
+                    f"on_token callback for request {req.request_id} raised "
+                    f"{type(e).__name__}: {e} — callback detached, request "
+                    "continues without streaming",
+                    stacklevel=2,
+                )
+
     # -- decode -------------------------------------------------------------
 
     def _evict(self, i: int, req: Request, truncated: bool) -> None:
@@ -1281,7 +1332,7 @@ class ContinuousBatchingEngine:
         for i in active:
             req = self.slots[i]
             nxt = self._sample(req)
-            req.out.append(nxt)
+            self._emit_token(req, nxt)
             if len(req.out) >= req.max_new:
                 self._evict(i, req, truncated=False)
             elif int(pos[i]) >= self.max_len:
@@ -1315,7 +1366,7 @@ class ContinuousBatchingEngine:
                 while (n_acc < k - 1 and n_acc < quota_room and n_acc < cap_rows
                        and int(drafts[i][n_acc])
                        == int(np.argmax(last[i, n_acc, : self.cfg.vocab]))):
-                    req.out.append(int(drafts[i][n_acc]))
+                    self._emit_token(req, int(drafts[i][n_acc]))
                     n_acc += 1
                 self.stats["spec_drafted"] += k - 1
                 self.stats["spec_accepted"] += n_acc
@@ -1348,7 +1399,7 @@ class ContinuousBatchingEngine:
                 # mirror the non-speculative order exactly: the token past
                 # the last cache row is still sampled and kept, THEN the
                 # slot exits (truncated unless that token filled the quota)
-                req.out.append(self._sample(req))
+                self._emit_token(req, self._sample(req))
                 self._evict(i, req, truncated=len(req.out) < req.max_new)
 
     def _step_ragged(self) -> int:
@@ -1361,6 +1412,7 @@ class ContinuousBatchingEngine:
         self._steps += 1
         self._expire_deadlines()
         self._admit()
+        self._queue_depths.append(len(self.queue))
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return 0
@@ -1377,7 +1429,7 @@ class ContinuousBatchingEngine:
             if req._last_logits is None:
                 continue  # still prefilling — chunks scheduled below
             nxt = self._sample(req)
-            req.out.append(nxt)
+            self._emit_token(req, nxt)
             # quota filled (or no cache row left for the new token): evict
             # BEFORE the launch — its next logits would be discarded anyway
             if len(req.out) >= req.max_new:
@@ -1482,6 +1534,7 @@ class ContinuousBatchingEngine:
         self._steps += 1
         self._expire_deadlines()
         self._admit()
+        self._queue_depths.append(len(self.queue))
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return 0
@@ -1496,7 +1549,7 @@ class ContinuousBatchingEngine:
         for i in active:
             req = self.slots[i]
             nxt = self._sample(req)
-            req.out.append(nxt)
+            self._emit_token(req, nxt)
             tok[i, 0] = nxt
             # a request whose quota is now filled (or whose token has no cache
             # row left) is evicted BEFORE the decode — its final logits would
@@ -1573,14 +1626,60 @@ class ContinuousBatchingEngine:
         self.run_until_done(max_steps)
         return requests
 
+    def stream(self, request: Request, max_steps: int = 100_000):
+        """Submit ``request`` and yield its tokens as the engine emits them.
+
+        A synchronous streaming iterator (docs/serving.md "Stream API"):
+        each ``next()`` drives ``step()`` until at least one new token lands
+        on ``request.out`` (so the time-to-first-yield IS the TTFT, modulo
+        the consumer's own latency), then yields the tokens in emission
+        order. Other queued/active requests keep being served by the same
+        steps — streaming one request does not stall the batch. Returns
+        when the request reaches a terminal state; exhausting ``max_steps``
+        marks every unfinished request ``TIMED_OUT`` through the common
+        exit path and raises :class:`EngineStalledError`, exactly like
+        :meth:`run_until_done`. For callback-style consumption (many
+        concurrent streams) set ``Request.on_token`` and drive the engine
+        yourself."""
+        self.submit(request)
+        emitted = 0
+        for _ in range(max_steps):
+            self.step()
+            while emitted < len(request.out):
+                yield request.out[emitted]
+                emitted += 1
+            if request.done:
+                return
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.slots[i] = None
+            self._release_slot(i)
+            self._finish(req, RequestState.TIMED_OUT, "engine_stalled",
+                         f"stream exhausted {max_steps} steps")
+        while self.queue:
+            req = self.queue.popleft()
+            self._finish(req, RequestState.TIMED_OUT, "engine_stalled",
+                         f"stream exhausted {max_steps} steps while queued")
+        raise EngineStalledError(
+            f"engine stalled: stream exhausted {max_steps} steps with request "
+            f"{request.request_id} unfinished; unfinished requests are marked "
+            "TIMED_OUT and their pages have been released"
+        )
+
     def reset_stats(self) -> None:
         """Zero the timing counters (e.g. after a warm-up pass).
 
-        The dispatch-routing baseline is NOT reset: routing decisions happen
+        The latency surface (request roster + queue-depth samples feeding
+        ``latency()``) is cleared too — a warm-up request's compile-inflated
+        TTFT would otherwise sit in the percentiles forever. The
+        dispatch-routing baseline is NOT reset: routing decisions happen
         at trace time, so a warm executable would otherwise report an empty
         route table. The prefill-trace inventory (compile_stats) persists for
         the same reason."""
         self.stats = {k: type(v)() for k, v in self.stats.items()}
+        self._requests.clear()
+        self._queue_depths.clear()
         if self.allocator is not None:
             self.allocator.peak_used = self.allocator.n_used
 
@@ -1714,6 +1813,21 @@ class ContinuousBatchingEngine:
             "routing": self.routing(),
             **st,
         }
+
+    def latency(self, slo=None) -> dict:
+        """SLO-facing latency summary over every request this engine has seen
+        (docs/serving.md "SLO metrics & traffic harness"): TTFT / per-token
+        / end-to-end percentiles, goodput under ``slo`` (an
+        :class:`repro.launch.metrics.SLO` or None for raw throughput),
+        queue-depth profile, preemption and prefix-hit rates. Timing comes
+        from the wall-clock stamps ``submit()``/``_emit_token``/``_finish``
+        record on each Request; the counters ride on ``self.stats``. Sits
+        beside :meth:`routing` and :meth:`throughput` as the third
+        introspection surface — this one is about tails, not means."""
+        from repro.launch.metrics import summarize
+
+        return summarize(self._requests, slo=slo,
+                         queue_depths=self._queue_depths, stats=self.stats)
 
 
 # Backwards-compatible name: the engine replaced the original demo Server.

@@ -1,0 +1,262 @@
+"""Traffic-harness contract: workload determinism, the stream API, and the
+SLO metrics surface (docs/serving.md "SLO metrics & traffic harness").
+
+The load harness is only usable as a CI gate if it is *reproducible*: the
+same seed must yield the same arrival trace, the same request mix, and —
+driven through the engine — the same token streams, in bucketed and ragged
+mode alike. The stream tests pin the emission contract the harness measures
+through: ``on_token`` fires exactly once per emitted token (preemption and
+resume never re-fire), and the ``stream()`` iterator yields the same tokens
+the request accumulates.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizers import lifecycle_checks, page_invariant_checks
+from repro.configs import ModelConfig
+from repro.launch.metrics import SLO, meets_slo, percentiles, summarize
+from repro.launch.serve import ContinuousBatchingEngine, Request, RequestState
+from repro.launch.workload import (
+    Scenario,
+    default_scenarios,
+    make_workload,
+    poisson_arrivals,
+    replay,
+)
+from repro.models import dense
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig(
+    name="tiny-wl", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, remat=False,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return dense.init_params(CFG, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# workload determinism (no engine)
+# ---------------------------------------------------------------------------
+
+
+def test_same_seed_same_workload():
+    a = make_workload(11, n_requests=8)
+    b = make_workload(11, n_requests=8)
+    assert [it.at for it in a.items] == [it.at for it in b.items]
+    assert [it.scenario for it in a.items] == [it.scenario for it in b.items]
+    for x, y in zip(a.items, b.items):
+        assert np.array_equal(x.request.prompt, y.request.prompt)
+        assert x.request.max_new == y.request.max_new
+        assert x.request.priority == y.request.priority
+        assert x.request.deadline_steps == y.request.deadline_steps
+
+
+def test_different_seed_different_workload():
+    a = make_workload(11, n_requests=8)
+    b = make_workload(12, n_requests=8)
+    assert any(
+        not np.array_equal(x.request.prompt, y.request.prompt)
+        for x, y in zip(a.items, b.items)
+    )
+
+
+def test_poisson_arrivals_sorted_and_seeded():
+    rng = np.random.default_rng(3)
+    at = poisson_arrivals(rng, 20, 4.0)
+    assert at[0] == 0 and at == sorted(at) and len(at) == 20
+    assert poisson_arrivals(np.random.default_rng(3), 20, 4.0) == at
+    assert poisson_arrivals(rng, 0, 4.0) == []
+
+
+def test_trace_replay_arrivals_verbatim():
+    trace = [0, 0, 5, 9, 40]
+    wl = make_workload(5, n_requests=10, trace=trace,
+                       scenarios=[Scenario("s", 1.0, (4, 6), (2, 3))])
+    assert [it.at for it in wl.items] == trace  # trace caps the count too
+
+
+def test_shared_prefix_shared_within_scenario():
+    wl = make_workload(2, n_requests=12)
+    chat = [it.request for it in wl.items if it.scenario == "chat"]
+    pre = default_scenarios()[0].shared_prefix_len
+    assert len(chat) >= 2, "chat is half the mix; 12 draws must hit it"
+    first = np.asarray(chat[0].prompt[:pre])
+    assert all(np.array_equal(np.asarray(r.prompt[:pre]), first) for r in chat)
+
+
+def test_workload_exercises_lifecycle_knobs():
+    wl = make_workload(4, n_requests=16)
+    assert {it.request.priority for it in wl.items} == {0, 1, 2}
+    assert any(it.request.deadline_steps is not None for it in wl.items)
+    by_at = {}
+    for it in wl.items:
+        by_at.setdefault(it.at, []).append(it.scenario)
+    assert any(v.count("burst") >= 3 for v in by_at.values()), \
+        "burst scenario must cluster arrivals on one step"
+
+
+# ---------------------------------------------------------------------------
+# replay determinism through the engine
+# ---------------------------------------------------------------------------
+
+
+def _replayed(params, *, seed, ragged):
+    eng = ContinuousBatchingEngine(
+        CFG, params, batch_slots=3, max_len=96, paged=True, page_size=8,
+        preemption=True, ragged=ragged, token_budget=16,
+    )
+    wl = make_workload(seed, n_requests=5)
+    with lifecycle_checks(eng), page_invariant_checks(eng):
+        reqs = replay(eng, wl)
+    assert all(r.done for r in reqs)
+    return eng, reqs
+
+
+@pytest.mark.parametrize("ragged", [False, True], ids=["bucketed", "ragged"])
+def test_replay_same_seed_same_token_streams(params, ragged):
+    _, a = _replayed(params, seed=21, ragged=ragged)
+    _, b = _replayed(params, seed=21, ragged=ragged)
+    assert [r.out for r in a] == [r.out for r in b]
+    assert [r.status for r in a] == [r.status for r in b]
+
+
+def test_replay_records_latency_surface(params):
+    eng, reqs = _replayed(params, seed=21, ragged=True)
+    lat = eng.latency(slo=SLO(ttft_s=120.0, tpot_s=120.0))
+    assert lat["n_requests"] == len(reqs)
+    assert lat["n_done"] == sum(r.status == RequestState.DONE for r in reqs)
+    for key in ("ttft_ms", "tpot_ms", "e2e_ms"):
+        p = lat[key]
+        assert p["n"] > 0 and 0 <= p["p50"] <= p["p95"] <= p["p99"] <= p["max"]
+    assert lat["queue_depth_max"] >= lat["queue_depth_mean"] >= 0.0
+    assert 0.0 <= lat["slo_met_rate"] <= 1.0
+    assert lat["prefix_hit_rate"] > 0.0, "chat scenario shares a paged prefix"
+    # every request produced a first token, so TTFT is measured for all
+    assert lat["ttft_ms"]["n"] == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# stream API: exactly-once callbacks, iterator contract
+# ---------------------------------------------------------------------------
+
+
+def test_stream_iterator_yields_emitted_tokens(params):
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64)
+    req = Request(jnp.arange(1, 9, dtype=jnp.int32), max_new=6)
+    got = []
+    for tok in eng.stream(req):
+        got.append(tok)
+        assert req.t_first_token is not None, "TTFT stamped by first yield"
+    assert got == req.out and len(got) == 6 and req.done
+    assert len(req.token_times) == 6
+
+
+def test_stream_callbacks_exactly_once_under_chaos(params):
+    """A preemption-heavy randomized schedule (tiny page pool, priority mix,
+    one mid-flight cancel) where every request streams via ``on_token``:
+    each callback fires exactly once per emitted token, in emission order —
+    preempt + resume must not replay the already-emitted half."""
+    # 3-page pool, ~2 pages per request: admitting a higher-priority arrival
+    # REQUIRES preempting the low-priority resident (test_chaos recipe)
+    eng = ContinuousBatchingEngine(
+        CFG, params, batch_slots=2, max_len=64, paged=True, page_size=16,
+        n_pages=3, preemption=True, ragged=True, token_budget=16,
+    )
+    rng = np.random.default_rng(9)
+    seen: dict[str, list[int]] = {}
+
+    def on_token(req, tok):
+        seen.setdefault(req.request_id, []).append(tok)
+
+    reqs = [
+        Request(
+            rng.integers(1, 200, size=int(rng.integers(16, 24)), dtype=np.int32),
+            max_new=int(rng.integers(3, 8)),
+            priority=i % 3,  # arrival order ramps priority: preempt pressure
+            request_id=f"r{i}",
+            on_token=on_token,
+        )
+        for i in range(8)
+    ]
+    cancelled = reqs[5]
+    with lifecycle_checks(eng), page_invariant_checks(eng):
+        eng.submit(reqs[0])
+        for _ in range(4):  # let the low-priority resident make progress
+            eng.step()
+        for r in reqs[1:]:
+            eng.submit(r)
+            if rng.random() < 0.5:
+                eng.step()
+        eng.cancel(cancelled)
+        eng.run_until_done()
+    assert any(r._preemptions > 0 for r in reqs), "schedule must preempt"
+    for r in reqs:
+        assert seen.get(r.request_id, []) == r.out, \
+            f"{r.request_id}: callback trace diverged from emitted tokens"
+        assert len(r.token_times) == len(r.out)
+
+
+def test_raising_callback_detached_not_fatal(params):
+    eng = ContinuousBatchingEngine(CFG, params, batch_slots=2, max_len=64)
+    calls = []
+
+    def bad(req, tok):
+        calls.append(tok)
+        raise RuntimeError("hostile consumer")
+
+    req = Request(jnp.arange(1, 7, dtype=jnp.int32), max_new=5, on_token=bad)
+    with pytest.warns(UserWarning, match="callback detached"):
+        eng.serve([req])
+    assert req.done and req.status == RequestState.DONE
+    assert len(req.out) == 5 and calls == req.out[:1]
+    assert req.on_token is None
+
+
+# ---------------------------------------------------------------------------
+# metrics unit surface (no engine)
+# ---------------------------------------------------------------------------
+
+
+def test_percentiles_empty_is_zero_shaped():
+    p = percentiles([])
+    assert p == {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0, "max": 0.0, "n": 0}
+
+
+def _stamped(status=RequestState.DONE, ttft=0.1, gaps=(0.01, 0.01)):
+    req = Request(np.arange(4, dtype=np.int32), status=status, done=True)
+    req.t_submit = 100.0
+    req.t_first_token = 100.0 + ttft
+    req.token_times = list(100.0 + ttft + np.cumsum((0.0,) + tuple(gaps)))
+    req.out = [1] * len(req.token_times)
+    req.t_done = req.token_times[-1]
+    return req
+
+
+def test_meets_slo_bounds():
+    slo = SLO(ttft_s=0.5, tpot_s=0.05)
+    assert meets_slo(_stamped(), slo)
+    assert not meets_slo(_stamped(ttft=0.9), slo), "TTFT over budget"
+    assert not meets_slo(_stamped(gaps=(0.2, 0.2)), slo), "TPOT over budget"
+    assert not meets_slo(_stamped(status=RequestState.FAILED), slo), \
+        "a failed request never meets the SLO"
+
+
+def test_summarize_goodput_counts_only_slo_met_tokens():
+    fast, slow = _stamped(), _stamped(ttft=0.9)
+    out = summarize([fast, slow], slo=SLO(ttft_s=0.5, tpot_s=0.05),
+                    queue_depths=[0, 2, 1], stats={"requests_preempted": 1})
+    assert out["n_done"] == 2 and out["n_slo_met"] == 1
+    assert out["slo_met_rate"] == 0.5 and out["preemption_rate"] == 0.5
+    span = max(fast.t_done, slow.t_done) - 100.0
+    assert out["goodput_tok_s"] == pytest.approx(len(fast.out) / span)
+    assert out["queue_depth_mean"] == 1.0 and out["queue_depth_max"] == 2
+    # slo=None keeps the shape but degenerates to completion throughput
+    raw = summarize([fast, slow])
+    assert raw["slo"] is None and raw["n_slo_met"] == 2
